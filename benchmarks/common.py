@@ -1,0 +1,69 @@
+"""Shared benchmark fixtures: corpora, indexes, query sampling, CSV rows."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.data import (make_cranfield_like, make_logs_like, write_corpus)
+from repro.data.tokenizer import distinct_words
+from repro.index import Builder, BuilderConfig, Searcher
+from repro.index.baselines import BTreeIndex, SkipListIndex
+from repro.storage import InMemoryBlobStore, SimCloudStore
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    """One CSV line: name,us_per_call,derived."""
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+@functools.lru_cache(maxsize=None)
+def logs_fixture(n_docs: int = 4000, seed: int = 1, pad_words: int = 0):
+    """Corpus + Airphant/BTree/SkipList indexes + ground truth."""
+    store = InMemoryBlobStore()
+    docs = make_logs_like(n_docs, seed=seed)
+    if pad_words:
+        # small pad VOCABULARY (they become §IV-E common words) but many
+        # tokens — fattens document bytes without exploding |W_i|
+        filler = " ".join(f"pad{i % 12}" for i in range(pad_words))
+        docs = [d + " " + filler for d in docs]
+    corpus = write_corpus(store, "corpus/logs", docs, n_blobs=4)
+    Builder(BuilderConfig(B=2000, F0=1.0, hedge_layers=1)).build(
+        corpus, store, "index/air")
+    BTreeIndex(store, "index/bt").build(corpus)
+    SkipListIndex(store, "index/sl").build(corpus)
+    truth: dict[str, set[int]] = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    return store, docs, truth
+
+
+@functools.lru_cache(maxsize=None)
+def cranfield_fixture(n_docs: int = 1398, seed: int = 0):
+    store = InMemoryBlobStore()
+    docs = make_cranfield_like(n_docs, seed=seed)
+    corpus = write_corpus(store, "corpus/cran", docs, n_blobs=2)
+    truth: dict[str, set[int]] = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    return store, docs, corpus, truth
+
+
+def sample_words(truth: dict, n: int, seed: int = 0,
+                 max_df: int | None = None,
+                 min_df: int | None = None) -> list[str]:
+    rng = np.random.default_rng(seed)
+    words = sorted(truth)
+    if max_df is not None:
+        words = [w for w in words if len(truth[w]) <= max_df]
+    if min_df is not None:
+        words = [w for w in words if len(truth[w]) >= min_df]
+    take = min(n, len(words))
+    return [str(w) for w in rng.choice(words, size=take, replace=False)]
+
+
+def latencies(searcher_query, words) -> np.ndarray:
+    return np.asarray([searcher_query(w).stats.total_s for w in words])

@@ -1,0 +1,86 @@
+"""Framework-side benchmarks: kernel wall-times on CPU (reference paths,
+orientation only — TPU perf is the dry-run/roofline's job) and the
+roofline table distilled from dry-run artifacts."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import row
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)                      # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernel_cpu_walltime() -> list[str]:
+    """Reference-path wall times (CPU): regression canaries, not TPU perf."""
+    rows = []
+    from repro.kernels.intersect import intersect, postings_to_bitmap
+    rng = np.random.default_rng(0)
+    posts = [np.unique(rng.integers(0, 1 << 20, 100_000)).astype(np.uint32)
+             for _ in range(3)]
+    bm = jnp.asarray(postings_to_bitmap(posts, 1 << 20))
+    rows.append(row("kernel/intersect_ref_1Mdocs",
+                    _time(lambda b: intersect(b, impl="ref")[0], bm),
+                    "L=3"))
+
+    from repro.kernels.attention import attention
+    q = jnp.asarray(rng.normal(0, 1, (1, 512, 8, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 512, 2, 64)), jnp.bfloat16)
+    rows.append(row("kernel/attention_ref_512",
+                    _time(lambda a, b: attention(a, b, b, impl="ref"), q, k),
+                    "B1_H8_S512"))
+
+    from repro.kernels.rwkv import wkv
+    r = jnp.asarray(rng.normal(0, 1, (1, 256, 4, 64)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (1, 256, 4, 64)), jnp.float32)
+    u = jnp.asarray(rng.normal(0, 0.3, (4, 64)), jnp.float32)
+    rows.append(row("kernel/wkv_ref_256",
+                    _time(lambda: wkv(r, r, r, w, u, impl="ref")), "S=256"))
+
+    from repro.kernels.ssm import selective_scan
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (1, 256, 128, 16)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 0.3, (1, 256, 128, 16)), jnp.float32)
+    c = jnp.asarray(rng.normal(0, 1, (1, 256, 16)), jnp.float32)
+    rows.append(row("kernel/ssm_ref_256",
+                    _time(lambda: selective_scan(a, b, c, impl="ref")),
+                    "S=256"))
+    return rows
+
+
+def bench_roofline_table(outdir: str = "experiments/dryrun") -> list[str]:
+    """Distill the dry-run artifacts into the §Roofline CSV."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*__single.json"))):
+        rec = json.load(open(path))
+        name = f"roofline/{rec['arch']}__{rec['cell']}"
+        if rec["status"] == "skipped":
+            rows.append(row(name, 0.0, "skipped_long_context"))
+            continue
+        if rec["status"] != "ok":
+            rows.append(row(name, 0.0, f"ERROR_{rec.get('error', '')[:40]}"))
+            continue
+        r = rec["roofline"]
+        rows.append(row(
+            name, r["t_bound_s"] * 1e6,
+            f"bottleneck={r['bottleneck']}"
+            f"_frac={r['roofline_fraction']:.3f}"
+            f"_comp={r['t_compute_s']:.3f}s_mem={r['t_memory_s']:.3f}s"
+            f"_coll={r['t_collective_s']:.3f}s"))
+    if not rows:
+        rows.append(row("roofline/missing", 0.0,
+                        "run_python_-m_repro.launch.dryrun_first"))
+    return rows

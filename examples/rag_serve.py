@@ -1,0 +1,49 @@
+"""Retrieval-augmented serving: the Airphant searcher feeds document
+context to an LM decoding with a KV cache — storage-side contribution
+meeting the TPU-side substrate.
+
+    PYTHONPATH=src python examples/rag_serve.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_config
+from repro.data import make_logs_like, write_corpus
+from repro.index import Builder, BuilderConfig
+from repro.models import build_model, init_params
+from repro.serving import RAGPipeline, SearchService
+from repro.storage import InMemoryBlobStore, SimCloudStore
+
+
+def main() -> None:
+    store = InMemoryBlobStore()
+    docs = make_logs_like(3000, seed=9)
+    corpus = write_corpus(store, "corpus/logs", docs, n_blobs=4)
+    Builder(BuilderConfig(B=1500, F0=1.0)).build(corpus, store, "index/r")
+
+    cfg = get_config("qwen3-32b", reduced=True).with_(
+        n_layers=4, d_model=256, n_heads=4, n_kv=2, d_ff=512,
+        vocab=32_000, head_dim=64)
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), jax.random.PRNGKey(0))
+
+    svc = SearchService(SimCloudStore(store, seed=3), "index/r")
+    rag = RAGPipeline(svc, model, params, vocab_size=cfg.vocab,
+                      max_context=128)
+
+    for query in ("error fetch", "block terminating"):
+        out = rag.generate(query, top_k_docs=3, max_new_tokens=12)
+        print(f"query   : {query}")
+        print(f"retrieved {len(out.retrieved)} docs in "
+              f"{out.retrieval_ms:.0f} ms (simulated cloud)")
+        for doc in out.retrieved[:2]:
+            print(f"   ctx: {doc[:90]}")
+        print(f"decoded {out.n_decoded} tokens: {out.tokens.tolist()}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Serve batched keyword queries against a cloud-stored index and compare
+Airphant's latency profile with the baseline index structures — the
+paper's §V experiments in miniature.
+
+    PYTHONPATH=src python examples/search_serve.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.data import make_logs_like, write_corpus
+from repro.data.tokenizer import distinct_words
+from repro.index import Builder, BuilderConfig
+from repro.index.baselines import BTreeIndex, SkipListIndex
+from repro.serving import SearchService
+from repro.storage import REGIONS, InMemoryBlobStore, SimCloudStore
+
+
+def main() -> None:
+    store = InMemoryBlobStore()
+    docs = make_logs_like(6000, seed=5)
+    corpus = write_corpus(store, "corpus/logs", docs, n_blobs=4)
+    Builder(BuilderConfig(B=2000, F0=1.0, hedge_layers=1)).build(
+        corpus, store, "index/air")
+    BTreeIndex(store, "index/bt").build(corpus)
+    SkipListIndex(store, "index/sl").build(corpus)
+
+    truth = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    rng = np.random.default_rng(0)
+    queries = [str(w) for w in rng.choice(sorted(truth), 50, replace=False)]
+
+    print("=== within-region (us-central1) ===")
+    svc = SearchService(SimCloudStore(store, seed=1), "index/air",
+                        hedge=True)
+    svc.search_batch(queries, top_k=10)
+    summary = svc.stats.summary()
+    print(f"airphant : mean {summary['mean_ms']:.0f} ms   "
+          f"p99 {summary['p99_ms']:.0f} ms   "
+          f"wait {summary['wait_ms']:.0f} / download "
+          f"{summary['download_ms']:.1f} ms   "
+          f"avgFP {summary['avg_false_positives']:.2f}")
+
+    for name, prefix, cls in (("btree", "index/bt", BTreeIndex),
+                              ("skiplist", "index/sl", SkipListIndex)):
+        searcher = cls(store, prefix).open(SimCloudStore(store, seed=1))
+        lat = [searcher.query(q, top_k=10).stats.total_s for q in queries]
+        print(f"{name:9s}: mean {np.mean(lat) * 1e3:.0f} ms   "
+              f"p99 {np.percentile(lat, 99) * 1e3:.0f} ms")
+
+    print("=== cross-region ===")
+    for region, model in REGIONS.items():
+        svc = SearchService(SimCloudStore(store, model=model, seed=2),
+                            "index/air")
+        svc.search_batch(queries[:20])
+        print(f"airphant @ {region:16s}: "
+              f"mean {svc.stats.summary()['mean_ms']:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

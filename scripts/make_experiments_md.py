@@ -1,0 +1,103 @@
+"""Assemble EXPERIMENTS.md from dry-run artifacts + the perf log.
+
+    PYTHONPATH=src python scripts/make_experiments_md.py
+"""
+
+import io
+import os
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCHS, cells_for  # noqa: E402
+from repro.launch import report  # noqa: E402
+
+HEADER = """\
+# EXPERIMENTS — Airphant-JAX
+
+Paper: "AIRPHANT: Cloud-oriented Document Indexing" (Chockchowwat, Sood,
+Park — UIUC, 2021). Container: CPU-only; TPU v5e is the modelled target
+(197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI). Meshes: single-pod
+16×16 (256 chips), multi-pod 2×16×16 (512 chips), built on 512 placeholder
+host devices. Cost source: trip-count-aware HLO analysis of the compiled
+SPMD program (`repro.launch.hlo_cost`) — XLA's `cost_analysis()` counts
+while-loop bodies once and is under-counted for scanned models; ours
+multiplies loop bodies by `known_trip_count` and models collective wire
+bytes with ring formulas (validated against analytic counts in
+`tests/test_hlo_cost.py`). Collective reductions are counted at their
+unpromoted width (XLA:CPU promotes bf16 sums to f32; TPU does not).
+
+Two variants per cell:
+* **baseline** — the paper-faithful-naive first implementation
+  (FSDP×Megatron-TP sharding, global-capacity MoE dispatch, full-T causal
+  attention, fp32 gradient flow, bf16 KV cache);
+* **opt** — the §Perf hillclimb configuration (grouped MoE dispatch,
+  pure-FSDP dense training, triangular causal attention, bf16 gradient
+  flow, full-sequence CE, resident-TP decode weights, int8 KV cache).
+
+Reproduce: `PYTHONPATH=src python -m repro.launch.dryrun --all`
+(+ `--variant opt`), then `PYTHONPATH=src python scripts/make_experiments_md.py`.
+
+## Paper-validation summary (benchmarks/run.py against the paper's claims)
+
+| paper claim | our measurement (simulated cloud) | verdict |
+|---|---|---|
+| Fig. 2 affine latency: flat ≲2 MB, then linear | 1 KiB→2 MiB: 1.00→1.70×; 32 MiB: 12.2× | ✓ |
+| Fig. 5: FP/query drops ~exponentially in L, matches F(L) | L=1..6 observed 38.7→0.07 vs F(L) 46.8→0.12 | ✓ |
+| Fig. 6: Airphant fastest end-to-end | 1.15× vs HashTable, 2.04× vs B-tree/skip list (mean); larger at p99 | ✓ (ratios are corpus-scale-dependent; paper's 379× HashTable gap needs 1e8-doc corpora) |
+| Fig. 7: milder cross-region slowdown | 7.00× vs 7.12× (us→asia), direction reproduced; gap grows with payload | ✓ |
+| Fig. 8: baselines wait-heavy vs download-heavy; Airphant minimizes both | B-tree wait 132 ms; HashTable download-heavy (5× Airphant's download); Airphant lowest wait | ✓ |
+| Fig. 9 / §V-C: decoupled wins at scale, lim = 3.29× | asymptote = 3.29× exactly (same constants) | ✓ exact |
+| Fig. 10: optimizer picks small L*; FP ≈ 0 by L=4 | optimizer picks L*=2 on the log corpus (paper: L*=2 on HDFS); FP→0 at L≥4 | ✓ |
+| Table II σ_X | Cranfield-shaped corpus σ_X = 0.51 (paper: 0.51) | ✓ exact |
+| Fig. 14: lookup 2.79× faster than B-tree | 3.40× mean, 2.18× p99 | ✓ |
+| §IV-D top-K: ~23 samples for top-10 | sample_size(·,10,1,1e-6) = 23 | ✓ exact |
+| §IV-G hedging cuts tails | p95 −40%+ at 20% straggler rate | ✓ |
+
+Full CSV: `bench_output.txt`.
+
+"""
+
+PERF_REF = """
+## Perf — hillclimb log
+
+See `experiments/PERF_LOG.md` for the full hypothesis → change → measure →
+validate iteration log (3 hillclimbed cells + refuted hypotheses).
+Headline, single-pod t_bound:
+
+"""
+
+
+def main() -> None:
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        recs = report.load("experiments/dryrun")
+        print(HEADER)
+        print("## Dry-run (single-pod 16×16 = 256 chips, baseline)\n")
+        print(report.dryrun_table(
+            [r for r in recs if r["mesh"] == "single"]))
+        print("\n## Dry-run (multi-pod 2×16×16 = 512 chips, baseline)\n")
+        print(report.dryrun_table(
+            [r for r in recs if r["mesh"] == "multi"]))
+        print("\n## Roofline (single-pod, baseline)\n")
+        print(report.roofline_table(recs, "baseline"))
+        print("\n## Roofline (single-pod, optimized)\n")
+        print(report.roofline_table(recs, "opt"))
+        print("\n## Roofline (multi-pod, baseline)\n")
+        print(report.roofline_table(recs, "baseline", mesh="multi"))
+        print("\n## Roofline (multi-pod, optimized)\n")
+        print(report.roofline_table(recs, "opt", mesh="multi"))
+        print(PERF_REF)
+        cells = [(a, c) for a in ARCHS for c in cells_for(a)]
+        print(report.compare_table(recs, cells))
+        print()
+        with open("experiments/PERF_LOG.md") as f:
+            print(f.read())
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(buf.getvalue())
+    print("wrote EXPERIMENTS.md", len(buf.getvalue()), "bytes")
+
+
+if __name__ == "__main__":
+    main()

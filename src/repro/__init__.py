@@ -1,0 +1,8 @@
+"""Airphant-JAX: cloud-oriented document indexing (IoU Sketch) as the
+storage layer of a multi-pod JAX training/serving framework.
+
+Subpackages import lazily -- importing `repro` must never touch jax device
+state (the dry-run pins XLA_FLAGS before any jax initialization).
+"""
+
+__version__ = "1.0.0"

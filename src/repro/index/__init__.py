@@ -1,0 +1,9 @@
+"""Index build/search: Builder, Searcher, compaction codec, baselines."""
+
+from .builder import Builder, BuilderConfig, BuildReport
+from .query import And, Or, Query, Term, parse, query_words
+from .searcher import QueryResult, QueryStats, Searcher
+
+__all__ = ["Builder", "BuilderConfig", "BuildReport", "And", "Or", "Query",
+           "Term", "parse", "query_words", "QueryResult", "QueryStats",
+           "Searcher"]

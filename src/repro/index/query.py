@@ -1,0 +1,61 @@
+"""Boolean query trees (paper §IV-F): Q(∨_i ∧_j w_ij) = ∪_i ∩_j Q(w_ij).
+
+Intersection reduces false positives; union adds them; content filtering
+at document-fetch time restores perfect precision either way.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+class Query:
+    def __and__(self, other: "Query") -> "And":
+        return And((self, other))
+
+    def __or__(self, other: "Query") -> "Or":
+        return Or((self, other))
+
+
+@dataclass(frozen=True)
+class Term(Query):
+    word: str
+
+
+@dataclass(frozen=True)
+class And(Query):
+    items: tuple[Query, ...]
+
+
+@dataclass(frozen=True)
+class Or(Query):
+    items: tuple[Query, ...]
+
+
+def query_words(q: Query) -> list[str]:
+    """Distinct words in a query tree, stable order."""
+    out: list[str] = []
+    seen: set[str] = set()
+
+    def walk(node: Query) -> None:
+        if isinstance(node, Term):
+            if node.word not in seen:
+                seen.add(node.word)
+                out.append(node.word)
+        else:
+            for sub in node.items:   # type: ignore[union-attr]
+                walk(sub)
+
+    walk(q)
+    return out
+
+
+def parse(text: str) -> Query:
+    """Tiny query language: `a b` = AND, `a OR b`, parentheses not needed
+    for the benchmarks; provided for the examples' CLI."""
+    or_parts = [p.strip() for p in text.split(" OR ") if p.strip()]
+    ors: list[Query] = []
+    for part in or_parts:
+        terms = [Term(w.lower()) for w in part.split() if w.upper() != "AND"]
+        ors.append(terms[0] if len(terms) == 1 else And(tuple(terms)))
+    return ors[0] if len(ors) == 1 else Or(tuple(ors))

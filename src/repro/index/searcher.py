@@ -1,0 +1,298 @@
+"""Airphant Searcher (paper §III-C): initialize once, query in two rounds.
+
+Initialization is a single header read; after that the MHT (hash seeds +
+bin pointers) lives in memory. A query is:
+
+  round 1 — ONE batch of concurrent range reads for all needed superposts
+            (all layers of all query words, plus hedged extras §IV-G);
+  intersect/combine in memory (no false negatives, ~F0 false positives);
+  round 2 — ONE batch of concurrent range reads for candidate documents,
+            then filter by actual content → perfect precision.
+
+There is never a dependent read chain — that is the paper's whole thesis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.hashing import HashFamily, word_fingerprint
+from ..core.sketch import intersect_sorted
+from ..core.topk import sample_size
+from ..data.corpus import DocRef
+from ..data.tokenizer import distinct_words
+from ..storage.blobstore import RangeRequest
+from ..storage.simcloud import FetchStats, SimCloudStore
+from . import codec
+from .query import And, Or, Query, Term, query_words
+
+
+@dataclass
+class QueryStats:
+    lookup: FetchStats = field(default_factory=FetchStats)
+    docs: FetchStats = field(default_factory=FetchStats)
+    n_candidates: int = 0
+    n_false_positives: int = 0
+    n_results: int = 0
+    rounds: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.lookup.elapsed_s + self.docs.elapsed_s
+
+
+@dataclass
+class QueryResult:
+    refs: list[DocRef]
+    texts: list[str]
+    stats: QueryStats
+
+
+class Searcher:
+    def __init__(self, cloud: SimCloudStore, prefix: str) -> None:
+        self.cloud = cloud
+        self.prefix = prefix
+        # --- initialization: ONE read of the header block ---------------
+        data, self.init_stats = cloud.fetch(
+            RangeRequest(f"{prefix}/header.airp"))
+        hdr = codec.decode_header(data)
+        self.spec = hdr["spec"]
+        self.L = int(self.spec["L"])
+        self.L_total = int(self.spec["L_total"])
+        self.bins_per_layer = int(self.spec["bins_per_layer"])
+        self.hashes = HashFamily.from_dict(hdr["hashes"])
+        self.string_table: list[str] = list(hdr["string_table"])
+        self.blocks: list[str] = list(hdr["blocks"])
+        self.pointers = codec.unpack_pointers(hdr["bin_pointers"])
+        common_ptrs = codec.unpack_pointers(hdr["common_pointers"])
+        self.common: dict[int, codec.BinPointer] = {
+            int(fp): p for fp, p in zip(hdr["common_fps"], common_ptrs)}
+        self.profile = hdr["profile"]
+        self.F0 = float(self.profile.get("F0", 1.0))
+
+    # ------------------------------------------------------------- pointers
+    def _pointers_for_word(self, word: str) -> tuple[list[codec.BinPointer], bool]:
+        """(superpost pointers, is_common). Common words need ONE pointer."""
+        fp = word_fingerprint(word)
+        if fp in self.common:
+            return [self.common[fp]], True
+        bins = self.hashes.bins_for_word(word)          # (L_total,)
+        return [self.pointers[l * self.bins_per_layer + int(bins[l])]
+                for l in range(self.L_total)], False
+
+    def _request(self, ptr: codec.BinPointer) -> RangeRequest:
+        return RangeRequest(self.blocks[ptr.block], ptr.offset, ptr.length)
+
+    # ---------------------------------------------------------------- lookup
+    def lookup(self, q: Query | str, hedge: bool = False,
+               ) -> tuple[dict[str, tuple[np.ndarray, np.ndarray]], QueryStats]:
+        """Term-index lookup: candidate postings per query word.
+
+        One batch of concurrent reads covers every word's layers. With
+        `hedge=True` (and an index built with hedge_layers > 0) we issue
+        all L_total requests but only wait for the fastest L per word
+        (§IV-G built-in replication; exact for single-term queries,
+        batch-approximate for multi-term ones).
+        """
+        q = Term(q) if isinstance(q, str) else q
+        words = query_words(q)
+        stats = QueryStats()
+        plan: list[tuple[str, list[int]]] = []      # word -> request indices
+        requests: list[RangeRequest] = []
+        req_index: dict[codec.BinPointer, int] = {}
+        n_hedgeable = 0
+        for w in words:
+            ptrs, is_common = self._pointers_for_word(w)
+            idxs = []
+            for p in ptrs:
+                if p not in req_index:
+                    req_index[p] = len(requests)
+                    requests.append(self._request(p))
+                idxs.append(req_index[p])
+            if not is_common and self.L_total > self.L:
+                n_hedgeable += self.L_total - self.L
+            plan.append((w, idxs))
+
+        wait_for = None
+        if hedge and n_hedgeable:
+            wait_for = max(1, len(requests) - n_hedgeable)
+        payloads, fstats = self.cloud.fetch_batch(requests, wait_for=wait_for)
+        stats.lookup = fstats
+        stats.rounds += 1
+
+        out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        for w, idxs in plan:
+            posts = []
+            for i in idxs:
+                if payloads[i] is None:      # hedged-away straggler
+                    continue
+                posts.append(codec.decode_superpost(payloads[i]))
+            if not posts:                    # hedging must keep >= 1 layer
+                payload, extra = self.cloud.fetch(requests[idxs[0]])
+                stats.lookup.add(extra)
+                posts.append(codec.decode_superpost(payload))
+            keys = intersect_sorted([k for k, _len in posts])
+            # recover lengths from whichever layer, via searchsorted
+            k0, l0 = posts[0]
+            lengths = l0[np.searchsorted(k0, keys)]
+            out[w] = (keys, lengths)
+        stats.n_candidates = int(sum(len(k) for k, _ in out.values()))
+        return out, stats
+
+    # ----------------------------------------------------------------- query
+    def query(self, q: Query | str, top_k: int | None = None,
+              hedge: bool = False, delta: float = 1e-6,
+              fetch_documents: bool = True) -> QueryResult:
+        q = Term(q) if isinstance(q, str) else q
+        per_word, stats = self.lookup(q, hedge=hedge)
+
+        keys, lengths = _combine(q, per_word)
+        stats.n_candidates = len(keys)
+        if not fetch_documents:
+            refs = self._refs(keys, lengths)
+            return QueryResult(refs=refs, texts=[], stats=stats)
+
+        # --- top-K sampling (§IV-D, Eq. 6) ------------------------------
+        order = np.arange(len(keys))
+        want = len(keys)
+        if top_k is not None and len(keys):
+            rk = sample_size(len(keys), top_k, self.F0, delta)
+            rng = np.random.default_rng(int(keys[0]) & 0xFFFF)
+            order = rng.permutation(len(keys))
+            want = top_k
+            keys_s, lengths_s = keys[order[:rk]], lengths[order[:rk]]
+        else:
+            keys_s, lengths_s = keys, lengths
+
+        texts, refs = self._fetch_and_filter(q, keys_s, lengths_s, stats)
+        if top_k is not None and len(texts) < want and len(keys) > len(keys_s):
+            # Eq. 6 failure (prob < delta) or tiny candidate set: fall back
+            # to fetching the remainder.
+            rest = order[len(keys_s):]
+            t2, r2 = self._fetch_and_filter(
+                q, keys[rest], lengths[rest], stats)
+            texts += t2
+            refs += r2
+        if top_k is not None:
+            texts, refs = texts[:want], refs[:want]
+        stats.n_results = len(texts)
+        return QueryResult(refs=refs, texts=texts, stats=stats)
+
+    # ------------------------------------------------------------- regex
+    def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
+        """RegEx search via n-gram prefilter (paper §IV-F).
+
+        Literal runs (>= n chars) in the pattern are broken into the
+        n-grams the Builder indexed (`index_ngrams=n`); the sketch's AND
+        over those grams yields a candidate superset (no false
+        negatives); fetched documents are then matched against the real
+        regex — superpost false positives never affect correctness.
+        """
+        import re as _re
+
+        from .builder import NGRAM_PREFIX
+        # extract guaranteed-literal runs: strip character classes,
+        # escapes, and quantified atoms (an atom before ?/*/{m,n} may not
+        # occur, and text around +/| is not contiguous), then split on
+        # the remaining metacharacters
+        stripped = pattern.lower()
+        stripped = _re.sub(r"\[[^\]]*\]", " ", stripped)     # [...] classes
+        stripped = _re.sub(r"\\.", " ", stripped)            # \d \b escapes
+        stripped = _re.sub(r".[*?]", " ", stripped)          # X? X* atoms
+        stripped = _re.sub(r".\{[^}]*\}", " ", stripped)     # X{m,n}
+        stripped = _re.sub(r"[()|.^$+]", " ", stripped)      # other meta
+        literals = _re.findall(r"[a-z0-9_\-./]{%d,}" % ngram, stripped)
+        grams: list[str] = []
+        for lit in literals:
+            grams.extend(lit[i:i + ngram]
+                         for i in range(len(lit) - ngram + 1))
+        if not grams:
+            raise ValueError(
+                f"pattern {pattern!r} has no literal run of >= {ngram} "
+                "chars to prefilter on (a full corpus scan would be "
+                "required — rejected, like the paper's RegEx engines)")
+        q = And(tuple(Term(NGRAM_PREFIX + g) for g in dict.fromkeys(grams)))
+        per_word, stats = self.lookup(q)
+        keys, lengths = _combine(q, per_word)
+        stats.n_candidates = len(keys)
+        texts, refs = [], []
+        compiled = _re.compile(pattern)
+        cand_refs = self._refs(keys, lengths)
+        if cand_refs:
+            payloads, fstats = self.cloud.fetch_batch(
+                [RangeRequest(r.blob, r.offset, r.length)
+                 for r in cand_refs])
+            stats.docs.add(fstats)
+            stats.rounds += 1
+            for ref, payload in zip(cand_refs, payloads):
+                text = payload.decode("utf-8")
+                if compiled.search(text):
+                    texts.append(text)
+                    refs.append(ref)
+                else:
+                    stats.n_false_positives += 1
+        stats.n_results = len(texts)
+        return QueryResult(refs=refs, texts=texts, stats=stats)
+
+    # ----------------------------------------------------------------- utils
+    def _refs(self, keys: np.ndarray, lengths: np.ndarray) -> list[DocRef]:
+        blob_keys, offsets = codec.split_posting_key(keys)
+        return [DocRef(self.string_table[int(b)], int(o), int(n))
+                for b, o, n in zip(blob_keys, offsets, lengths)]
+
+    def _fetch_and_filter(self, q: Query, keys: np.ndarray,
+                          lengths: np.ndarray, stats: QueryStats,
+                          ) -> tuple[list[str], list[DocRef]]:
+        """Round 2: fetch candidate documents, filter false positives."""
+        refs = self._refs(keys, lengths)
+        if not refs:
+            return [], []
+        payloads, fstats = self.cloud.fetch_batch(
+            [RangeRequest(r.blob, r.offset, r.length) for r in refs])
+        stats.docs.add(fstats)
+        stats.rounds += 1
+        texts, kept = [], []
+        for ref, payload in zip(refs, payloads):
+            assert payload is not None
+            text = payload.decode("utf-8")
+            if _matches(q, distinct_words(text)):
+                texts.append(text)
+                kept.append(ref)
+            else:
+                stats.n_false_positives += 1
+        return texts, kept
+
+
+def _combine(q: Query, per_word: dict[str, tuple[np.ndarray, np.ndarray]],
+             ) -> tuple[np.ndarray, np.ndarray]:
+    """Distribute ∪/∩ over per-word candidates (paper §IV-F)."""
+    if isinstance(q, Term):
+        return per_word[q.word]
+    parts = [_combine(sub, per_word) for sub in q.items]
+    keys_list = [k for k, _l in parts]
+    if isinstance(q, And):
+        keys = intersect_sorted(keys_list)
+    else:
+        assert isinstance(q, Or)
+        keys = np.unique(np.concatenate(keys_list)) if keys_list else \
+            np.empty(0, np.uint64)
+    # recover lengths from any part containing each key
+    lengths = np.zeros(len(keys), dtype=np.uint64)
+    for k, l in parts:
+        idx = np.searchsorted(k, keys)
+        idx = np.clip(idx, 0, max(len(k) - 1, 0))
+        if len(k):
+            hit = k[idx] == keys
+            lengths[hit] = l[idx[hit]]
+    return keys, lengths
+
+
+def _matches(q: Query, words: set[str]) -> bool:
+    if isinstance(q, Term):
+        return q.word in words
+    if isinstance(q, And):
+        return all(_matches(s, words) for s in q.items)
+    assert isinstance(q, Or)
+    return any(_matches(s, words) for s in q.items)

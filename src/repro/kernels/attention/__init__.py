@@ -1,0 +1,5 @@
+from .kernel import flash_attention
+from .ops import attention
+from .ref import attention_ref
+
+__all__ = ["flash_attention", "attention", "attention_ref"]

@@ -1,0 +1,87 @@
+"""Pallas TPU flash attention (forward).
+
+Blockwise online-softmax: grid (B·H, S/BQ); each program owns one query
+block in VMEM and streams key/value blocks HBM→VMEM with a fori_loop,
+maintaining running max m, normalizer l, and the output accumulator in
+fp32. Block sizes are MXU-aligned (128); causal and sliding-window masks
+are applied per (q-block, kv-block) tile via iota comparisons. The (S, T)
+score matrix never exists — per-program VMEM is O(BQ·dh + BK·dh + BQ·BK).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BQ = 128       # query rows per program
+BK = 128       # kv rows per inner step
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool,
+            window: int | None, t_len: int, offset: int):
+    q = q_ref[0].astype(jnp.float32)                    # (BQ, dh)
+    dh = q.shape[-1]
+    q = q * (1.0 / np.sqrt(dh))
+    qi = pl.program_id(1)
+    q_pos = qi * BQ + jax.lax.iota(jnp.int32, BQ) + offset  # absolute rows
+
+    n_kv = t_len // BK
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.ds(j * BK, BK)].astype(jnp.float32)   # (BK, dh)
+        v = v_ref[0, pl.ds(j * BK, BK)].astype(jnp.float32)
+        s = q @ k.T                                           # (BQ, BK)
+        k_pos = j * BK + jax.lax.iota(jnp.int32, BK)
+        mask = jnp.ones((BQ, BK), jnp.bool_)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((BQ,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((BQ,), jnp.float32)
+    acc0 = jnp.zeros((BQ, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, S, dh); k, v: (B, H, T, dh) with S <= T, ends aligned."""
+    B, H, S, dh = q.shape
+    T = k.shape[2]
+    assert S % BQ == 0 and T % BK == 0, (S, T)
+    qf = q.reshape(B * H, S, dh)
+    kf = k.reshape(B * H, T, dh)
+    vf = v.reshape(B * H, T, dh)
+    kernel = functools.partial(_kernel, causal=causal, window=window,
+                               t_len=T, offset=T - S)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // BQ),
+        in_specs=[
+            pl.BlockSpec((1, BQ, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, T, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, T, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, dh)

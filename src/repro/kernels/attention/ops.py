@@ -1,0 +1,28 @@
+"""Jit'd wrapper: GQA-aware flash attention entry point."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              impl: str = "pallas", interpret: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, dh); k, v: (B, T, KV, dh) — model layout (GQA ok)."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if impl == "ref":
+        out = attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                              interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle: full-materialization attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    """q: (B, H, S, dh); k, v: (B, H, T, dh). Returns (B, H, S, dh)."""
+    B, H, S, dh = q.shape
+    T = k.shape[2]
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    qpos = jnp.arange(S)[:, None] + (T - S)      # align ends (prefill-style)
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .ops import bitmap_to_docs, intersect, postings_to_bitmap
+from .ref import intersect_ref, popcount
+
+__all__ = ["bitmap_to_docs", "intersect", "postings_to_bitmap",
+           "intersect_ref", "popcount"]

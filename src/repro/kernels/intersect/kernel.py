@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: L-way bitmap intersection + popcount.
+
+The IoU Sketch query combine (paper §II-C): L superposts arrive as
+document-space bitsets; the final postings list is their intersection.
+On TPU we tile the document axis through VMEM in (8, 128)-aligned blocks
+and fuse AND-reduce with population count in one pass, so candidate
+counting (needed by top-K sampling, Eq. 6) costs no extra HBM traffic.
+
+Layout: bitmaps (L, W) uint32 where W = n_docs/32, padded to the tile.
+Grid is 1-D over W tiles; each program streams an (L, TILE) block
+HBM→VMEM, writes the (TILE,) intersection and a per-tile partial count.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 1024           # uint32 words per program: L×4 KiB of VMEM per layer
+
+
+def _kernel(bm_ref, out_ref, cnt_ref):
+    block = bm_ref[...]                     # (L, TILE) uint32
+    acc = block[0]
+    for l in range(1, block.shape[0]):      # L is static — unrolled AND tree
+        acc = jnp.bitwise_and(acc, block[l])
+    out_ref[...] = acc
+    # fused popcount (bit-parallel SWAR)
+    x = acc
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    counts = (x * jnp.uint32(0x01010101)) >> 24
+    cnt_ref[...] = jnp.sum(counts, dtype=jnp.uint32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def intersect_pallas(bitmaps: jnp.ndarray, interpret: bool = True,
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """bitmaps: (L, W) uint32 → (intersection (W,), total count ())."""
+    L, W = bitmaps.shape
+    pad = (-W) % TILE
+    if pad:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, pad)))
+    Wp = W + pad
+    n_tiles = Wp // TILE
+    out, counts = pl.pallas_call(
+        _kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((L, TILE), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((TILE,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((Wp,), jnp.uint32),
+                   jax.ShapeDtypeStruct((n_tiles,), jnp.uint32)],
+        interpret=interpret,
+    )(bitmaps)
+    return out[:W], jnp.sum(counts, dtype=jnp.uint32)

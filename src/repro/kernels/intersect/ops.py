@@ -1,0 +1,35 @@
+"""Public ops for IoU intersection: bitmap conversion + kernel dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import intersect_pallas
+from .ref import intersect_ref
+
+
+def postings_to_bitmap(postings: list[np.ndarray], n_docs: int) -> np.ndarray:
+    """Sorted doc-id arrays → (L, ceil(n_docs/32)) uint32 bitsets."""
+    W = (n_docs + 31) // 32
+    out = np.zeros((len(postings), W), dtype=np.uint32)
+    for l, docs in enumerate(postings):
+        docs = np.asarray(docs, dtype=np.uint64)
+        np.bitwise_or.at(out[l], (docs // 32).astype(np.int64),
+                         np.uint32(1) << (docs % 32).astype(np.uint32))
+    return out
+
+
+def bitmap_to_docs(bitmap: np.ndarray) -> np.ndarray:
+    """Intersection bitset → sorted uint32 doc ids."""
+    bits = np.unpackbits(
+        np.asarray(bitmap, dtype=np.uint32).view(np.uint8), bitorder="little")
+    return np.flatnonzero(bits).astype(np.uint32)
+
+
+def intersect(bitmaps, impl: str = "pallas", interpret: bool = True):
+    """(L, W) uint32 → (bitmap (W,), count ()). impl: pallas | ref."""
+    bitmaps = jnp.asarray(bitmaps, dtype=jnp.uint32)
+    if impl == "ref":
+        return intersect_ref(bitmaps)
+    return intersect_pallas(bitmaps, interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the IoU intersection kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def popcount(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-element bit population count of a uint32 array."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def intersect_ref(bitmaps: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """L-way AND + popcount. bitmaps: (L, W) uint32 document bitsets.
+
+    Returns (intersection bitmap (W,), total matching documents ()).
+    """
+    out = bitmaps[0]
+    for l in range(1, bitmaps.shape[0]):
+        out = jnp.bitwise_and(out, bitmaps[l])
+    return out, jnp.sum(popcount(out), dtype=jnp.uint32)

@@ -1,0 +1,5 @@
+from .kernel import wkv_pallas
+from .ops import wkv
+from .ref import wkv_ref
+
+__all__ = ["wkv_pallas", "wkv", "wkv_ref"]

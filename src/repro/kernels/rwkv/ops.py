@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the wkv recurrence."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import wkv_pallas
+from .ref import wkv_ref
+
+
+def wkv(r, k, v, w, u, impl: str = "pallas", interpret: bool = True):
+    """r/k/v/w: (B, S, H, dh); u: (H, dh) → out (B, S, H, dh) fp32."""
+    if impl == "ref":
+        out, _s = wkv_ref(r, k, v, w, u)
+        return out
+    return wkv_pallas(r, k, v, w, u, interpret=interpret)

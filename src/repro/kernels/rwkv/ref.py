@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: sequential RWKV-6 wkv recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, w, u, s0=None):
+    """Sequential scan over time.
+
+    r, k, v, w: (B, S, H, dh) — w is the decay in (0, 1);
+    u: (H, dh) bonus; s0: (B, H, dh, dh) initial state.
+    Returns (out (B, S, H, dh) fp32, final state).
+    """
+    B, S, H, dh = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs              # (B, H, dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", r_t, s + uf[:, :, None] * kv)
+        s_new = w_t[..., :, None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    s_fin, outs = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(outs, 0, 1), s_fin

@@ -1,0 +1,5 @@
+from .kernel import selective_scan_pallas
+from .ops import selective_scan
+from .ref import selective_scan_ref
+
+__all__ = ["selective_scan_pallas", "selective_scan", "selective_scan_ref"]

@@ -1,0 +1,14 @@
+"""Jit'd wrapper for the selective scan."""
+
+from __future__ import annotations
+
+from .kernel import selective_scan_pallas
+from .ref import selective_scan_ref
+
+
+def selective_scan(a, b, c, impl: str = "pallas", interpret: bool = True):
+    """a, b: (B, S, D, N); c: (B, S, N) → y (B, S, D) fp32."""
+    if impl == "ref":
+        y, _h = selective_scan_ref(a, b, c)
+        return y
+    return selective_scan_pallas(a, b, c, interpret=interpret)

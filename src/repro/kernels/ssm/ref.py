@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: sequential Mamba selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(a, b, c, h0=None):
+    """h_t = a_t ⊙ h_{t-1} + b_t;  y_t = h_t · c_t.
+
+    a, b: (B, S, D, N); c: (B, S, N); h0: (B, D, N).
+    Returns (y (B, S, D) fp32, final h).
+    """
+    B, S, D, N = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    def step(h, xs):
+        a_t, b_t, c_t = xs
+        h = a_t * h + b_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(c.astype(jnp.float32), 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin

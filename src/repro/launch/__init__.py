@@ -1,0 +1,2 @@
+# Deliberately empty: `python -m repro.launch.dryrun` imports this package
+# before dryrun.py can set XLA_FLAGS, so nothing here may import jax.

@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and only the dry-run) needs 512 placeholder host devices so
+# jax.make_mesh can build the production meshes. Smoke tests and benches
+# see 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves the distribution config is coherent without
+hardware: the jitted step lowers, the SPMD partitioner accepts every
+sharding, compile succeeds, and memory/cost analyses are captured for the
+roofline (§Roofline in EXPERIMENTS.md). Artifacts land in
+experiments/dryrun/<arch>__<cell>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # everything
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, cells_for, get_config, skipped_cells_for
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+from repro.models import build_model
+from repro.models.common import Desc, param_count
+
+
+def count_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the actual descriptor tree."""
+    model = build_model(cfg)
+    tree = model.param_desc()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, Desc))
+    total = active = 0
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", "")) for k in path]
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe" in keys and keys[-1] in ("w_in", "w_gate", "w_out"):
+            active += n * cfg.moe.top_k // cfg.moe.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, outdir: str,
+             donate: bool = True, variant: str = "baseline") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    record = {"arch": arch, "cell": cell_name, "mesh": mesh_name,
+              "variant": variant, "status": "pending"}
+    cfg = get_config(arch)
+    if cell_name in skipped_cells_for(arch):
+        record.update(status="skipped",
+                      reason="unbounded decode state at 500k context "
+                             "(pure full-attention arch; see DESIGN.md)")
+        _write(record, outdir)
+        return record
+    try:
+        from repro.models.blocks import set_attn_triangular
+        from repro.models.losses import set_bf16_grad_barrier
+        set_attn_triangular(variant == "opt")
+        set_bf16_grad_barrier(variant == "opt")
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        bundle = make_step(cfg, mesh, cell_name, variant=variant)
+        t0 = time.time()
+        jitted = jax.jit(bundle.fn,
+                         donate_argnums=bundle.donate_argnums if donate else ())
+        with mesh:
+            lowered = jitted.lower(*bundle.abstract_args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        total_p, active_p = count_params(cfg)
+        cell = SHAPES[cell_name]
+        mflops = rl.model_flops(cfg, cell, total_p, active_p)
+        mbytes = 0.0
+        if cell.step == "decode":
+            # minimal decode traffic: active params + cache, read once
+            cache_abs = bundle.abstract_args[1]
+            cache_bytes = sum(
+                s.size * s.dtype.itemsize
+                for s in jax.tree.leaves(cache_abs))
+            mbytes = rl.model_bytes(cfg, cell, active_p, cache_bytes)
+        roof = rl.analyze(compiled, n_dev, mflops, mbytes, cell.step)
+        record.update(
+            status="ok", n_devices=n_dev,
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_est_bytes": (mem.argument_size_in_bytes
+                                   + mem.output_size_in_bytes
+                                   + mem.temp_size_in_bytes
+                                   - mem.alias_size_in_bytes),
+            },
+            params_total=total_p, params_active=active_p,
+            roofline=roof.to_dict(),
+        )
+    except Exception as exc:  # noqa: BLE001 — record and keep sweeping
+        record.update(status="error", error=f"{type(exc).__name__}: {exc}",
+                      traceback=traceback.format_exc()[-2000:])
+    finally:
+        from repro.models.blocks import set_attn_triangular
+        from repro.models.losses import set_bf16_grad_barrier
+        set_attn_triangular(False)
+        set_bf16_grad_barrier(False)
+    _write(record, outdir)
+    return record
+
+
+def _write(record: dict, outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+    suffix = "" if record.get("variant", "baseline") == "baseline" else \
+        f"__{record['variant']}"
+    name = (f"{record['arch']}__{record['cell']}__{record['mesh']}"
+            f"{suffix}.json")
+    with open(os.path.join(outdir, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape cell or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt"],
+                    help="opt = §Perf hillclimb configuration")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose artifact already says ok/skipped")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" or args.all else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        shapes = list(SHAPES) if args.shape == "all" or args.all \
+            else [args.shape]
+        for cell in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                suffix = "" if args.variant == "baseline" else \
+                    f"__{args.variant}"
+                path = os.path.join(
+                    args.outdir,
+                    f"{arch}__{cell}__{mesh_name}{suffix}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached ] {arch} × {cell} × {mesh_name}")
+                        continue
+                t0 = time.time()
+                rec = run_cell(arch, cell, mp, args.outdir,
+                               variant=args.variant)
+                dt = time.time() - t0
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f"bottleneck={r['bottleneck']} "
+                             f"t_bound={r['t_bound_s']:.4f}s "
+                             f"roofline={r['roofline_fraction']:.2%}")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{status:7s}] {arch} × {cell} × {mesh_name} "
+                      f"({dt:.0f}s) {extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

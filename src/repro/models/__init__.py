@@ -1,0 +1,9 @@
+"""Model zoo: 10 assigned architectures over a shared functional substrate."""
+
+from .api import batch_desc, build_model, input_specs
+from .common import (AxisRules, Desc, NULL_RULES, abstract_params,
+                     init_params, param_count, rules_for, stack_tree)
+
+__all__ = ["batch_desc", "build_model", "input_specs", "AxisRules", "Desc",
+           "NULL_RULES", "abstract_params", "init_params", "param_count",
+           "rules_for", "stack_tree"]

@@ -1,0 +1,91 @@
+"""Model factory + input specs for every (arch × shape) cell."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ModelConfig, SHAPES, ShapeCell
+from ..configs.seamless_m4t_medium import ENC_FRAMES
+from .common import Desc, abstract_params
+from .encdec import EncDecModel
+from .hybrid import HybridModel
+from .rwkv_model import RWKVModel
+from .transformer import TransformerModel
+
+# fraction of the sequence that is image patches for the VLM cells
+VLM_PATCH_FRAC = 0.25
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.kind in ("dense", "moe", "vlm"):
+        return TransformerModel(cfg)
+    if cfg.kind == "encdec":
+        return EncDecModel(cfg)
+    if cfg.kind == "rwkv":
+        return RWKVModel(cfg)
+    if cfg.kind == "hybrid":
+        return HybridModel(cfg)
+    raise ValueError(f"unknown model kind {cfg.kind!r}")
+
+
+def batch_desc(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Input descriptors (shape/dtype/logical axes) for one shape cell.
+
+    `train`/`prefill` feed full sequences; `decode` feeds one token against
+    a cache created by `model.cache_desc`. Modality frontends are stubs:
+    VLM cells get precomputed patch embeddings + M-RoPE ids; the encdec
+    arch gets precomputed encoder frame embeddings.
+    """
+    B, S = cell.global_batch, cell.seq_len
+    d: dict = {}
+    if cfg.kind == "vlm":
+        if cell.step == "decode":
+            d["tokens"] = Desc((B, 1), ("dp", None), dtype=jnp.int32)
+            d["positions"] = Desc((B, 1, 3), ("dp", None, None),
+                                  dtype=jnp.int32)
+        else:
+            s_img = int(S * VLM_PATCH_FRAC)
+            s_txt = S - s_img
+            d["tokens"] = Desc((B, s_txt), ("dp", None), dtype=jnp.int32)
+            d["patches"] = Desc((B, s_img, cfg.d_model), ("dp", None, None),
+                                dtype=jnp.bfloat16)
+            d["positions"] = Desc((B, S, 3), ("dp", None, None),
+                                  dtype=jnp.int32)
+    elif cfg.kind == "encdec":
+        if cell.step == "decode":
+            d["tokens"] = Desc((B, 1), ("dp", None), dtype=jnp.int32)
+        else:
+            d["frames"] = Desc((B, S, cfg.d_model), ("dp", None, None),
+                               dtype=jnp.bfloat16)
+            d["tokens"] = Desc((B, S), ("dp", None), dtype=jnp.int32)
+    else:
+        d["tokens"] = Desc((B, 1 if cell.step == "decode" else S),
+                           ("dp", None), dtype=jnp.int32)
+    if cell.step == "train":
+        d["labels"] = Desc((B, S), ("dp", None), dtype=jnp.int32)
+    return d
+
+
+def input_specs(cfg: ModelConfig, cell_name: str, rules=None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell —
+    weak-type-correct, shardable, zero allocation (dry-run contract)."""
+    cell = SHAPES[cell_name]
+    model = build_model(cfg)
+    batch = batch_desc(cfg, cell)
+    specs = {"batch": batch}
+    if cell.step == "decode":
+        if cfg.kind == "encdec":
+            specs["cache"] = model.cache_desc(cell.global_batch, cell.seq_len,
+                                              enc_len=ENC_FRAMES)
+        else:
+            specs["cache"] = model.cache_desc(cell.global_batch, cell.seq_len)
+    if rules is None:
+        return jax.tree.map(
+            lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), specs,
+            is_leaf=lambda x: isinstance(x, Desc))
+    shardings = jax.tree.map(
+        lambda d: jax.sharding.NamedSharding(rules.mesh,
+                                             rules.physical(d.axes, d.shape)),
+        specs, is_leaf=lambda x: isinstance(x, Desc))
+    return abstract_params(specs, shardings)

@@ -1,0 +1,366 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, blockwise GQA attention
+(causal / sliding-window / cross), SwiGLU FFN, and capacity-based MoE.
+
+All math is einsum/lax-native so the SPMD partitioner shards it; activations
+carry logical-axis constraints via `AxisRules`. Attention is blockwise over
+query chunks (an online-softmax-free formulation that never materializes
+the full (S, T) score matrix), which is both the memory-sane reference on
+CPU and the exact structure of the Pallas flash kernel in
+`repro.kernels.attention`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .common import AxisRules, Desc
+
+
+# ---------------------------------------------------------------------- norm
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+# ---------------------------------------------------------------------- rope
+def rope_cos_sin(positions: jax.Array, dh: int, theta: float,
+                 sections: tuple[int, int, int] | None = None):
+    """cos/sin tables for RoPE.
+
+    positions: (..., S) for 1-D RoPE, or (..., S, 3) for M-RoPE
+    (Qwen2-VL §3: temporal/height/width sections of the frequency bands).
+    Returns cos, sin of shape (..., S, dh//2) in float32.
+    """
+    half = dh // 2
+    inv = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    if sections is None:
+        freqs = positions[..., None].astype(jnp.float32) * inv
+    else:
+        assert sum(sections) == half, (sections, half)
+        pos = positions.astype(jnp.float32)          # (..., S, 3)
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            parts.append(pos[..., i:i + 1] * inv[start:start + sec])
+            start += sec
+        freqs = jnp.concatenate(parts, axis=-1)       # (..., S, half)
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, dh); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    # insert the head axis: (…, S, half) -> (…, S, 1, half); leading dims
+    # (batch) broadcast automatically
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        q_positions: jax.Array, kv_positions: jax.Array,
+                        causal: bool, window: int | None,
+                        chunk: int, rules: AxisRules,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None) -> jax.Array:
+    """GQA attention, blockwise over query chunks.
+
+    q: (B, S, H, dh); k, v: (B, T, KV, dh); positions are (S,)/(T,) or
+    (B, S)/(B, T) absolute token positions (negative kv position = empty
+    cache slot). Never materializes (S, T) — peak score memory is
+    (B, chunk, H, T) per step of a lax.map.
+
+    int8 KV cache (opt decode): pass int8 k/v plus per-(t, kv-head)
+    scales (B, T, KV). The scales factor OUT of the contraction
+    (s = (q·k8)·scale; out = ((p·scale)·v8)), so the dots consume int8
+    directly — cache-read bandwidth halves on every backend.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    qk_scale = 1.0 / np.sqrt(dh)
+    # Grouped-query WITHOUT materializing repeated K/V: q is reshaped to
+    # (B, S, KV, group, dh) and contracted against K/V's own head dim.
+    # A jnp.repeat here would force the partitioner to reshard a
+    # sequence-sharded KV cache onto heads — measured as two 60 GB
+    # all-gathers per decoded token at 256 devices (§Perf iteration d2).
+    g = H // KV
+    q = q.reshape(B, S, KV, g, dh)
+
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None, :], (B, S))
+    if kv_positions.ndim == 1:
+        kv_positions = jnp.broadcast_to(kv_positions[None, :], (B, T))
+
+    quant = k_scale is not None
+
+    def attend(q_c: jax.Array, qpos_c: jax.Array,
+               k_c: jax.Array | None = None, v_c: jax.Array | None = None,
+               kpos_c: jax.Array | None = None) -> jax.Array:
+        # q_c: (B, c, KV, g, dh); qpos_c: (B, c)
+        k_c = k if k_c is None else k_c
+        v_c = v if v_c is None else v_c
+        kpos_c = kv_positions if kpos_c is None else kpos_c
+        if quant:
+            # int8×int8 dots end-to-end: q quantized per (b, c, head)
+            # row, k/v already int8 in the cache. Scales multiply the
+            # score matrix (small), never the cache (big).
+            qs = jnp.max(jnp.abs(q_c.astype(jnp.float32)), axis=-1,
+                         keepdims=True) / 127.0 + 1e-9     # (B,c,KV,g,1)
+            q8 = jnp.clip(jnp.round(q_c.astype(jnp.float32) / qs),
+                          -127, 127).astype(jnp.int8)
+            s = jnp.einsum("bckgd,btkd->bkgct", q8, k_c,
+                           preferred_element_type=jnp.int32)
+            qs_t = jnp.transpose(qs[..., 0], (0, 2, 3, 1))[..., None]
+            s = s.astype(jnp.float32) * qs_t * qk_scale \
+                * jnp.moveaxis(k_scale, -1, 1)[:, :, None, None, :]
+        else:
+            s = jnp.einsum("bckgd,btkd->bkgct", q_c, k_c,
+                           preferred_element_type=jnp.float32) * qk_scale
+        mask = kpos_c[:, None, None, None, :] >= 0         # valid slots
+        if causal:
+            mask &= qpos_c[:, None, None, :, None] \
+                >= kpos_c[:, None, None, None, :]
+        if window is not None:
+            mask &= (qpos_c[:, None, None, :, None]
+                     - kpos_c[:, None, None, None, :]) < window
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        if quant:
+            # fold v's per-slot scale into p (t is contracted), then
+            # quantize p per row so the PV dot is int8×int8 as well
+            p = p * jnp.moveaxis(v_scale, -1, 1)[:, :, None, None, :]
+            ps = jnp.max(p, axis=-1, keepdims=True) / 127.0 + 1e-12
+            p8 = jnp.clip(jnp.round(p / ps), -127, 127).astype(jnp.int8)
+            out = jnp.einsum("bkgct,btkd->bckgd", p8, v_c,
+                             preferred_element_type=jnp.int32)
+            out = (out.astype(jnp.float32)
+                   * jnp.transpose(ps[..., 0], (0, 3, 1, 2))[..., None]
+                   ).astype(q.dtype)
+        else:
+            out = jnp.einsum("bkgct,btkd->bckgd", p.astype(v.dtype), v_c)
+        return out.reshape(out.shape[:2] + (H, dh))
+
+    triangular = (getattr(rules, "attn_tri", False) or
+                  _ATTN_TRI_DEFAULT[0]) and causal and S == T
+
+    if S <= chunk or S % chunk:
+        out = attend(q, q_positions)
+    elif triangular:
+        # OPTIMIZED: unrolled macro-chunks with exact causal kv extents —
+        # chunk i only attends kv[0 : (i+1)·macro], halving attention
+        # flops and score traffic vs the full-T scan (see §Perf).
+        n_macro = min(8, S // chunk)
+        macro = S // n_macro
+        outs = []
+        for i in range(n_macro):
+            hi = (i + 1) * macro
+            # sliding window additionally bounds kv from BELOW
+            lo = 0 if window is None else \
+                max(0, ((hi - window - macro) // macro) * macro)
+            out_c = attend(q[:, i * macro:hi], q_positions[:, i * macro:hi],
+                           k_c=k[:, lo:hi], v_c=v[:, lo:hi],
+                           kpos_c=kv_positions[:, lo:hi])
+            outs.append(out_c)
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        n = S // chunk
+        q_r = q.reshape(B, n, chunk, KV, g, dh).transpose(1, 0, 2, 3, 4, 5)
+        p_r = q_positions.reshape(B, n, chunk).transpose(1, 0, 2)
+        out = jax.lax.map(lambda args: attend(*args), (q_r, p_r))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return rules.constrain(out, "dp", None, "tp", None)
+
+
+# process-wide default for the triangular-attention optimization; the
+# dry-run's --variant opt flips it (runtime knob, not an arch property)
+_ATTN_TRI_DEFAULT = [False]
+
+
+def set_attn_triangular(enabled: bool) -> None:
+    _ATTN_TRI_DEFAULT[0] = bool(enabled)
+
+
+@dataclass(frozen=True)
+class AttentionParams:
+    pass  # parameters live in plain dicts; this module is functional
+
+
+def attention_desc(cfg: ModelConfig, cross: bool = False) -> dict:
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.dh
+    p = {
+        "wq": Desc((D, H * dh), ("fsdp", "tp")),
+        "wk": Desc((D, KV * dh), ("fsdp", "tp" if KV % 8 == 0 else None)),
+        "wv": Desc((D, KV * dh), ("fsdp", "tp" if KV % 8 == 0 else None)),
+        "wo": Desc((H * dh, D), ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = Desc((H * dh,), ("tp",), init="zeros")
+        p["bk"] = Desc((KV * dh,), (None,), init="zeros")
+        p["bv"] = Desc((KV * dh,), (None,), init="zeros")
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = Desc((dh,), (None,), init="ones")
+        p["k_norm"] = Desc((dh,), (None,), init="ones")
+    return p
+
+
+def qkv_project(x: jax.Array, p: dict, cfg: ModelConfig,
+                rules: AxisRules, kv_x: jax.Array | None = None):
+    """Project to (q, k, v) with optional bias / qk-norm. kv_x for cross."""
+    B, S, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+    src = x if kv_x is None else kv_x
+    Tk = src.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, Tk, KV, dh)
+    v = v.reshape(B, Tk, KV, dh)
+    if "q_norm" in p:                      # qwen3: per-head RMS on q, k
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rules.constrain(q, "dp", None, "tp", None)
+    return q, k, v
+
+
+def attn_out(attn: jax.Array, p: dict, rules: AxisRules) -> jax.Array:
+    B, S, H, dh = attn.shape
+    out = jnp.einsum("bsh,hd->bsd", attn.reshape(B, S, H * dh), p["wo"])
+    return rules.constrain(out, "dp", None, None)
+
+
+# ---------------------------------------------------------------------- ffn
+def ffn_desc(cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_in": Desc((D, F), ("fsdp", "tp")),
+        "w_gate": Desc((D, F), ("fsdp", "tp")),
+        "w_out": Desc((F, D), ("tp", "fsdp")),
+    }
+
+
+def swiglu_ffn(x: jax.Array, p: dict, rules: AxisRules) -> jax.Array:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) \
+        * jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    h = rules.constrain(h, "dp", None, "tp")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return rules.constrain(out, "dp", None, None)
+
+
+# ---------------------------------------------------------------------- moe
+def moe_desc(cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    return {
+        "router": Desc((D, E), (None, None), dtype=jnp.float32),
+        "w_in": Desc((E, D, F), ("exp", "fsdp", "tp")),
+        "w_gate": Desc((E, D, F), ("exp", "fsdp", "tp")),
+        "w_out": Desc((E, F, D), ("exp", "tp", "fsdp")),
+    }
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig,
+            rules: AxisRules) -> jax.Array:
+    if getattr(cfg, "moe_impl", "global") == "grouped":
+        return moe_ffn_grouped(x, p, cfg, rules)
+    return moe_ffn_global(x, p, cfg, rules)
+
+
+def moe_ffn_global(x: jax.Array, p: dict, cfg: ModelConfig,
+                   rules: AxisRules) -> jax.Array:
+    """Token-choice top-k MoE with per-expert capacity (GShard-style
+    dropping, highest-router-prob-first), implemented as gather → grouped
+    einsum → scatter-add so no (tokens × experts × capacity) tensor is
+    ever built. Expert dim shards over `exp`; within-expert FFN over `tp`.
+
+    BASELINE implementation: capacity is enforced over the GLOBAL token
+    pool, which forces a global top-C sort and global gather/scatter —
+    heavily collective-bound at 256 devices (see EXPERIMENTS.md §Perf).
+    `moe_ffn_grouped` is the optimized batch-local variant.
+    """
+    moe = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    E, K = moe.n_experts, moe.top_k
+    xf = x.reshape(N, D)
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, K)          # (N, K)
+    top_vals = top_vals / jnp.sum(top_vals, -1, keepdims=True)  # renormalize
+    # token-choice mask: router prob kept only on each token's top-k experts
+    keep = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=probs.dtype)
+                   * top_vals[..., None], axis=1)        # (N, E)
+
+    C = max(int(moe.capacity_factor * K * N / E), 1)
+    C = min(C, N)
+    # per-expert capacity: each expert takes its C highest-prob tokens
+    gate_t, tok_idx = jax.lax.top_k(keep.T, C)           # (E, C)
+    dispatched = gate_t > 0.0                             # padding slots
+    xg = jnp.take(xf, tok_idx.reshape(-1), axis=0).reshape(E, C, D)
+    xg = rules.constrain(xg, "exp", None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xg, p["w_in"])
+    h = rules.constrain(h, "exp", None, "tp")
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    y = y * (gate_t * dispatched)[..., None].astype(y.dtype)
+
+    out = jnp.zeros((N, D), y.dtype).at[tok_idx.reshape(-1)].add(
+        y.reshape(E * C, D))
+    out = rules.constrain(out.reshape(B, S, D), "dp", None, None)
+    return out
+
+
+def moe_ffn_grouped(x: jax.Array, p: dict, cfg: ModelConfig,
+                    rules: AxisRules) -> jax.Array:
+    """Optimized MoE dispatch: capacity per BATCH-ROW group.
+
+    Routing, top-C selection, gather, and scatter-add all stay local to
+    the batch row (sharded over `dp`) — zero collectives. The only
+    cross-device movement is the canonical MoE all-to-all when the
+    (B, E, C, D) dispatch tensor meets the `exp`-sharded expert weights.
+    Capacity semantics match the paper-faithful baseline per group
+    (same capacity_factor, highest-prob-first dropping within each row).
+    """
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, K)            # (B, S, K)
+    top_vals = top_vals / jnp.sum(top_vals, -1, keepdims=True)
+    keep = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=probs.dtype)
+                   * top_vals[..., None], axis=2)          # (B, S, E)
+
+    C = max(min(int(moe.capacity_factor * K * S / E), S), 1)
+    gate_t, tok_idx = jax.lax.top_k(
+        jnp.swapaxes(keep, 1, 2), C)                       # (B, E, C)
+    dispatched = gate_t > 0.0
+    xg = jnp.take_along_axis(
+        x[:, None, :, :],                                   # (B, 1, S, D)
+        tok_idx[..., None], axis=2)                         # (B, E, C, D)
+    xg = rules.constrain(xg, "dp", "exp", None, None)       # MoE all-to-all
+
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xg, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", xg, p["w_in"])
+    h = rules.constrain(h, "dp", "exp", None, "tp")
+    y = jnp.einsum("becf,efd->becd", h, p["w_out"])
+    y = y * (gate_t * dispatched)[..., None].astype(y.dtype)
+    y = rules.constrain(y, "dp", None, None, None)          # a2a back
+
+    b_idx = jnp.arange(B, dtype=tok_idx.dtype)[:, None, None]
+    out = jnp.zeros((B, S, D), y.dtype).at[
+        jnp.broadcast_to(b_idx, tok_idx.shape), tok_idx].add(y)
+    return rules.constrain(out, "dp", None, None)

@@ -1,0 +1,222 @@
+"""Shared model machinery: parameter descriptors + logical axis sharding.
+
+Parameters are described once as a tree of `Desc` (shape, dtype, logical
+PartitionSpec, initializer); from that single source we derive real
+initialization (smoke tests / examples), abstract ShapeDtypeStructs
+(dry-run), and physical shardings (pjit). Logical axis names:
+
+  fsdp — parameter shards over the data(+pod) axes (ZeRO-3 style)
+  tp   — tensor-parallel over the model axis (Megatron column/row)
+  exp  — expert-parallel over the model axis (MoE with E == |model|)
+  dp   — activation batch axis over (pod, data)
+  sp   — long sequences / KV cache over the model axis
+
+`AxisRules` resolves logical names to physical mesh axes; models never
+mention physical axes, so single-pod, multi-pod, and single-device smoke
+configurations differ only in the rules object.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Desc:
+    """One parameter: shape + dtype + logical sharding + init."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical names per dim
+    init: str = "normal"                  # normal | zeros | ones | scaled
+    dtype: Any = jnp.bfloat16
+    scale: float | None = None            # for init == "scaled"
+
+    def fan_in(self) -> int:
+        return self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+
+
+def stacked(desc: Desc, n: int) -> Desc:
+    """Add a leading layer axis (for scan-over-layers parameter stacking)."""
+    return Desc(shape=(n,) + desc.shape, axes=(None,) + desc.axes,
+                init=desc.init, dtype=desc.dtype, scale=desc.scale)
+
+
+def stack_tree(tree, n: int):
+    return jax.tree.map(lambda d: stacked(d, n), tree,
+                        is_leaf=lambda x: isinstance(x, Desc))
+
+
+# ---------------------------------------------------------------------- init
+def _init_leaf(desc: Desc, key) -> jax.Array:
+    if desc.init == "zeros":
+        return jnp.zeros(desc.shape, desc.dtype)
+    if desc.init == "ones":
+        return jnp.ones(desc.shape, desc.dtype)
+    if desc.init == "full":
+        return jnp.full(desc.shape, desc.scale, desc.dtype)
+    scale = desc.scale if desc.scale is not None else \
+        1.0 / math.sqrt(max(desc.fan_in(), 1))
+    return (jax.random.normal(key, desc.shape, jnp.float32) * scale
+            ).astype(desc.dtype)
+
+
+def init_params(tree, key) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, Desc))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(tree, shardings=None) -> Any:
+    """ShapeDtypeStructs for the dry-run — no allocation ever happens."""
+    if shardings is None:
+        return jax.tree.map(
+            lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree,
+            is_leaf=lambda x: isinstance(x, Desc))
+    return jax.tree.map(
+        lambda d, s: jax.ShapeDtypeStruct(d.shape, d.dtype, sharding=s),
+        tree, shardings, is_leaf=lambda x: isinstance(x, Desc))
+
+
+# ------------------------------------------------------------------ sharding
+@dataclass(frozen=True)
+class AxisRules:
+    """Logical → physical axis mapping (+ optional mesh for constraints)."""
+
+    mapping: dict[str, Any] = field(default_factory=dict)
+    mesh: Mesh | None = None
+
+    def physical(self, axes: tuple[str | None, ...],
+                 shape: tuple[int, ...] | None = None) -> P:
+        """Resolve logical axes; with `shape`, drop mesh axes a dimension
+        cannot be evenly partitioned over (e.g. 8 experts on a 16-way model
+        axis degrade to replicated experts with in-expert TP — the designed
+        fallback; 256206-row vocab stays unsharded rather than padded)."""
+        mesh_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape)) \
+            if self.mesh is not None else {}
+        resolved = []
+        used: set[str] = set()
+        for i, a in enumerate(axes):
+            if a is None:
+                resolved.append(None)
+                continue
+            phys = self.mapping.get(a)
+            if phys is None:
+                resolved.append(None)
+                continue
+            phys_t = (phys,) if isinstance(phys, str) else tuple(phys)
+            # a physical mesh axis may appear at most once in a spec
+            phys_t = tuple(p for p in phys_t if p not in used)
+            if shape is not None and mesh_sizes:
+                # drop trailing axes until the dim divides evenly
+                while phys_t:
+                    total = 1
+                    for p in phys_t:
+                        total *= mesh_sizes.get(p, 1)
+                    if shape[i] % total == 0:
+                        break
+                    phys_t = phys_t[:-1]
+            used.update(phys_t)
+            if not phys_t:
+                resolved.append(None)
+            elif len(phys_t) == 1:
+                resolved.append(phys_t[0])
+            else:
+                resolved.append(phys_t)
+        return P(*resolved)
+
+    def spec_tree(self, tree) -> Any:
+        return jax.tree.map(lambda d: self.physical(d.axes, d.shape), tree,
+                            is_leaf=lambda x: isinstance(x, Desc))
+
+    def sharding_tree(self, tree) -> Any:
+        assert self.mesh is not None
+        return jax.tree.map(
+            lambda d: NamedSharding(self.mesh, self.physical(d.axes, d.shape)),
+            tree, is_leaf=lambda x: isinstance(x, Desc))
+
+    def constrain(self, x: jax.Array, *axes: str | None) -> jax.Array:
+        """Activation sharding hint; no-op without a mesh (smoke tests)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.physical(tuple(axes), x.shape)))
+
+
+# single-device smoke tests: everything replicated, constraints off
+NULL_RULES = AxisRules(mapping={}, mesh=None)
+
+# Sharding profiles (the §Perf hillclimb levers):
+#   baseline   — FSDP over data(+pod) × Megatron-TP over model
+#   fsdp_only  — parameters fully sharded over ALL axes, no TP: kills the
+#                per-layer activation all-reduces for dense training
+#   decode_tp  — weights TP-sharded over model only (resident, no per-token
+#                all-gathers); batch over data; cache sequence over
+#                whatever remains (auto-dedup/divisibility in physical())
+_PROFILES = {
+    "baseline": {
+        "dp": ("data",), "fsdp": ("data",), "tp": ("model",),
+        "exp": ("model",), "sp": ("model",),
+    },
+    "fsdp_only": {
+        "dp": ("data", "model"), "fsdp": ("data", "model"), "tp": (),
+        "exp": ("model",), "sp": (),
+    },
+    "decode_tp": {
+        "dp": ("data",), "fsdp": (), "tp": ("model",),
+        "exp": ("model",), "sp": ("data", "model"),
+    },
+}
+_PROFILES_MULTI = {
+    "baseline": {
+        "dp": ("pod", "data"), "fsdp": ("pod", "data"), "tp": ("model",),
+        "exp": ("model",), "sp": ("model",),
+    },
+    "fsdp_only": {
+        "dp": ("pod", "data", "model"), "fsdp": ("pod", "data", "model"),
+        "tp": (), "exp": ("model",), "sp": (),
+    },
+    "decode_tp": {
+        "dp": ("pod", "data"), "fsdp": (), "tp": ("model",),
+        "exp": ("model",), "sp": ("data", "model"),
+    },
+}
+
+
+def rules_for(mesh: Mesh | None, profile: str = "baseline") -> AxisRules:
+    if mesh is None:
+        return NULL_RULES
+    table = _PROFILES_MULTI if "pod" in mesh.axis_names else _PROFILES
+    return AxisRules(mapping=dict(table[profile]), mesh=mesh)
+
+
+# ------------------------------------------------------------------- remat
+def maybe_remat(fn: Callable, policy: str) -> Callable:
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "full":
+        return jax.checkpoint(fn)
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def param_count(tree) -> int:
+    """Exact count from an abstract/concrete parameter tree."""
+    leaves = jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, Desc))
+    total = 0
+    for leaf in leaves:
+        shape = leaf.shape
+        total += int(np.prod(shape)) if shape else 1
+    return total

@@ -1,0 +1,231 @@
+"""Encoder-decoder model (SeamlessM4T-medium backbone).
+
+The audio frontend is a stub: the encoder consumes precomputed frame
+embeddings (B, S_enc, d_model). Encoder: bidirectional self-attention;
+decoder: causal self-attention + cross-attention into encoder memory.
+Decode caches both the decoder self-KV and the (fixed) cross-KV projected
+once from the encoder output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import blocks
+from .common import AxisRules, Desc, maybe_remat, stack_tree
+from .losses import chunked_cross_entropy
+
+
+def _enc_layer_desc(cfg: ModelConfig) -> dict:
+    return {
+        "attn": blocks.attention_desc(cfg),
+        "ffn": blocks.ffn_desc(cfg),
+        "ln1": Desc((cfg.d_model,), (None,), init="ones"),
+        "ln2": Desc((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+def _dec_layer_desc(cfg: ModelConfig) -> dict:
+    return {
+        "self": blocks.attention_desc(cfg),
+        "cross": blocks.attention_desc(cfg, cross=True),
+        "ffn": blocks.ffn_desc(cfg),
+        "ln1": Desc((cfg.d_model,), (None,), init="ones"),
+        "ln2": Desc((cfg.d_model,), (None,), init="ones"),
+        "ln3": Desc((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_dec = cfg.n_dec_layers or cfg.n_layers
+
+    def param_desc(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "lm_head": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "ln_enc": Desc((cfg.d_model,), (None,), init="ones"),
+            "ln_dec": Desc((cfg.d_model,), (None,), init="ones"),
+            "enc_layers": stack_tree(_enc_layer_desc(cfg), cfg.n_layers),
+            "dec_layers": stack_tree(_dec_layer_desc(cfg), self.n_dec),
+        }
+
+    # ---------------------------------------------------------------- encode
+    def encode(self, params, frames, rules: AxisRules):
+        cfg = self.cfg
+        x = rules.constrain(frames.astype(jnp.bfloat16), "dp", None, None)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cos, sin = blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta)
+
+        def body(carry, lp):
+            h = blocks.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            q, k, v = blocks.qkv_project(h, lp["attn"], cfg, rules)
+            q = blocks.apply_rope(q, cos, sin)
+            k = blocks.apply_rope(k, cos, sin)
+            attn = blocks.blockwise_attention(
+                q, k, v, q_positions=positions, kv_positions=positions,
+                causal=False, window=None, chunk=cfg.attn_chunk, rules=rules)
+            x2 = carry + blocks.attn_out(attn, lp["attn"], rules)
+            h2 = blocks.rms_norm(x2, lp["ln2"], cfg.norm_eps)
+            return x2 + blocks.swiglu_ffn(h2, lp["ffn"], rules), None
+
+        body = maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return blocks.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    # ---------------------------------------------------------------- decode
+    def _dec_layer(self, carry, lp, memory, cos, sin, positions, rules):
+        cfg = self.cfg
+        h = blocks.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(h, lp["self"], cfg, rules)
+        q = blocks.apply_rope(q, cos, sin)
+        k = blocks.apply_rope(k, cos, sin)
+        attn = blocks.blockwise_attention(
+            q, k, v, q_positions=positions, kv_positions=positions,
+            causal=True, window=None, chunk=cfg.attn_chunk, rules=rules)
+        x = carry + blocks.attn_out(attn, lp["self"], rules)
+        h = blocks.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        mem_pos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+        qc, kc, vc = blocks.qkv_project(h, lp["cross"], cfg, rules,
+                                        kv_x=memory)
+        cross = blocks.blockwise_attention(
+            qc, kc, vc, q_positions=positions, kv_positions=mem_pos,
+            causal=False, window=None, chunk=cfg.attn_chunk, rules=rules)
+        x = x + blocks.attn_out(cross, lp["cross"], rules)
+        h = blocks.rms_norm(x, lp["ln3"], cfg.norm_eps)
+        return x + blocks.swiglu_ffn(h, lp["ffn"], rules)
+
+    # ------------------------------------------------------------------ loss
+    def loss_fn(self, params, batch, rules: AxisRules) -> jax.Array:
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"], rules)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = rules.constrain(x, "dp", None, None)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cos, sin = blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta)
+
+        def body(carry, lp):
+            return self._dec_layer(carry, lp, memory, cos, sin, positions,
+                                   rules), None
+
+        body = maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        x = blocks.rms_norm(x, params["ln_dec"], cfg.norm_eps)
+        return chunked_cross_entropy(x, batch["labels"], params["lm_head"],
+                                     rules, chunk=cfg.ce_chunk)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch, rules: AxisRules,
+                pad_to: int | None = None):
+        """Encode + run decoder over the prompt, materializing caches."""
+        cfg = self.cfg
+        memory = self.encode(params, batch["frames"], rules)
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cos, sin = blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta)
+        mem_pos = jnp.arange(memory.shape[1], dtype=jnp.int32)
+
+        def body(carry, lp):
+            h = blocks.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            q, k, v = blocks.qkv_project(h, lp["self"], cfg, rules)
+            q = blocks.apply_rope(q, cos, sin)
+            k = blocks.apply_rope(k, cos, sin)
+            attn = blocks.blockwise_attention(
+                q, k, v, q_positions=positions, kv_positions=positions,
+                causal=True, window=None, chunk=cfg.attn_chunk, rules=rules)
+            x2 = carry + blocks.attn_out(attn, lp["self"], rules)
+            h2 = blocks.rms_norm(x2, lp["ln2"], cfg.norm_eps)
+            qc, kc, vc = blocks.qkv_project(h2, lp["cross"], cfg, rules,
+                                            kv_x=memory)
+            cross = blocks.blockwise_attention(
+                qc, kc, vc, q_positions=positions, kv_positions=mem_pos,
+                causal=False, window=None, chunk=cfg.attn_chunk, rules=rules)
+            x2 = x2 + blocks.attn_out(cross, lp["cross"], rules)
+            h3 = blocks.rms_norm(x2, lp["ln3"], cfg.norm_eps)
+            x2 = x2 + blocks.swiglu_ffn(h3, lp["ffn"], rules)
+            return x2, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                        kc.astype(jnp.bfloat16), vc.astype(jnp.bfloat16))
+
+        x, (ks, vs, kcs, vcs) = jax.lax.scan(body, x, params["dec_layers"])
+        x = blocks.rms_norm(x, params["ln_dec"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        kpos = jnp.broadcast_to(positions, (S,))
+        if pad_to is not None and pad_to > S:
+            pad = pad_to - S
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+        cache = {"k": ks, "v": vs, "cross_k": kcs, "cross_v": vcs,
+                 "kpos": kpos, "pos": jnp.int32(S)}
+        return logits, cache
+
+    def decode_step(self, params, cache, batch, rules: AxisRules):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B,1,D)
+        positions = pos[None].astype(jnp.int32)
+        cos, sin = blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta)
+        T = cache["k"].shape[2]
+        slot = jnp.minimum(pos, T - 1).astype(jnp.int32)
+        kpos = jax.lax.dynamic_update_index_in_dim(
+            cache["kpos"], pos.astype(cache["kpos"].dtype), slot, axis=0)
+        mem_pos = jnp.arange(cache["cross_k"].shape[2], dtype=jnp.int32)
+
+        def body(carry, xs):
+            lp, k_l, v_l, kc_l, vc_l = xs
+            h = blocks.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            q, k, v = blocks.qkv_project(h, lp["self"], cfg, rules)
+            q = blocks.apply_rope(q, cos, sin)
+            k = blocks.apply_rope(k, cos, sin)
+            k_l = jax.lax.dynamic_update_slice_in_dim(
+                k_l, k.astype(k_l.dtype), slot, axis=1)
+            v_l = jax.lax.dynamic_update_slice_in_dim(
+                v_l, v.astype(v_l.dtype), slot, axis=1)
+            attn = blocks.blockwise_attention(
+                q, k_l, v_l, q_positions=positions, kv_positions=kpos,
+                causal=True, window=None, chunk=cfg.attn_chunk, rules=rules)
+            x2 = carry + blocks.attn_out(attn, lp["self"], rules)
+            h2 = blocks.rms_norm(x2, lp["ln2"], cfg.norm_eps)
+            qc = jnp.einsum("bsd,dh->bsh", h2, lp["cross"]["wq"])
+            B = qc.shape[0]
+            qc = qc.reshape(B, 1, cfg.n_heads, cfg.dh)
+            cross = blocks.blockwise_attention(
+                qc, kc_l, vc_l, q_positions=positions, kv_positions=mem_pos,
+                causal=False, window=None, chunk=cfg.attn_chunk, rules=rules)
+            x2 = x2 + blocks.attn_out(cross, lp["cross"], rules)
+            h3 = blocks.rms_norm(x2, lp["ln3"], cfg.norm_eps)
+            x2 = x2 + blocks.swiglu_ffn(h3, lp["ffn"], rules)
+            return x2, (k_l, v_l)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        x = blocks.rms_norm(x, params["ln_dec"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        new_cache = dict(cache, k=ks, v=vs, kpos=kpos, pos=pos + 1)
+        return logits, new_cache
+
+    def cache_desc(self, batch: int, cache_len: int,
+                   enc_len: int = 4096) -> dict:
+        cfg = self.cfg
+        kv = (self.n_dec, batch, cache_len, cfg.n_kv, cfg.dh)
+        ckv = (self.n_dec, batch, enc_len, cfg.n_kv, cfg.dh)
+        axes = (None, "dp", "sp", None, None)
+        return {
+            "k": Desc(kv, axes, init="zeros"),
+            "v": Desc(kv, axes, init="zeros"),
+            "cross_k": Desc(ckv, axes, init="zeros"),
+            "cross_v": Desc(ckv, axes, init="zeros"),
+            "kpos": Desc((cache_len,), (None,), init="full", scale=-1,
+                         dtype=jnp.int32),
+            "pos": Desc((), (), init="zeros", dtype=jnp.int32),
+        }

@@ -1,0 +1,241 @@
+"""Jamba-style hybrid: attention : mamba = 1 : (P-1) interleave with MoE on
+every second layer [arXiv:2403.19887].
+
+The layer pattern repeats with period P = cfg.attn_every (slot P-1 is the
+attention layer; even slots dense FFN, odd slots MoE). Parameters for each
+slot are stacked over the n_layers/P periods and scanned, so the compiled
+HLO contains one period body regardless of depth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import blocks, mamba
+from .common import AxisRules, Desc, maybe_remat, stack_tree
+from .losses import chunked_cross_entropy
+
+
+class HybridModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.period = cfg.attn_every
+        assert cfg.n_layers % self.period == 0
+        self.n_periods = cfg.n_layers // self.period
+
+    def _slot_is_attn(self, slot: int) -> bool:
+        return slot == self.period - 1
+
+    def _slot_is_moe(self, slot: int) -> bool:
+        moe = self.cfg.moe
+        return moe is not None and slot % moe.every == moe.every - 1
+
+    def _slot_desc(self, slot: int) -> dict:
+        cfg = self.cfg
+        d: dict = {
+            "ln1": Desc((cfg.d_model,), (None,), init="ones"),
+            "ln2": Desc((cfg.d_model,), (None,), init="ones"),
+        }
+        if self._slot_is_attn(slot):
+            d["attn"] = blocks.attention_desc(cfg)
+        else:
+            d["mamba"] = mamba.mamba_desc(cfg)
+        if self._slot_is_moe(slot):
+            d["moe"] = blocks.moe_desc(cfg)
+        else:
+            d["ffn"] = blocks.ffn_desc(cfg)
+        return d
+
+    def param_desc(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "lm_head": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "ln_f": Desc((cfg.d_model,), (None,), init="ones"),
+            "periods": {
+                f"slot{i}": stack_tree(self._slot_desc(i), self.n_periods)
+                for i in range(self.period)},
+        }
+
+    # ---------------------------------------------------------------- mixers
+    def _slot_forward(self, x, slot, sp, cos, sin, positions, rules,
+                      cache_in=None, slot_ctx=None):
+        """One slot layer. Returns (x, new_slot_cache or None)."""
+        cfg = self.cfg
+        h = blocks.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        new_cache = None
+        if "attn" in sp:
+            if cache_in is None:                       # full-sequence
+                q, k, v = blocks.qkv_project(h, sp["attn"], cfg, rules)
+                q = blocks.apply_rope(q, cos, sin)
+                k = blocks.apply_rope(k, cos, sin)
+                attn = blocks.blockwise_attention(
+                    q, k, v, q_positions=positions, kv_positions=positions,
+                    causal=True, window=cfg.swa, chunk=cfg.attn_chunk,
+                    rules=rules)
+                new_cache = {"k": k.astype(jnp.bfloat16),
+                             "v": v.astype(jnp.bfloat16)}
+            else:                                      # one-token decode
+                slot_idx, kpos = slot_ctx
+                q, k, v = blocks.qkv_project(h, sp["attn"], cfg, rules)
+                q = blocks.apply_rope(q, cos, sin)
+                k = blocks.apply_rope(k, cos, sin)
+                k_l = jax.lax.dynamic_update_slice_in_dim(
+                    cache_in["k"], k.astype(cache_in["k"].dtype), slot_idx,
+                    axis=1)
+                v_l = jax.lax.dynamic_update_slice_in_dim(
+                    cache_in["v"], v.astype(cache_in["v"].dtype), slot_idx,
+                    axis=1)
+                attn = blocks.blockwise_attention(
+                    q, k_l, v_l, q_positions=positions, kv_positions=kpos,
+                    causal=True, window=cfg.swa, chunk=cfg.attn_chunk,
+                    rules=rules)
+                new_cache = {"k": k_l, "v": v_l}
+            x = x + blocks.attn_out(attn, sp["attn"], rules)
+        else:
+            if cache_in is None:
+                out, h_fin = mamba.mamba_forward(h, sp["mamba"], cfg, rules)
+                new_cache = {"h": h_fin,
+                             "conv": _conv_tail(h, sp, cfg)}
+            else:
+                out, new_cache = mamba.mamba_decode_step(
+                    h, sp["mamba"], cfg, rules, cache_in)
+            x = x + out
+        h2 = blocks.rms_norm(x, sp["ln2"], cfg.norm_eps)
+        if "moe" in sp:
+            x = x + blocks.moe_ffn(h2, sp["moe"], cfg, rules)
+        else:
+            x = x + blocks.swiglu_ffn(h2, sp["ffn"], rules)
+        return x, new_cache
+
+    # ------------------------------------------------------------------ loss
+    def loss_fn(self, params, batch, rules: AxisRules) -> jax.Array:
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        x = rules.constrain(x, "dp", None, None)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cos, sin = blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta)
+
+        def body(carry, period_params):
+            y = carry
+            for i in range(self.period):
+                y, _ = self._slot_forward(
+                    y, i, period_params[f"slot{i}"], cos, sin, positions,
+                    rules)
+            return y, None
+
+        body = maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["periods"])
+        x = blocks.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return chunked_cross_entropy(x, batch["labels"], params["lm_head"],
+                                     rules, chunk=cfg.ce_chunk)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch, rules: AxisRules,
+                pad_to: int | None = None):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+        cos, sin = blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta)
+
+        def body(carry, period_params):
+            y = carry
+            caches = {}
+            for i in range(self.period):
+                y, c = self._slot_forward(
+                    y, i, period_params[f"slot{i}"], cos, sin, positions,
+                    rules)
+                caches[f"slot{i}"] = c
+            return y, caches
+
+        x, caches = jax.lax.scan(body, x, params["periods"])
+        x = blocks.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        kpos = jnp.broadcast_to(positions, (S,))
+        if pad_to is not None and pad_to > S:
+            pad = pad_to - S
+            attn_slot = f"slot{self.period - 1}"
+            for key in ("k", "v"):
+                caches[attn_slot][key] = jnp.pad(
+                    caches[attn_slot][key],
+                    ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+        cache = {"slots": caches, "kpos": kpos, "pos": jnp.int32(S)}
+        return logits, cache
+
+    # ---------------------------------------------------------------- decode
+    def decode_step(self, params, cache, batch, rules: AxisRules):
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        positions = pos[None].astype(jnp.int32)
+        cos, sin = blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta)
+        attn_slot = f"slot{self.period - 1}"
+        T = cache["slots"][attn_slot]["k"].shape[2]
+        if cfg.swa:
+            slot_idx = (pos % T).astype(jnp.int32)
+        else:
+            slot_idx = jnp.minimum(pos, T - 1).astype(jnp.int32)
+        kpos = jax.lax.dynamic_update_index_in_dim(
+            cache["kpos"], pos.astype(cache["kpos"].dtype), slot_idx, axis=0)
+
+        def body(carry, xs):
+            period_params, period_cache = xs
+            y = carry
+            new_caches = {}
+            for i in range(self.period):
+                y, c = self._slot_forward(
+                    y, i, period_params[f"slot{i}"], cos, sin, positions,
+                    rules, cache_in=period_cache[f"slot{i}"],
+                    slot_ctx=(slot_idx, kpos))
+                new_caches[f"slot{i}"] = c
+            return y, new_caches
+
+        x, new_slots = jax.lax.scan(body, x,
+                                    (params["periods"], cache["slots"]))
+        x = blocks.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        new_cache = {"slots": new_slots, "kpos": kpos, "pos": pos + 1}
+        return logits, new_cache
+
+    # ------------------------------------------------------------ cache spec
+    def cache_desc(self, batch: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        T = min(cache_len, cfg.swa) if cfg.swa else cache_len
+        n = self.n_periods
+        slots = {}
+        for i in range(self.period):
+            if self._slot_is_attn(i):
+                kv = (n, batch, T, cfg.n_kv, cfg.dh)
+                slots[f"slot{i}"] = {
+                    "k": Desc(kv, (None, "dp", "sp", None, None),
+                              init="zeros"),
+                    "v": Desc(kv, (None, "dp", "sp", None, None),
+                              init="zeros"),
+                }
+            else:
+                base = mamba.mamba_state_desc(cfg, batch)
+                slots[f"slot{i}"] = {
+                    k: Desc((n,) + d.shape, (None,) + d.axes, init=d.init,
+                            dtype=d.dtype, scale=d.scale)
+                    for k, d in base.items()}
+        return {
+            "slots": slots,
+            "kpos": Desc((T,), (None,), init="full", scale=-1,
+                         dtype=jnp.int32),
+            "pos": Desc((), (), init="zeros", dtype=jnp.int32),
+        }
+
+
+def _conv_tail(h: jax.Array, sp: dict, cfg: ModelConfig) -> jax.Array:
+    """Last (d_conv - 1) pre-conv inputs, to seed decode after prefill."""
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    x_in = jnp.einsum("bsd,de->bse", h, sp["mamba"]["in_proj"])[..., :di]
+    return x_in[:, -(m.d_conv - 1):, :]

@@ -1,0 +1,97 @@
+"""Shard-friendly language-model loss.
+
+Two rules learned from the 256-device dry-run prototype:
+  1. never `take_along_axis` into a vocab-sharded logits tensor (forces an
+     all-gather of (B, S, V) — measured 3.16x HLO-flops waste);
+  2. never materialize full (B, S, V) float32 logits at all — the final
+     projection + softmax-CE is computed blockwise over the sequence, so
+     peak memory is (B, chunk, V/tp) and the lm_head matmul stays sharded.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import AxisRules
+
+
+@jax.custom_vjp
+def _ce_matmul_bf16grad(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Logits projection with fp32 accumulation but bf16 GRADIENTS.
+
+    Without this, the fp32 logits cotangent propagates through the
+    ENTIRE backward pass — every activation-grad buffer and every
+    weight-grad all-reduce runs at fp32 (measured: per-layer fused grad
+    all-reduces of 5.2 GB instead of 2.6 GB at qwen1.5-110b scale).
+    Standard mixed-precision practice; enabled by the opt variant so the
+    recorded baseline stays paper-faithful-naive.
+    """
+    return jnp.einsum("bcd,vd->bcv", x, w,
+                      preferred_element_type=jnp.float32)
+
+
+def _ce_mm_fwd(x, w):
+    return _ce_matmul_bf16grad(x, w), (x, w)
+
+
+def _ce_mm_bwd(res, g):
+    x, w = res
+    gb = g.astype(jnp.bfloat16)
+    dx = jnp.einsum("bcv,vd->bcd", gb, w)
+    dw = jnp.einsum("bcd,bcv->vd", x, gb)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_ce_matmul_bf16grad.defvjp(_ce_mm_fwd, _ce_mm_bwd)
+
+_BF16_GRAD = [False]
+
+
+def set_bf16_grad_barrier(enabled: bool) -> None:
+    _BF16_GRAD[0] = bool(enabled)
+
+
+def _ce_block(x_c: jax.Array, labels_c: jax.Array, lm_head: jax.Array,
+              rules: AxisRules) -> jax.Array:
+    """x_c: (B, c, D); labels_c: (B, c); lm_head: (V, D) vocab-sharded."""
+    if _BF16_GRAD[0]:
+        logits = _ce_matmul_bf16grad(x_c, lm_head)
+    else:
+        logits = jnp.einsum("bcd,vd->bcv", x_c, lm_head,
+                            preferred_element_type=jnp.float32)
+    logits = rules.constrain(logits, "dp", None, "tp")
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    # label logit via iota-compare (sharded-reduce, no gather)
+    V = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+    ll = jnp.sum(jnp.where(iota == labels_c[..., None], logits, 0.0), axis=-1)
+    valid = labels_c >= 0
+    return jnp.sum(jnp.where(valid, lse - ll, 0.0)), jnp.sum(valid)
+
+
+def chunked_cross_entropy(x: jax.Array, labels: jax.Array, lm_head: jax.Array,
+                          rules: AxisRules, chunk: int = 512) -> jax.Array:
+    """Mean next-token CE from final hidden states, blockwise over S.
+
+    x: (B, S, D) final hidden states; labels: (B, S) with -1 = ignore;
+    lm_head: (V, D). Full logits are never materialized.
+    """
+    B, S, D = x.shape
+    if S <= chunk:
+        total, count = _ce_block(x, labels, lm_head, rules)
+        return total / jnp.maximum(count, 1)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    x_r = jnp.moveaxis(x.reshape(B, n, chunk, D), 1, 0)
+    l_r = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    def body(carry, xs):
+        total, count = carry
+        t, c = _ce_block(xs[0], xs[1], lm_head, rules)
+        return (total + t, count + c), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                     (x_r, l_r))
+    return total / jnp.maximum(count, 1)

@@ -1,0 +1,160 @@
+"""Mamba (S6) selective-state-space block [arXiv:2312.00752], used by the
+Jamba hybrid architecture.
+
+Training uses a two-level chunked scan (sequential over chunks, parallel
+within batch/heads; depth c + S/c instead of S) — the same decomposition
+the Pallas `kernels/ssm` kernel implements on TPU. Decoding carries
+{conv buffer, ssm state} and costs O(1) per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .common import AxisRules, Desc
+
+
+def mamba_desc(cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    m = cfg.mamba
+    di, ds, dc = m.d_inner(D), m.d_state, m.d_conv
+    dt_rank = max(D // 16, 1)
+    return {
+        "in_proj": Desc((D, 2 * di), ("fsdp", "tp")),
+        "conv_w": Desc((dc, di), (None, "tp")),
+        "conv_b": Desc((di,), ("tp",), init="zeros"),
+        "x_proj": Desc((di, dt_rank + 2 * ds), ("tp", None)),
+        "dt_w": Desc((dt_rank, di), (None, "tp")),
+        "dt_b": Desc((di,), ("tp",), init="ones"),
+        "A_log": Desc((di, ds), ("tp", None), init="scaled", scale=0.5,
+                      dtype=jnp.float32),
+        "D": Desc((di,), ("tp",), init="ones", dtype=jnp.float32),
+        "out_proj": Desc((di, D), ("tp", "fsdp")),
+    }
+
+
+def _causal_dw_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, di); w: (dc, di)."""
+    dc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(dc))
+    return out + b
+
+
+def _ssm_inputs(x_act: jax.Array, p: dict, cfg: ModelConfig):
+    """Selective (input-dependent) SSM coefficients.
+
+    Returns a (B, S, di, ds) transition, b (B, S, di, ds) input, c (B, S, ds).
+    """
+    m = cfg.mamba
+    ds = m.d_state
+    dt_rank = p["dt_w"].shape[0]
+    proj = jnp.einsum("bsi,ir->bsr", x_act, p["x_proj"])
+    dt_raw, B_, C_ = (proj[..., :dt_rank], proj[..., dt_rank:dt_rank + ds],
+                      proj[..., dt_rank + ds:])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_w"]) + p["dt_b"]
+    ).astype(jnp.float32)                                     # (B, S, di)
+    A = -jnp.exp(p["A_log"])                                  # (di, ds)
+    a = jnp.exp(dt[..., None] * A)                            # (B, S, di, ds)
+    b = (dt[..., None] * B_[:, :, None, :].astype(jnp.float32)
+         * x_act[..., None].astype(jnp.float32))              # (B, S, di, ds)
+    return a, b, C_.astype(jnp.float32)
+
+
+def chunked_diag_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                      chunk: int) -> tuple[jax.Array, jax.Array]:
+    """h_t = a_t ⊙ h_{t-1} + b_t over axis 1, two-level chunked.
+
+    a, b: (B, S, ...); h0: (B, ...). Returns (h for every t, final h).
+    Sequential depth = chunk + S/chunk.
+    """
+    B, S = a.shape[:2]
+    if S % chunk:
+        chunk = S  # fall back to single chunk for odd smoke shapes
+    n = S // chunk
+    a_r = jnp.moveaxis(a.reshape((B, n, chunk) + a.shape[2:]), 1, 0)
+    b_r = jnp.moveaxis(b.reshape((B, n, chunk) + b.shape[2:]), 1, 0)
+
+    # level 1: within-chunk scan from zero state, all chunks in parallel
+    def inner(carry, xs):
+        a_t, b_t = xs
+        h = a_t * carry + b_t
+        return h, h
+
+    zero = jnp.zeros_like(b_r[:, :, 0])
+    _, h_part = jax.lax.scan(
+        lambda c, xs: inner(c, xs), zero,
+        (jnp.moveaxis(a_r, 2, 0), jnp.moveaxis(b_r, 2, 0)))
+    h_part = jnp.moveaxis(h_part, 0, 2)                  # (n, B, c, ...)
+    a_cum = jnp.cumprod(a_r, axis=2)                      # inclusive ∏ a
+
+    # level 2: chunk-boundary states h_init[c] (sequential over n chunks)
+    def outer(carry, xs):
+        a_tot, h_last = xs                               # (B, ...) each
+        new = a_tot * carry + h_last
+        return new, carry                                 # emit PRE-chunk state
+
+    _, h_init = jax.lax.scan(outer, h0, (a_cum[:, :, -1], h_part[:, :, -1]))
+    # combine: h[t] = h_part[t] + (∏_{u<=t} a) * h_init[chunk]
+    h_all = h_part + a_cum * h_init[:, :, None]
+    h_final = h_all[-1, :, -1]
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape((B, S) + a.shape[2:])
+    return h_all, h_final
+
+
+def mamba_forward(x: jax.Array, p: dict, cfg: ModelConfig, rules: AxisRules,
+                  h0: jax.Array | None = None,
+                  chunk: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba block. x: (B, S, D) → (out, final ssm state)."""
+    B, S, D = x.shape
+    m = cfg.mamba
+    di = m.d_inner(D)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = xz[..., :di], xz[..., di:]
+    x_in = rules.constrain(x_in, "dp", None, "tp")
+    x_conv = _causal_dw_conv(x_in, p["conv_w"], p["conv_b"])
+    x_act = jax.nn.silu(x_conv)
+    a, b, c = _ssm_inputs(x_act, p, cfg)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, m.d_state), jnp.float32)
+    h_all, h_final = chunked_diag_scan(a, b, h0, chunk)
+    y = jnp.einsum("bsin,bsn->bsi", h_all, c)
+    y = (y + p["D"] * x_act.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y * jax.nn.silu(z), p["out_proj"])
+    return rules.constrain(out, "dp", None, None), h_final
+
+
+def mamba_decode_step(x: jax.Array, p: dict, cfg: ModelConfig,
+                      rules: AxisRules, state: dict) -> tuple[jax.Array, dict]:
+    """One-token step. x: (B, 1, D); state: {conv: (B, dc-1, di),
+    h: (B, di, ds)}."""
+    B = x.shape[0]
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = xz[..., :di], xz[..., di:]
+    hist = jnp.concatenate([state["conv"], x_in], axis=1)   # (B, dc, di)
+    x_conv = jnp.einsum("bci,ci->bi", hist, p["conv_w"]) + p["conv_b"]
+    x_act = jax.nn.silu(x_conv)[:, None, :]                  # (B, 1, di)
+    a, b, c = _ssm_inputs(x_act, p, cfg)
+    h = a[:, 0] * state["h"] + b[:, 0]                       # (B, di, ds)
+    y = jnp.einsum("bin,bn->bi", h, c[:, 0])
+    y = (y + p["D"] * x_act[:, 0].astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y * jax.nn.silu(z[:, 0]), p["out_proj"])
+    new_state = {"conv": hist[:, 1:], "h": h}
+    return out[:, None, :], new_state
+
+
+def mamba_state_desc(cfg: ModelConfig, batch: int) -> dict:
+    m = cfg.mamba
+    di = m.d_inner(cfg.d_model)
+    return {
+        "conv": Desc((batch, m.d_conv - 1, di), ("dp", None, "tp"),
+                     init="zeros"),
+        "h": Desc((batch, di, m.d_state), ("dp", "tp", None), init="zeros",
+                  dtype=jnp.float32),
+    }

@@ -1,0 +1,214 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892]: attention-free LM with
+data-dependent per-channel decay.
+
+Time-mix: token-shift lerps with LoRA-produced data-dependent mixing,
+r/k/v/g projections, decay w_t = exp(-exp(w0 + lora(x))) ∈ (0,1), and the
+wkv linear recurrence over state S[h, i, j] (key-dim i, value-dim j):
+
+    out_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t ⊗ v_t
+
+Training uses a two-level chunked scan (depth c + S/c); decode is O(1) per
+token. The same chunk decomposition is what `kernels/rwkv` implements as a
+Pallas TPU kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import AxisRules, Desc
+
+LORA_MIX = 32
+LORA_W = 64
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def group_norm_heads(x: jax.Array, w: jax.Array, b: jax.Array, n_heads: int,
+                     eps: float = 1e-5) -> jax.Array:
+    """GroupNorm with one group per head over the flattened (H*dh) dim."""
+    shape = x.shape
+    xh = x.reshape(shape[:-1] + (n_heads, shape[-1] // n_heads))
+    x32 = xh.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    normed = ((x32 - mu) * jax.lax.rsqrt(var + eps)).reshape(shape)
+    return normed.astype(x.dtype) * w + b
+
+
+def rwkv_layer_desc(cfg: ModelConfig) -> dict:
+    D, F, H = cfg.d_model, cfg.d_ff, cfg.n_heads
+    dh = cfg.rwkv_head_dim
+    assert H * dh == D, (H, dh, D)
+    return {
+        "ln1_w": Desc((D,), (None,), init="ones"),
+        "ln1_b": Desc((D,), (None,), init="zeros"),
+        "ln2_w": Desc((D,), (None,), init="ones"),
+        "ln2_b": Desc((D,), (None,), init="zeros"),
+        # time-mix
+        "mu_x": Desc((D,), (None,), init="zeros"),
+        "mu_rkvgw": Desc((5, D), (None, None), init="zeros"),
+        "tm_w1": Desc((D, 5 * LORA_MIX), ("fsdp", None)),
+        "tm_w2": Desc((5, LORA_MIX, D), (None, None, "fsdp")),
+        "wr": Desc((D, D), ("fsdp", "tp")),
+        "wk": Desc((D, D), ("fsdp", "tp")),
+        "wv": Desc((D, D), ("fsdp", "tp")),
+        "wg": Desc((D, D), ("fsdp", "tp")),
+        "wo": Desc((D, D), ("tp", "fsdp")),
+        "w0": Desc((D,), (None,), init="scaled", scale=0.5),
+        "w1": Desc((D, LORA_W), ("fsdp", None)),
+        "w2": Desc((LORA_W, D), (None, "fsdp")),
+        "u": Desc((H, dh), (None, None), init="scaled", scale=0.5),
+        "lnx_w": Desc((D,), (None,), init="ones"),
+        "lnx_b": Desc((D,), (None,), init="zeros"),
+        # channel-mix
+        "cmu_k": Desc((D,), (None,), init="zeros"),
+        "cmu_r": Desc((D,), (None,), init="zeros"),
+        "ck": Desc((D, F), ("fsdp", "tp")),
+        "cv": Desc((F, D), ("tp", "fsdp")),
+        "cr": Desc((D, D), ("fsdp", "tp")),
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """x_{t-1} along axis 1; `prev` (B, D) seeds t=0 (decode / chunk carry)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _time_mix_inputs(x: jax.Array, xprev: jax.Array, p: dict,
+                     cfg: ModelConfig):
+    """Data-dependent token-shift lerps → (r, k, v, g, w, u)."""
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.rwkv_head_dim
+    dx = xprev - x
+    xxx = x + dx * p["mu_x"]
+    lora = jnp.tanh(jnp.einsum("bsd,dm->bsm", xxx, p["tm_w1"]))
+    lora = lora.reshape(B, S, 5, LORA_MIX)
+    deltas = jnp.einsum("bsfm,fmd->bsfd", lora, p["tm_w2"])   # (B,S,5,D)
+    mixed = x[:, :, None] + dx[:, :, None] * (p["mu_rkvgw"] + deltas)
+    xr, xk, xv, xg, xw = [mixed[:, :, i] for i in range(5)]
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    w_raw = p["w0"] + jnp.einsum(
+        "bsd,dl,le->bse", xw, p["w1"], p["w2"]).astype(jnp.float32)
+    logw = -jnp.exp(w_raw.astype(jnp.float32)).reshape(B, S, H, dh)  # log decay < 0
+    return r, k, v, g, logw
+
+
+def wkv_chunked(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+                u: jax.Array, s0: jax.Array, chunk: int = 64,
+                ) -> tuple[jax.Array, jax.Array]:
+    """Chunked wkv recurrence. r/k/v/logw: (B, S, H, dh); u: (H, dh);
+    s0: (B, H, dh, dh). Returns (out (B, S, H, dh), final state)."""
+    B, S, H, dh = r.shape
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    w = jnp.exp(logw)                                       # (B,S,H,dh)
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape((B, n, chunk) + a.shape[2:]), 1, 0)
+
+    rc, kc, vc, wc = map(to_chunks, (rf, kf, vf, w))        # (n,B,c,H,dh)
+
+    # level 1: intra-chunk scan from zero state (parallel over chunks)
+    def step(S_, xs):
+        r_t, k_t, v_t, w_t = xs                             # (n,B,H,dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (n,B,H,dh,dh)
+        out = jnp.einsum("nbhi,nbhij->nbhj", r_t,
+                         S_ + u[:, :, None] * kv)
+        S_new = w_t[..., :, None] * S_ + kv
+        return S_new, out
+
+    zero = jnp.zeros((n, B, H, dh, dh), jnp.float32)
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (rc, kc, vc, wc))
+    S_fin, out_part = jax.lax.scan(step, zero, xs)          # out: (c,n,B,H,dh)
+    out_part = jnp.moveaxis(out_part, 0, 2)                 # (n,B,c,H,dh)
+
+    # level 2: chunk-boundary states
+    w_tot = jnp.prod(wc, axis=2)                            # (n,B,H,dh)
+
+    def boundary(carry, xs):
+        w_t, s_last = xs
+        new = w_t[..., :, None] * carry + s_last
+        return new, carry                                    # emit pre-chunk
+
+    s_final, s_init = jax.lax.scan(boundary, s0, (w_tot, S_fin))
+
+    # inter-chunk contribution: r_t decayed by exclusive cumprod of w
+    w_excl = jnp.concatenate(
+        [jnp.ones_like(wc[:, :, :1]), jnp.cumprod(wc, axis=2)[:, :, :-1]],
+        axis=2)                                             # (n,B,c,H,dh)
+    out_inter = jnp.einsum("nbchi,nbhij->nbchj", rc * w_excl, s_init)
+    out = out_part + out_inter
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, H, dh)
+    return out.astype(r.dtype), s_final
+
+
+def rwkv_time_mix(x: jax.Array, p: dict, cfg: ModelConfig, rules: AxisRules,
+                  state: dict | None = None, chunk: int = 64,
+                  ) -> tuple[jax.Array, dict]:
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.rwkv_head_dim
+    prev = state["shift_t"] if state else None
+    s0 = state["S"] if state else jnp.zeros((B, H, dh, dh), jnp.float32)
+    xprev = _token_shift(x, prev)
+    r, k, v, g, logw = _time_mix_inputs(x, xprev, p, cfg)
+    out, s_fin = wkv_chunked(r, k, v, logw, p["u"].astype(jnp.float32),
+                             s0, chunk)
+    out = group_norm_heads(out.reshape(B, S, D), p["lnx_w"], p["lnx_b"], H)
+    out = jnp.einsum("bsd,de->bse", out * g, p["wo"])
+    new_state = {"shift_t": x[:, -1], "S": s_fin}
+    return rules.constrain(out, "dp", None, None), new_state
+
+
+def rwkv_channel_mix(x: jax.Array, p: dict, rules: AxisRules,
+                     state: dict | None = None) -> tuple[jax.Array, jax.Array]:
+    prev = state["shift_c"] if state else None
+    xprev = _token_shift(x, prev)
+    dx = xprev - x
+    xk = x + dx * p["cmu_k"]
+    xr = x + dx * p["cmu_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["ck"])))
+    k = rules.constrain(k, "dp", None, "tp")
+    val = jnp.einsum("bsf,fd->bsd", k, p["cv"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"]))
+    return rules.constrain(rgate * val, "dp", None, None), x[:, -1]
+
+
+def rwkv_layer(x: jax.Array, p: dict, cfg: ModelConfig, rules: AxisRules,
+               state: dict | None = None, chunk: int = 64,
+               ) -> tuple[jax.Array, dict]:
+    tm_in = layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    tm_out, tstate = rwkv_time_mix(tm_in, p, cfg, rules, state, chunk)
+    x = x + tm_out
+    cm_in = layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    cm_out, shift_c = rwkv_channel_mix(cm_in, p, rules, state)
+    x = x + cm_out
+    new_state = {"shift_t": tstate["shift_t"], "S": tstate["S"],
+                 "shift_c": shift_c}
+    return x, new_state
+
+
+def rwkv_state_desc(cfg: ModelConfig, batch: int) -> dict:
+    D, H, dh = cfg.d_model, cfg.n_heads, cfg.rwkv_head_dim
+    return {
+        "shift_t": Desc((batch, D), ("dp", None), init="zeros"),
+        "shift_c": Desc((batch, D), ("dp", None), init="zeros"),
+        "S": Desc((batch, H, dh, dh), ("dp", None, None, "tp"),
+                  init="zeros", dtype=jnp.float32),
+    }

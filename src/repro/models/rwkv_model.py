@@ -1,0 +1,90 @@
+"""RWKV-6 language model: embedding + scanned rwkv layers + head."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import AxisRules, Desc, maybe_remat, stack_tree
+from .losses import chunked_cross_entropy
+from .rwkv6 import layer_norm, rwkv_layer, rwkv_layer_desc, rwkv_state_desc
+
+
+class RWKVModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def param_desc(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "lm_head": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "ln0_w": Desc((cfg.d_model,), (None,), init="ones"),
+            "ln0_b": Desc((cfg.d_model,), (None,), init="zeros"),
+            "lnf_w": Desc((cfg.d_model,), (None,), init="ones"),
+            "lnf_b": Desc((cfg.d_model,), (None,), init="zeros"),
+            "layers": stack_tree(rwkv_layer_desc(cfg), cfg.n_layers),
+        }
+
+    def _embed(self, params, tokens, rules):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = layer_norm(x, params["ln0_w"], params["ln0_b"],
+                       self.cfg.norm_eps)
+        return rules.constrain(x, "dp", None, None)
+
+    def loss_fn(self, params, batch, rules: AxisRules) -> jax.Array:
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"], rules)
+
+        def body(carry, lp):
+            y, _state = rwkv_layer(carry, lp, cfg, rules)
+            return y, None
+
+        body = maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        x = layer_norm(x, params["lnf_w"], params["lnf_b"], cfg.norm_eps)
+        return chunked_cross_entropy(x, batch["labels"], params["lm_head"],
+                                     rules, chunk=cfg.ce_chunk)
+
+    def prefill(self, params, batch, rules: AxisRules):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"], rules)
+
+        def body(carry, lp):
+            y, state = rwkv_layer(carry, lp, cfg, rules)
+            return y, state
+
+        x, states = jax.lax.scan(body, x, params["layers"])
+        x = layer_norm(x, params["lnf_w"], params["lnf_b"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        cache = {"states": states, "pos": jnp.int32(batch["tokens"].shape[1])}
+        return logits, cache
+
+    def decode_step(self, params, cache, batch, rules: AxisRules):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"], rules)      # (B, 1, D)
+
+        def body(carry, xs):
+            lp, state = xs
+            y, new_state = rwkv_layer(carry, lp, cfg, rules, state=state)
+            return y, new_state
+
+        x, states = jax.lax.scan(body, x, (params["layers"],
+                                           cache["states"]))
+        x = layer_norm(x, params["lnf_w"], params["lnf_b"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        return logits, {"states": states, "pos": cache["pos"] + 1}
+
+    def cache_desc(self, batch: int, cache_len: int) -> dict:
+        del cache_len                         # constant-size state (the point)
+        cfg = self.cfg
+        base = rwkv_state_desc(cfg, batch)
+        return {
+            "states": {k: Desc((cfg.n_layers,) + d.shape, (None,) + d.axes,
+                               init=d.init, dtype=d.dtype, scale=d.scale)
+                       for k, d in base.items()},
+            "pos": Desc((), (), init="zeros", dtype=jnp.int32),
+        }

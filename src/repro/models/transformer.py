@@ -1,0 +1,261 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM archs.
+
+Layers are scanned (stacked parameters) so HLO size and compile time are
+depth-independent; each layer body is optionally rematerialized. The KV
+cache records absolute positions per slot, which uniformly supports full
+caches and sliding-window rolling buffers (mixtral long_500k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import blocks
+from .common import AxisRules, Desc, maybe_remat, stack_tree
+from .losses import chunked_cross_entropy
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, T, KV, dh) -> (int8 values, per-(b, t, kv) bf16 scales)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1) / 127.0 + 1e-9      # (B,T,KV)
+    x8 = jnp.clip(jnp.round(x32 / scale[..., None]),
+                  -127, 127).astype(jnp.int8)
+    return x8, scale.astype(jnp.bfloat16)
+
+
+def _layer_desc(cfg: ModelConfig) -> dict:
+    d = {
+        "attn": blocks.attention_desc(cfg),
+        "ln1": Desc((cfg.d_model,), (None,), init="ones"),
+        "ln2": Desc((cfg.d_model,), (None,), init="ones"),
+    }
+    if cfg.moe is not None and cfg.moe.every == 1:
+        d["moe"] = blocks.moe_desc(cfg)
+    else:
+        d["ffn"] = blocks.ffn_desc(cfg)
+    return d
+
+
+class TransformerModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ parameters
+    def param_desc(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "lm_head": Desc((cfg.vocab, cfg.d_model), ("tp", "fsdp")),
+            "ln_f": Desc((cfg.d_model,), (None,), init="ones"),
+            "layers": stack_tree(_layer_desc(cfg), cfg.n_layers),
+        }
+
+    # ----------------------------------------------------------------- embed
+    def _embed(self, params, batch, rules: AxisRules):
+        cfg = self.cfg
+        tok = batch["tokens"]
+        x = jnp.take(params["embed"], tok, axis=0)
+        if cfg.kind == "vlm":
+            # modality frontend stub: precomputed patch embeddings prepended
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            positions = batch["positions"]              # (B, S, 3) M-RoPE ids
+        else:
+            S = x.shape[1]
+            positions = jnp.arange(S, dtype=jnp.int32)
+        x = rules.constrain(x, "dp", None, None)
+        return x, positions
+
+    def _cos_sin(self, positions):
+        cfg = self.cfg
+        sections = cfg.mrope_sections if cfg.rope == "mrope" else None
+        return blocks.rope_cos_sin(positions, cfg.dh, cfg.rope_theta,
+                                   sections)
+
+    # ---------------------------------------------------------------- layers
+    def _layer(self, x, lp, cos, sin, q_pos, rules):
+        cfg = self.cfg
+        h = blocks.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = blocks.qkv_project(h, lp["attn"], cfg, rules)
+        q = blocks.apply_rope(q, cos, sin)
+        k = blocks.apply_rope(k, cos, sin)
+        attn = blocks.blockwise_attention(
+            q, k, v, q_positions=q_pos, kv_positions=q_pos,
+            causal=True, window=cfg.swa, chunk=cfg.attn_chunk, rules=rules)
+        x = x + blocks.attn_out(attn, lp["attn"], rules)
+        h = blocks.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            x = x + blocks.moe_ffn(h, lp["moe"], cfg, rules)
+        else:
+            x = x + blocks.swiglu_ffn(h, lp["ffn"], rules)
+        return x
+
+    def _backbone(self, params, x, positions, rules):
+        cfg = self.cfg
+        cos, sin = self._cos_sin(positions)
+        q_pos = positions[..., 0] if cfg.rope == "mrope" else positions
+
+        def body(carry, lp):
+            return self._layer(carry, lp, cos, sin, q_pos, rules), None
+
+        body = maybe_remat(body, cfg.remat)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return blocks.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    # ------------------------------------------------------------------ loss
+    def loss_fn(self, params, batch, rules: AxisRules) -> jax.Array:
+        x, positions = self._embed(params, batch, rules)
+        x = self._backbone(params, x, positions, rules)
+        return chunked_cross_entropy(x, batch["labels"], params["lm_head"],
+                                     rules, chunk=self.cfg.ce_chunk)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params, batch, rules: AxisRules,
+                pad_to: int | None = None):
+        """Full-prompt forward; returns (last-position logits, KV cache).
+
+        `pad_to` grows the cache beyond the prompt so decode_step has
+        room (empty slots carry kpos = -1 and are masked out)."""
+        cfg = self.cfg
+        x, positions = self._embed(params, batch, rules)
+        cos, sin = self._cos_sin(positions)
+        q_pos = positions[..., 0] if cfg.rope == "mrope" else positions
+
+        def body(carry, lp):
+            h = blocks.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            q, k, v = blocks.qkv_project(h, lp["attn"], cfg, rules)
+            q = blocks.apply_rope(q, cos, sin)
+            k = blocks.apply_rope(k, cos, sin)
+            attn = blocks.blockwise_attention(
+                q, k, v, q_positions=q_pos, kv_positions=q_pos,
+                causal=True, window=cfg.swa, chunk=cfg.attn_chunk,
+                rules=rules)
+            x2 = carry + blocks.attn_out(attn, lp["attn"], rules)
+            h2 = blocks.rms_norm(x2, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                x2 = x2 + blocks.moe_ffn(h2, lp["moe"], cfg, rules)
+            else:
+                x2 = x2 + blocks.swiglu_ffn(h2, lp["ffn"], rules)
+            if cfg.kv_quant:
+                k8, ksc = _quantize_kv(k)
+                v8, vsc = _quantize_kv(v)
+                return x2, (k8, v8, ksc, vsc)
+            return x2, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                        jnp.zeros((), jnp.bfloat16),
+                        jnp.zeros((), jnp.bfloat16))
+
+        x, (ks, vs, kscs, vscs) = jax.lax.scan(body, x, params["layers"])
+        x = blocks.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        S = x.shape[1]
+        kpos = (positions[0, :, 0] if cfg.rope == "mrope"
+                else jnp.broadcast_to(positions, (S,)))
+        if pad_to is not None and pad_to > S:
+            pad = pad_to - S
+            ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            if cfg.kv_quant:
+                kscs = jnp.pad(kscs, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                vscs = jnp.pad(vscs, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+        cache = {"k": ks, "v": vs, "kpos": kpos, "pos": jnp.int32(S)}
+        if cfg.kv_quant:
+            cache["k_scale"], cache["v_scale"] = kscs, vscs
+        return logits, cache
+
+    # ---------------------------------------------------------------- decode
+    def decode_step(self, params, cache, batch, rules: AxisRules):
+        """One token for every sequence in the batch against the cache."""
+        cfg = self.cfg
+        pos = cache["pos"]                               # scalar int32
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B,1,D)
+        if cfg.kind == "vlm":
+            positions = batch["positions"]               # (B, 1, 3)
+        else:
+            positions = pos[None].astype(jnp.int32)      # (1,)
+        cos, sin = self._cos_sin(positions)
+        T = cache["k"].shape[2]
+        if cfg.swa:                     # rolling buffer (mixtral long_500k)
+            slot = (pos % T).astype(jnp.int32)
+        else:
+            slot = jnp.minimum(pos, T - 1).astype(jnp.int32)
+        kpos = jax.lax.dynamic_update_index_in_dim(
+            cache["kpos"], pos.astype(cache["kpos"].dtype), slot, axis=0)
+        q_pos = positions[..., 0] if cfg.rope == "mrope" else positions
+
+        def body(carry, xs):
+            if cfg.kv_quant:
+                lp, k_l, v_l, ks_l, vs_l = xs
+            else:
+                lp, k_l, v_l = xs
+                ks_l = vs_l = None
+            h = blocks.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+            q, k, v = blocks.qkv_project(h, lp["attn"], cfg, rules)
+            q = blocks.apply_rope(q, cos, sin)
+            k = blocks.apply_rope(k, cos, sin)
+            if cfg.kv_quant:
+                k8, ksc = _quantize_kv(k)
+                v8, vsc = _quantize_kv(v)
+                k, v = k8, v8
+                ks_l = jax.lax.dynamic_update_slice_in_dim(
+                    ks_l, ksc, slot, axis=1)
+                vs_l = jax.lax.dynamic_update_slice_in_dim(
+                    vs_l, vsc, slot, axis=1)
+            k_l = jax.lax.dynamic_update_slice_in_dim(
+                k_l, k.astype(k_l.dtype), slot, axis=1)
+            v_l = jax.lax.dynamic_update_slice_in_dim(
+                v_l, v.astype(v_l.dtype), slot, axis=1)
+            attn = blocks.blockwise_attention(
+                q, k_l, v_l, q_positions=q_pos, kv_positions=kpos,
+                causal=True, window=cfg.swa, chunk=cfg.attn_chunk,
+                rules=rules, k_scale=ks_l, v_scale=vs_l)
+            x2 = carry + blocks.attn_out(attn, lp["attn"], rules)
+            h2 = blocks.rms_norm(x2, lp["ln2"], cfg.norm_eps)
+            if "moe" in lp:
+                x2 = x2 + blocks.moe_ffn(h2, lp["moe"], cfg, rules)
+            else:
+                x2 = x2 + blocks.swiglu_ffn(h2, lp["ffn"], rules)
+            if cfg.kv_quant:
+                return x2, (k_l, v_l, ks_l, vs_l)
+            return x2, (k_l, v_l)
+
+        if cfg.kv_quant:
+            x, (ks, vs, kscs, vscs) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]))
+        else:
+            x, (ks, vs) = jax.lax.scan(body, x, (params["layers"],
+                                                 cache["k"], cache["v"]))
+        x = blocks.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                            params["lm_head"]).astype(jnp.float32)
+        new_cache = {"k": ks, "v": vs, "kpos": kpos, "pos": pos + 1}
+        if cfg.kv_quant:
+            new_cache["k_scale"], new_cache["v_scale"] = kscs, vscs
+        return logits, new_cache
+
+    # ------------------------------------------------------------ cache spec
+    def cache_desc(self, batch: int, cache_len: int) -> dict:
+        cfg = self.cfg
+        T = min(cache_len, cfg.swa) if cfg.swa else cache_len
+        kv_shape = (cfg.n_layers, batch, T, cfg.n_kv, cfg.dh)
+        kv_axes = (None, "dp", "sp", None, None)
+        kv_dtype = jnp.int8 if cfg.kv_quant else jnp.bfloat16
+        out = {
+            "k": Desc(kv_shape, kv_axes, init="zeros", dtype=kv_dtype),
+            "v": Desc(kv_shape, kv_axes, init="zeros", dtype=kv_dtype),
+            # -1 marks an empty slot (masked out by blockwise_attention)
+            "kpos": Desc((T,), (None,), init="full", scale=-1,
+                         dtype=jnp.int32),
+            "pos": Desc((), (), init="zeros", dtype=jnp.int32),
+        }
+        if cfg.kv_quant:
+            sc_shape = (cfg.n_layers, batch, T, cfg.n_kv)
+            out["k_scale"] = Desc(sc_shape, kv_axes[:4], init="ones",
+                                  dtype=jnp.bfloat16)
+            out["v_scale"] = Desc(sc_shape, kv_axes[:4], init="ones",
+                                  dtype=jnp.bfloat16)
+        return out

@@ -1,0 +1,6 @@
+"""Serving: batched keyword search (the paper's app) + RAG decoding."""
+
+from .rag import RAGPipeline, RAGResult
+from .search_service import LatencyStats, SearchService
+
+__all__ = ["RAGPipeline", "RAGResult", "LatencyStats", "SearchService"]

@@ -1,0 +1,67 @@
+"""Retrieval-augmented decoding: Airphant feeds document context to an LM.
+
+The searcher resolves a keyword query in two parallel-fetch rounds; the
+retrieved documents are tokenized into the prompt; the LM prefills once
+and decodes with its KV cache. This is the integration point between the
+paper's contribution (storage-side) and the serving substrate (TPU-side).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.tokenizer import HashTokenizer
+from ..index.query import Query
+from ..models.common import AxisRules, NULL_RULES
+from .search_service import SearchService
+
+
+@dataclass
+class RAGResult:
+    query: str
+    retrieved: list[str]
+    tokens: np.ndarray
+    retrieval_ms: float
+    n_decoded: int
+
+
+class RAGPipeline:
+    def __init__(self, service: SearchService, model, params,
+                 vocab_size: int, rules: AxisRules = NULL_RULES,
+                 max_context: int = 192) -> None:
+        self.service = service
+        self.model = model
+        self.params = params
+        self.rules = rules
+        self.tokenizer = HashTokenizer(vocab_size)
+        self.max_context = max_context
+        self._prefill = jax.jit(
+            lambda p, b, pad_to: model.prefill(p, b, rules, pad_to=pad_to),
+            static_argnums=(2,))
+        self._decode = jax.jit(
+            lambda p, c, b: model.decode_step(p, c, b, rules))
+
+    def generate(self, query: Query | str, top_k_docs: int = 3,
+                 max_new_tokens: int = 16, greedy: bool = True) -> RAGResult:
+        result = self.service.search(query, top_k=top_k_docs)
+        context = " ".join(result.texts)[: self.max_context * 8]
+        ids = self.tokenizer.encode(context)[: self.max_context - 1]
+        ids = np.concatenate([[HashTokenizer.BOS], ids]).astype(np.int32)
+        batch = {"tokens": jnp.asarray(ids[None, :])}
+        pad_to = len(ids) + max_new_tokens
+        logits, cache = self._prefill(self.params, batch, pad_to)
+        out = []
+        for _ in range(max_new_tokens):
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(int(tok[0]))
+            logits, cache = self._decode(self.params, cache,
+                                         {"tokens": tok[:, None]})
+        return RAGResult(
+            query=str(query), retrieved=result.texts,
+            tokens=np.asarray(out, dtype=np.int32),
+            retrieval_ms=result.stats.total_s * 1e3,
+            n_decoded=len(out))

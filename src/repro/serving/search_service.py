@@ -1,0 +1,83 @@
+"""Batched keyword-search serving — the paper's own application.
+
+A Searcher instance is ~2 MB of MHT state: it boots from one header read
+and serves queries statelessly (FaaS-style, paper §III-A). The service
+wraps one Searcher per corpus with latency accounting that mirrors the
+paper's benchmarks (mean / p99 / wait-vs-download split).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..index.query import Query, parse
+from ..index.searcher import Searcher
+from ..storage.simcloud import SimCloudStore
+
+
+@dataclass
+class LatencyStats:
+    samples_s: list = field(default_factory=list)
+    wait_s: list = field(default_factory=list)
+    download_s: list = field(default_factory=list)
+    false_positives: int = 0
+    results: int = 0
+
+    def observe(self, stats) -> None:
+        self.samples_s.append(stats.total_s)
+        self.wait_s.append(stats.lookup.wait_s + stats.docs.wait_s)
+        self.download_s.append(stats.lookup.download_s
+                               + stats.docs.download_s)
+        self.false_positives += stats.n_false_positives
+        self.results += stats.n_results
+
+    def summary(self) -> dict:
+        arr = np.asarray(self.samples_s)
+        return {
+            "n": len(arr),
+            "mean_ms": float(arr.mean() * 1e3) if len(arr) else 0.0,
+            "p50_ms": float(np.percentile(arr, 50) * 1e3) if len(arr) else 0.0,
+            "p99_ms": float(np.percentile(arr, 99) * 1e3) if len(arr) else 0.0,
+            "wait_ms": float(np.mean(self.wait_s) * 1e3) if len(arr) else 0.0,
+            "download_ms": float(np.mean(self.download_s) * 1e3)
+            if len(arr) else 0.0,
+            "avg_false_positives": self.false_positives / max(len(arr), 1),
+        }
+
+
+class SearchService:
+    def __init__(self, cloud: SimCloudStore, index_prefix: str,
+                 hedge: bool = False, cache_size: int = 0) -> None:
+        self.searcher = Searcher(cloud, index_prefix)
+        self.hedge = hedge
+        self.stats = LatencyStats()
+        # query cache (paper §IV-A remark: memoization bounds the worst
+        # case where a few irrelevant hot words dominate the distribution)
+        self._cache_size = cache_size
+        self._cache: dict = {}
+        self.cache_hits = 0
+
+    def search(self, query: Query | str, top_k: int | None = None):
+        if isinstance(query, str):
+            query = parse(query)
+        key = (query, top_k)
+        if self._cache_size and key in self._cache:
+            self.cache_hits += 1
+            return self._cache[key]
+        result = self.searcher.query(query, top_k=top_k, hedge=self.hedge)
+        self.stats.observe(result.stats)
+        if self._cache_size:
+            if len(self._cache) >= self._cache_size:    # FIFO eviction
+                self._cache.pop(next(iter(self._cache)))
+            self._cache[key] = result
+        return result
+
+    def search_regex(self, pattern: str, ngram: int = 3):
+        result = self.searcher.regex_query(pattern, ngram=ngram)
+        self.stats.observe(result.stats)
+        return result
+
+    def search_batch(self, queries, top_k: int | None = None):
+        return [self.search(q, top_k=top_k) for q in queries]

@@ -1,0 +1,7 @@
+"""Separation of compute and storage: blob stores + simulated cloud."""
+
+from .blobstore import BlobStore, InMemoryBlobStore, LocalBlobStore, RangeRequest
+from .simcloud import REGIONS, FetchStats, NetworkModel, SimCloudStore
+
+__all__ = ["BlobStore", "InMemoryBlobStore", "LocalBlobStore", "RangeRequest",
+           "REGIONS", "FetchStats", "NetworkModel", "SimCloudStore"]

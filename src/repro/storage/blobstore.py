@@ -1,0 +1,147 @@
+"""Blob-store abstraction: the `separation of compute and storage` substrate.
+
+Everything Airphant persists — superpost blocks, index headers, tokenized
+corpus shards, model checkpoints — goes through this interface. The two
+implementations here are backed by local disk and by memory; `simcloud.py`
+wraps either with a cloud-latency model so benchmarks see GCS/S3-like
+behaviour (affine latency, random range reads) without a network.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RangeRequest:
+    """A single random read: fetch `length` bytes of `blob` at `offset`.
+
+    `length=-1` means read to the end of the blob. This mirrors the
+    HTTP Range reads all major cloud vendors support (paper §III-A).
+    """
+
+    blob: str
+    offset: int = 0
+    length: int = -1
+
+
+class BlobStore(ABC):
+    """Object storage: named immutable blobs with random range reads."""
+
+    @abstractmethod
+    def put(self, name: str, data: bytes) -> None: ...
+
+    @abstractmethod
+    def get_range(self, req: RangeRequest) -> bytes: ...
+
+    @abstractmethod
+    def size(self, name: str) -> int: ...
+
+    @abstractmethod
+    def list(self, prefix: str = "") -> list[str]: ...
+
+    @abstractmethod
+    def delete(self, name: str) -> None: ...
+
+    def get(self, name: str) -> bytes:
+        return self.get_range(RangeRequest(name))
+
+    def exists(self, name: str) -> bool:
+        return name in self.list(name)
+
+    def total_bytes(self, prefix: str = "") -> int:
+        return sum(self.size(n) for n in self.list(prefix))
+
+
+class InMemoryBlobStore(BlobStore):
+    """Dict-backed store. Thread-safe; used by unit tests and simcloud."""
+
+    def __init__(self) -> None:
+        self._blobs: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, name: str, data: bytes) -> None:
+        with self._lock:
+            self._blobs[name] = bytes(data)
+
+    def get_range(self, req: RangeRequest) -> bytes:
+        with self._lock:
+            data = self._blobs[req.blob]
+        if req.length < 0:
+            return data[req.offset:]
+        end = req.offset + req.length
+        if end > len(data):
+            raise ValueError(
+                f"range [{req.offset}, {end}) out of bounds for blob "
+                f"{req.blob!r} of size {len(data)}")
+        return data[req.offset:end]
+
+    def size(self, name: str) -> int:
+        with self._lock:
+            return len(self._blobs[name])
+
+    def list(self, prefix: str = "") -> list[str]:
+        with self._lock:
+            return sorted(n for n in self._blobs if n.startswith(prefix))
+
+    def delete(self, name: str) -> None:
+        with self._lock:
+            self._blobs.pop(name, None)
+
+
+class LocalBlobStore(BlobStore):
+    """Directory-backed store; blob names map to file paths.
+
+    Writes are atomic (tmp + rename) so a crashed writer never leaves a
+    half-written checkpoint or index block visible — the property the
+    checkpoint manager's fault-tolerance relies on.
+    """
+
+    def __init__(self, root: str) -> None:
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, name: str) -> str:
+        path = os.path.abspath(os.path.join(self.root, name))
+        if not path.startswith(self.root + os.sep) and path != self.root:
+            raise ValueError(f"blob name {name!r} escapes store root")
+        return path
+
+    def put(self, name: str, data: bytes) -> None:
+        path = self._path(name)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def get_range(self, req: RangeRequest) -> bytes:
+        with open(self._path(req.blob), "rb") as f:
+            f.seek(req.offset)
+            return f.read() if req.length < 0 else f.read(req.length)
+
+    def size(self, name: str) -> int:
+        return os.path.getsize(self._path(name))
+
+    def list(self, prefix: str = "") -> list[str]:
+        out = []
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for fn in filenames:
+                if fn.endswith(".tmp") or ".tmp." in fn:
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn), self.root)
+                rel = rel.replace(os.sep, "/")
+                if rel.startswith(prefix):
+                    out.append(rel)
+        return sorted(out)
+
+    def delete(self, name: str) -> None:
+        try:
+            os.remove(self._path(name))
+        except FileNotFoundError:
+            pass

@@ -1,0 +1,8 @@
+"""Training substrate: optimizer, gradient compression, checkpointing."""
+
+from .checkpoint import CheckpointConfig, CheckpointManager
+from .optimizer import (OptimizerConfig, adamw_update, global_norm,
+                        init_opt_state, schedule_lr)
+
+__all__ = ["CheckpointConfig", "CheckpointManager", "OptimizerConfig",
+           "adamw_update", "global_norm", "init_opt_state", "schedule_lr"]

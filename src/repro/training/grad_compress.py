@@ -1,0 +1,63 @@
+"""Gradient compression for the cross-pod data-parallel reduction.
+
+Two distributed-optimization tricks, applied before gradients cross slow
+links (DCN between pods; paper §IV-G's ethos — pay bytes, not round trips):
+
+  * bf16 reduction — gradients are cast to bf16 before the all-reduce and
+    accumulated back in fp32 (halves collective bytes, standard practice);
+  * int8 + error feedback — per-tensor scaled int8 quantization with a
+    residual buffer added back next step (1-bit-Adam-style EF guarantees
+    the quantization error is compensated rather than accumulated).
+
+Under pjit the all-reduce is implicit (grads of FSDP-sharded params emit
+reduce-scatter); these transforms reshape what goes over the wire by
+changing the dtype at the boundary the partitioner reduces across.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_compress(grads: Any) -> Any:
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def int8_compress(grads: Any) -> tuple[Any, Any]:
+    """Per-tensor symmetric int8: returns (quantized, scales)."""
+
+    def q(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8), \
+            scale
+
+    flat, treedef = jax.tree.flatten(grads)
+    pairs = [q(g) for g in flat]
+    return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree.unflatten(treedef, [p[1] for p in pairs]))
+
+
+def int8_decompress(quant: Any, scales: Any) -> Any:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, quant, scales)
+
+
+def ef_compress_step(grads: Any, residual: Any) -> tuple[Any, Any]:
+    """Error-feedback int8: compress (grad + residual), keep the error.
+
+    Returns (decompressed grads to feed the optimizer, new residual).
+    """
+    with_res = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    quant, scales = int8_compress(with_res)
+    decomp = int8_decompress(quant, scales)
+    new_residual = jax.tree.map(lambda w, d: w - d, with_res, decomp)
+    return decomp, new_residual
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

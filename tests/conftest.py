@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see ONE device (the dry-run alone uses 512 placeholders)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

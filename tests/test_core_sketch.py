@@ -1,0 +1,255 @@
+"""IoU Sketch core invariants: hashing, no-false-negatives, accuracy model,
+Algorithm 1, top-K (property-based where it matters)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CorpusProfile, F_approx, F_exact, HashFamily,
+                        InfeasibleSketchError, IoUSketch, L_star_per_doc,
+                        SketchSpec, fast_region_bound,
+                        feasibility_lower_bound, hoeffding_epsilon,
+                        minimize_layers, q_approx, q_exact, sample_size,
+                        sigma_x, word_fingerprint)
+
+
+# ------------------------------------------------------------------- hashing
+def test_hash_deterministic_and_ranged():
+    fam = HashFamily.make(4, 97, seed=3)
+    words = [f"word{i}" for i in range(500)]
+    keys = np.array([word_fingerprint(w) for w in words], dtype=np.uint64)
+    b1 = fam.bins(keys)
+    b2 = fam.bins(keys)
+    assert (b1 == b2).all()
+    assert b1.shape == (4, 500)
+    assert b1.min() >= 0 and b1.max() < 97
+
+
+def test_hash_layers_differ():
+    fam = HashFamily.make(3, 1000, seed=0)
+    keys = np.arange(1, 2000, dtype=np.uint64)
+    bins = fam.bins(keys)
+    # different layers produce (nearly) independent mappings
+    assert (bins[0] != bins[1]).mean() > 0.9
+    assert (bins[1] != bins[2]).mean() > 0.9
+
+
+def test_hash_roundtrip_serialization():
+    fam = HashFamily.make(5, 123, seed=9)
+    fam2 = HashFamily.from_dict(fam.to_dict())
+    keys = np.arange(100, dtype=np.uint64)
+    assert (fam.bins(keys) == fam2.bins(keys)).all()
+
+
+def test_hash_uniformity():
+    fam = HashFamily.make(1, 64, seed=1)
+    keys = np.array([word_fingerprint(f"w{i}") for i in range(64_00)],
+                    dtype=np.uint64)
+    counts = np.bincount(fam.bins(keys)[0], minlength=64)
+    # chi-square-ish: every bin within 3x of expectation
+    assert counts.min() > 100 / 3 and counts.max() < 100 * 3
+
+
+# ------------------------------------------- sketch: no false negatives, ever
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_sketch_no_false_negatives(data):
+    n_words = data.draw(st.integers(5, 60))
+    n_docs = data.draw(st.integers(5, 200))
+    B = data.draw(st.integers(4, 64))
+    L = data.draw(st.integers(1, 4))
+    seed = data.draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    postings = {}
+    for j in range(n_words):
+        docs = rng.integers(0, n_docs, size=rng.integers(1, 20))
+        postings[f"w{j}"] = np.unique(docs).astype(np.uint32)
+    sketch = IoUSketch.build(postings, SketchSpec(B=B, L=L, seed=seed))
+    for w, truth in postings.items():
+        got = sketch.query(w)
+        assert set(truth.tolist()) <= set(got.tolist()), \
+            f"false negative for {w}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**16))
+def test_sketch_hedged_query_is_superset(seed):
+    rng = np.random.default_rng(seed)
+    postings = {f"w{j}": np.unique(rng.integers(0, 100, 8)).astype(np.uint32)
+                for j in range(40)}
+    sketch = IoUSketch.build(postings, SketchSpec(B=60, L=3, seed=seed))
+    for w in list(postings)[:10]:
+        full = set(sketch.query(w).tolist())
+        hedged = set(sketch.query(w, wait_for=2).tolist())
+        assert full <= hedged          # fewer layers => more candidates
+        assert set(postings[w].tolist()) <= hedged
+
+
+def test_common_words_exact():
+    rng = np.random.default_rng(0)
+    postings = {f"w{j}": np.unique(rng.integers(0, 50, 5)).astype(np.uint32)
+                for j in range(30)}
+    postings["the"] = np.arange(50, dtype=np.uint32)   # very common
+    sketch = IoUSketch.build(postings, SketchSpec(B=16, L=2, n_common=1),
+                             common_words=["the"])
+    assert sketch.is_common("the")
+    assert (sketch.query("the") == postings["the"]).all()
+
+
+# ----------------------------------------------------------- accuracy model
+def test_q_exact_matches_empirical_collision_rate():
+    """Eq. 1 against a Monte-Carlo of the real hashing process."""
+    B, L, Wi = 64, 2, 30
+    trials = 400
+    rng = np.random.default_rng(0)
+    hits = 0
+    for t in range(trials):
+        fam = HashFamily.make(L, B // L, seed=t)
+        doc_words = np.asarray(
+            [hash(f"d{t}w{i}") & 0xFFFFFFFFFFFF for i in range(Wi)],
+            dtype=np.uint64)
+        probe = np.asarray([hash(f"probe{t}") & 0xFFFFFFFFFFFF],
+                           dtype=np.uint64)
+        doc_bins = fam.bins(doc_words)
+        probe_bins = fam.bins(probe)[:, 0]
+        collided = all(probe_bins[l] in set(doc_bins[l].tolist())
+                       for l in range(L))
+        hits += collided
+    q = q_exact(np.array([Wi]), L, B)[0]
+    se = math.sqrt(q * (1 - q) / trials)
+    assert abs(hits / trials - q) < max(4 * se, 0.05)
+
+
+def test_q_approx_close_to_exact():
+    sizes = np.array([5, 20, 80, 300])
+    for L in (1, 2, 4):
+        qe = q_exact(sizes, L, 1000)
+        qa = q_approx(sizes, L, 1000)
+        np.testing.assert_allclose(qa, qe, rtol=0.15, atol=1e-4)
+
+
+def test_lemma1_minimizer():
+    """L_i* = (B/|W_i|) ln 2 minimizes q̂_i over a fine grid."""
+    B, Wi = 1000, 40
+    li = L_star_per_doc(np.array([Wi]), B)[0]
+    grid = np.linspace(max(li - 10, 1), li + 10, 400)
+    vals = [q_approx(np.array([Wi]), L, B)[0] for L in grid]
+    assert abs(grid[int(np.argmin(vals))] - li) < 0.2
+    # and q̂(L*) = 2^{-L*}
+    assert q_approx(np.array([Wi]), li, B)[0] == pytest.approx(
+        2.0 ** -li, rel=1e-6)
+
+
+def test_lemma2_lemma3_monotonicity():
+    sizes = np.array([10, 25, 50])
+    profile = CorpusProfile.from_doc_sizes(sizes, n_terms=100)
+    B = 400
+    lmin, lmax = fast_region_bound(profile, B)
+    grid_lo = np.linspace(1, lmin, 20)
+    vals_lo = [F_approx(profile, L, B) for L in grid_lo]
+    assert all(a > b for a, b in zip(vals_lo, vals_lo[1:]))   # decreasing
+    grid_hi = np.linspace(lmax, min(2 * lmax, B), 20)
+    vals_hi = [F_approx(profile, L, B) for L in grid_hi]
+    assert all(a < b for a, b in zip(vals_hi, vals_hi[1:]))   # increasing
+
+
+def test_feasibility_lower_bound_is_lower_bound():
+    profile = CorpusProfile.from_doc_sizes(
+        np.array([10, 30, 90, 200]), n_terms=500)
+    B = 800
+    lb = feasibility_lower_bound(profile, B)
+    for L in range(1, 60):
+        assert F_exact(profile, L, B) >= lb * 0.999
+
+
+# -------------------------------------------------------------- Algorithm 1
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_algorithm1_minimality(data):
+    """L* is feasible and L*-1 is not (within the searched region)."""
+    n_docs = data.draw(st.integers(10, 150))
+    seed = data.draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    sizes = rng.integers(3, 60, size=n_docs)
+    profile = CorpusProfile.from_doc_sizes(sizes, n_terms=int(sizes.sum()))
+    B = data.draw(st.integers(100, 3000))
+    F0 = data.draw(st.floats(0.05, 10.0))
+    try:
+        choice = minimize_layers(profile, B, F0)
+    except InfeasibleSketchError:
+        # rejection must be justified: brute-force check a range of L
+        for L in range(1, min(B, 200)):
+            assert F_exact(profile, L, B) > F0
+        return
+    assert F_exact(profile, choice.L, B) <= F0
+    if choice.L > 1 and choice.region == "fast":
+        assert F_exact(profile, choice.L - 1, B) > F0
+
+
+def test_algorithm1_matches_brute_force():
+    rng = np.random.default_rng(5)
+    sizes = rng.integers(5, 50, size=80)
+    profile = CorpusProfile.from_doc_sizes(sizes, n_terms=int(sizes.sum()))
+    B = 500
+    for F0 in (5.0, 1.0, 0.2, 0.01):
+        brute = next((L for L in range(1, B)
+                      if F_exact(profile, L, B) <= F0), None)
+        try:
+            choice = minimize_layers(profile, B, F0)
+            assert brute is not None
+            assert choice.L == brute, (choice.L, brute, F0)
+        except InfeasibleSketchError:
+            assert brute is None or brute > fast_region_bound(profile, B)[1]
+
+
+# -------------------------------------------------------------------- top-K
+def test_topk_paper_default_is_23():
+    """K=10, F0=1, δ=1e-6 selects ~23 samples (paper §V-A0c)."""
+    assert sample_size(1000, 10, 1.0, 1e-6) == 23
+
+
+def test_topk_fetches_all_when_small():
+    assert sample_size(5, 10, 1.0) == 5
+    assert sample_size(11, 10, 1.0) == 11     # K >= R - F0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(30, 5000), st.integers(1, 20), st.floats(0.0, 3.0))
+def test_topk_monotone_and_bounded(R, K, F0):
+    rk = sample_size(R, K, F0)
+    assert K <= rk <= R or K >= R - F0
+    assert sample_size(R, K, F0, 1e-9) >= sample_size(R, K, F0, 1e-3)
+
+
+def test_topk_statistical_guarantee():
+    """Sampling R_K candidates yields >= K relevant w.h.p."""
+    rng = np.random.default_rng(0)
+    R, K, F0, delta = 200, 10, 1.0, 1e-6
+    rk = sample_size(R, K, F0, delta)
+    failures = 0
+    for _ in range(300):
+        relevant = np.ones(R, bool)
+        fp = rng.integers(0, R, size=rng.poisson(F0))
+        relevant[fp] = False
+        sample = rng.choice(R, size=rk, replace=False)
+        if relevant[sample].sum() < K:
+            failures += 1
+    assert failures == 0
+
+
+# ---------------------------------------------------------------- sigma_X
+def test_sigma_x_matches_table2_formula():
+    """Cranfield row of Table II: n=1398, |W|=5300, avg |W_i|≈86 → 0.51."""
+    rng = np.random.default_rng(0)
+    sizes = np.clip(rng.normal(86, 20, size=1398), 10, 300).astype(int)
+    profile = CorpusProfile.from_doc_sizes(sizes, n_terms=5300)
+    assert sigma_x(profile) == pytest.approx(0.51, abs=0.02)
+
+
+def test_hoeffding_epsilon_positive_and_scales():
+    profile = CorpusProfile.from_doc_sizes(np.array([10] * 100), n_terms=1000)
+    e1 = hoeffding_epsilon(profile, 1e-3)
+    e2 = hoeffding_epsilon(profile, 1e-9)
+    assert 0 < e1 < e2

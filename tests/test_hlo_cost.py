@@ -1,0 +1,125 @@
+"""Trip-count-aware HLO cost analyzer vs analytic ground truth.
+
+The analyzer is the foundation of the roofline numbers, so it gets its
+own correctness suite: scans must multiply by trip count, grads by ~3x,
+nested loops by the product, and collectives by their ring formulas.
+Runs in subprocesses with 8 host devices for the sharded cases.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _run(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_scan_flops_scale_with_trip_count():
+    result = _run(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from repro.launch.hlo_cost import analyze_hlo
+        D, B = 128, 64
+        out = {}
+        for L in (2, 8):
+            def f(w, x):
+                def body(c, wl): return jnp.tanh(c @ wl), None
+                y, _ = jax.lax.scan(body, x, w)
+                return y.sum()
+            c = jax.jit(f).lower(
+                jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+                jax.ShapeDtypeStruct((B, D), jnp.float32)).compile()
+            s = analyze_hlo(c.as_text())
+            out[str(L)] = {"flops": s.flops, "analytic": 2.0*L*B*D*D,
+                           "loops": s.loops}
+        print(json.dumps(out))
+    """))
+    for L in ("2", "8"):
+        assert abs(result[L]["flops"] / result[L]["analytic"] - 1) < 0.02, \
+            result
+    assert result["8"]["flops"] > 3.5 * result["2"]["flops"]
+
+
+def test_grad_of_nested_scan():
+    result = _run(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from repro.launch.hlo_cost import analyze_hlo
+        D, B, L, M = 64, 32, 4, 3
+        def f(w, x):
+            def inner(c, wl):
+                def micro(cc, _): return jnp.tanh(cc @ wl), None
+                c2, _ = jax.lax.scan(micro, c, None, length=M)
+                return c2, None
+            y, _ = jax.lax.scan(inner, x, w)
+            return y.sum()
+        c = jax.jit(jax.grad(f)).lower(
+            jax.ShapeDtypeStruct((L, D, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D), jnp.float32)).compile()
+        s = analyze_hlo(c.as_text())
+        print(json.dumps({"flops": s.flops,
+                          "fwd": 2.0*L*M*B*D*D}))
+    """))
+    ratio = result["flops"] / result["fwd"]
+    assert 2.8 < ratio < 3.2, ratio          # fwd + bwd ≈ 3x fwd
+
+
+def test_sharded_collectives_counted_per_iteration():
+    result = _run(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.hlo_cost import analyze_hlo
+        D, B, L = 128, 64, 4
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        def f(w, x):
+            def body(c, wl): return jnp.tanh(c @ wl), None
+            y, _ = jax.lax.scan(body, x, w)
+            return y.sum()
+        ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32,
+            sharding=NamedSharding(mesh, P(None, "data", "model")))
+        xs = jax.ShapeDtypeStruct((B, D), jnp.float32,
+            sharding=NamedSharding(mesh, P("data", None)))
+        c = jax.jit(f).lower(ws, xs).compile()
+        s = analyze_hlo(c.as_text())
+        per_dev = 2.0*L*B*D*D/8
+        print(json.dumps({"flops": s.flops, "per_dev": per_dev,
+                          "wire": s.wire_bytes,
+                          "colls": {k: v[0] for k, v in s.collectives.items()}}))
+    """))
+    assert abs(result["flops"] / result["per_dev"] - 1) < 0.05
+    # weight all-gather must appear once per scan iteration (4), not once
+    assert result["colls"].get("all-gather", 0) >= 4
+    assert result["wire"] > 0
+
+
+def test_dus_and_slice_byte_model():
+    """A scan writing per-iteration slices must count slice bytes, not the
+    whole carried buffer, per iteration."""
+    result = _run(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from repro.launch.hlo_cost import analyze_hlo
+        L, N = 16, 4096
+        def f(x):
+            def body(c, _):
+                return c, jnp.tanh(c)            # stacks (L, N) outputs
+            _, ys = jax.lax.scan(body, x, None, length=L)
+            return ys
+        c = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((N,), jnp.float32)).compile()
+        s = analyze_hlo(c.as_text())
+        print(json.dumps({"bytes": s.bytes_accessed,
+                          "full_buffer_x_L": float(L*N*4*L)}))
+    """))
+    # per-iteration traffic ≈ slice (N*4) reads+writes, so total must be
+    # far below L × full (L,N) buffer
+    assert result["bytes"] < 0.5 * result["full_buffer_x_L"], result

@@ -1,0 +1,159 @@
+"""Builder + Searcher end-to-end against brute-force ground truth,
+including baselines, boolean queries, top-K, hedging, and the paper's
+expected-false-positive validation."""
+
+import numpy as np
+import pytest
+
+from repro.core.analysis import CorpusProfile, F_exact
+from repro.data import make_logs_like, make_zipf, write_corpus
+from repro.data.tokenizer import distinct_words
+from repro.index import And, Builder, BuilderConfig, Or, Searcher, Term
+from repro.index.baselines import BTreeIndex, SkipListIndex
+from repro.storage import InMemoryBlobStore, SimCloudStore
+
+
+@pytest.fixture(scope="module")
+def built():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(3000, seed=1)
+    corpus = write_corpus(store, "corpus/logs", docs, n_blobs=3)
+    report = Builder(BuilderConfig(B=1500, F0=1.0, hedge_layers=1)).build(
+        corpus, store, "index/logs")
+    truth: dict[str, set[int]] = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    return store, docs, report, truth
+
+
+def test_build_report_sane(built):
+    _store, docs, report, truth = built
+    assert report.n_docs == len(docs)
+    assert report.n_terms == len(truth)
+    assert 1 <= report.L <= 8
+    assert report.L_total == report.L + 1
+    assert report.expected_fp <= 1.0
+    assert report.n_common == 15          # 1% of B
+    assert report.index_bytes > 0
+
+
+def test_queries_exact_after_filtering(built):
+    store, docs, _report, truth = built
+    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    rng = np.random.default_rng(0)
+    words = rng.choice(sorted(truth), size=60, replace=False)
+    for w in words:
+        res = s.query(str(w))
+        assert set(res.texts) == {docs[i] for i in truth[str(w)]}, w
+        assert res.stats.rounds <= 2          # the single-round-trip story
+
+
+def test_zero_result_query(built):
+    store, _docs, _report, _truth = built
+    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    res = s.query("zzz-not-a-word-zzz")
+    assert res.texts == [] and res.stats.n_results == 0
+
+
+def test_boolean_queries(built):
+    store, docs, _report, truth = built
+    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    words = sorted(truth, key=lambda w: -len(truth[w]))[20:24]
+    a, b, c = words[0], words[1], words[2]
+    r = s.query(And((Term(a), Term(b))))
+    assert set(r.texts) == {docs[i] for i in truth[a] & truth[b]}
+    r = s.query(Or((Term(a), Term(c))))
+    assert set(r.texts) == {docs[i] for i in truth[a] | truth[c]}
+    r = s.query(Or((And((Term(a), Term(b))), Term(c))))
+    assert set(r.texts) == {docs[i]
+                            for i in (truth[a] & truth[b]) | truth[c]}
+
+
+def test_topk(built):
+    store, _docs, _report, truth = built
+    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    w = max(truth, key=lambda w: len(truth[w]))
+    res = s.query(w, top_k=5)
+    assert len(res.texts) == 5
+    assert all(w in distinct_words(t) for t in res.texts)
+
+
+def test_hedged_query_correct(built):
+    store, docs, _report, truth = built
+    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    some = sorted(truth)[100]
+    res = s.query(some, hedge=True)
+    assert set(res.texts) == {docs[i] for i in truth[some]}
+
+
+def test_observed_fp_within_hoeffding_of_expectation(built):
+    """Fig. 5 / Eq. 5: measured false positives concentrate around F(L)."""
+    store, _docs, report, truth = built
+    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    rng = np.random.default_rng(1)
+    rare = [w for w in truth if len(truth[w]) <= 3]
+    words = rng.choice(rare, size=min(80, len(rare)), replace=False)
+    fps = [s.query(str(w)).stats.n_false_positives for w in words]
+    assert np.mean(fps) <= report.expected_fp + 3 * report.sigma_x + 0.5
+
+
+def test_baselines_same_results_slower_lookup(built):
+    store, docs, _report, truth = built
+    for cls, prefix in ((BTreeIndex, "index/bt"), (SkipListIndex, "index/sl")):
+        idx = cls(store, prefix)
+        idx.build(_corpus_of(store, docs))
+        bs = idx.open(SimCloudStore(store, seed=3))
+        w = sorted(truth)[50]
+        r = bs.query(w)
+        assert set(r.texts) == {docs[i] for i in truth[w]}
+        assert r.stats.rounds >= 3       # root→…→leaf→postings→docs
+        s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+        ra = s.query(w)
+        assert ra.stats.lookup.elapsed_s < r.stats.lookup.elapsed_s
+
+
+def _corpus_of(store, docs):
+    from repro.data.corpus import Corpus, DocRef
+    # rebuild refs from the stored blobs (same layout as fixture)
+    from repro.data import write_corpus
+    return write_corpus(store, "corpus/logs", docs, n_blobs=3)
+
+
+def test_manual_L_override_and_hashtable_equivalence():
+    """L=1 manual config == the paper's HashTable baseline definition."""
+    store = InMemoryBlobStore()
+    docs = make_zipf(500, 300, 12, seed=2)
+    corpus = write_corpus(store, "corpus/z", docs, n_blobs=2)
+    r1 = Builder(BuilderConfig(B=300, L=1)).build(corpus, store, "index/h1")
+    s = Searcher(SimCloudStore(store, seed=0), "index/h1")
+    assert s.L == 1
+    truth: dict[str, set[int]] = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    w = sorted(truth)[10]
+    res = s.query(w)
+    assert set(res.texts) == {docs[i] for i in truth[w]}
+    assert r1.L == 1
+
+
+def test_multilayer_beats_hashtable_on_false_positives():
+    """Fig. 5's core observation: L>1 slashes false positives at fixed B."""
+    store = InMemoryBlobStore()
+    docs = make_zipf(800, 400, 12, seed=3)
+    corpus = write_corpus(store, "corpus/z2", docs, n_blobs=2)
+    fps = {}
+    for L in (1, 3):
+        Builder(BuilderConfig(B=240, L=L, common_frac=0.0)).build(
+            corpus, store, f"index/L{L}")
+        s = Searcher(SimCloudStore(store, seed=0), f"index/L{L}")
+        rng = np.random.default_rng(0)
+        truth: dict[str, set[int]] = {}
+        for i, d in enumerate(docs):
+            for w in distinct_words(d):
+                truth.setdefault(w, set()).add(i)
+        words = rng.choice(sorted(truth), 40, replace=False)
+        fps[L] = np.mean([s.query(str(w)).stats.n_false_positives
+                          for w in words])
+    assert fps[3] < 0.5 * fps[1] or fps[3] < 0.5

@@ -1,0 +1,92 @@
+"""Cross-layer integrations + CLI-level helpers."""
+
+import numpy as np
+import pytest
+
+from repro.core import IoUSketch, SketchSpec
+from repro.index.query import And, Or, Term, parse
+
+
+def test_sketch_bitmap_query_matches_sorted():
+    """The Pallas-kernel combine == the sorted-array combine."""
+    rng = np.random.default_rng(0)
+    postings = {f"w{j}": np.unique(rng.integers(0, 5000, 40))
+                .astype(np.uint32) for j in range(200)}
+    sketch = IoUSketch.build(postings, SketchSpec(B=120, L=3, seed=1))
+    for w in list(postings)[:20]:
+        a = sketch.query(w, impl="sorted")
+        b = sketch.query(w, impl="bitmap", n_docs=5000)
+        np.testing.assert_array_equal(a, b)
+        assert set(postings[w].tolist()) <= set(b.tolist())
+
+
+def test_query_parser():
+    assert parse("hello") == Term("hello")
+    assert parse("a b") == And((Term("a"), Term("b")))
+    assert parse("a AND b") == And((Term("a"), Term("b")))
+    q = parse("a b OR c")
+    assert isinstance(q, Or)
+    assert q.items[0] == And((Term("a"), Term("b")))
+    assert q.items[1] == Term("c")
+    # operator sugar
+    assert (Term("x") & Term("y")) == And((Term("x"), Term("y")))
+    assert (Term("x") | Term("y")) == Or((Term("x"), Term("y")))
+
+
+def test_elastic_mesh_chooser():
+    import subprocess
+    import sys
+    import os
+    import json
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=src)
+    env.pop("JAX_PLATFORMS", None)
+    code = (
+        "import json, jax\n"
+        "from repro.launch.elastic import choose_mesh\n"
+        "m1 = choose_mesh(8, prefer_model=4)\n"
+        "m2 = choose_mesh(6, prefer_model=4)\n"   # 6 % 4 != 0 -> degrade
+        "print(json.dumps({'m1': dict(m1.shape), 'm2': dict(m2.shape)}))\n")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-1500:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["m1"] == {"data": 2, "model": 4}
+    assert res["m2"] == {"data": 3, "model": 2}
+
+
+def test_dryrun_artifact_schema():
+    """Dry-run artifacts (if present) obey the schema report.py reads."""
+    import glob
+    import json
+    import os
+    paths = glob.glob(os.path.join(os.path.dirname(__file__), "..",
+                                   "experiments", "dryrun", "*.json"))
+    if not paths:
+        pytest.skip("no dry-run artifacts in this checkout")
+    ok = skipped = 0
+    for p in paths:
+        rec = json.load(open(p))
+        assert rec["status"] in ("ok", "skipped", "error"), p
+        assert {"arch", "cell", "mesh"} <= set(rec)
+        if rec["status"] == "ok":
+            ok += 1
+            rl = rec["roofline"]
+            for key in ("t_compute_s", "t_memory_s", "t_collective_s",
+                        "bottleneck", "roofline_fraction"):
+                assert key in rl, (p, key)
+            assert rl["t_bound_s"] >= max(
+                rl["t_compute_s"], rl["t_memory_s"],
+                rl["t_collective_s"]) * 0.999
+            assert rec["memory"]["temp_bytes"] >= 0
+        elif rec["status"] == "skipped":
+            skipped += 1
+            assert rec["cell"] == "long_500k"
+    assert ok > 0
+    # errors are bugs in the system (dry-run contract)
+    errors = [p for p in paths
+              if json.load(open(p))["status"] == "error"]
+    assert not errors, errors[:3]

@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests on REDUCED configs (CPU, 1 device):
+one forward/train step asserting output shapes + no NaNs, plus
+prefill→decode consistency. The FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import MoEConfig
+from repro.models import NULL_RULES, build_model, init_params, param_count
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=64, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(4, cfg.vocab, (B, S)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(4, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    if cfg.kind == "vlm":
+        s_img = 16
+        batch["tokens"] = batch["tokens"][:, :S - s_img]
+        batch["patches"] = jnp.asarray(
+            rng.normal(0, 1, (B, s_img, cfg.d_model)), jnp.bfloat16)
+        pos = np.stack([np.arange(S)] * 3, -1)[None].repeat(B, 0)
+        batch["positions"] = jnp.asarray(pos, jnp.int32)
+    if cfg.kind == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, S, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_loss_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), KEY)
+    assert param_count(params) > 10_000
+    loss = jax.jit(lambda p, b: model.loss_fn(p, b, NULL_RULES))(
+        params, _batch(cfg))
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), arch
+    # loss should be near ln(vocab) at random init
+    assert 0.5 * np.log(cfg.vocab) < float(loss) < 2.0 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_no_nans(arch):
+    from repro.training.optimizer import (OptimizerConfig, adamw_update,
+                                          init_opt_state)
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), KEY)
+    opt = init_opt_state(params)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch, NULL_RULES))(params)
+        params, opt, metrics = adamw_update(params, grads, opt, ocfg)
+        return params, opt, loss, metrics
+
+    batch = _batch(cfg, B=2, S=32)
+    params, opt, loss, metrics = step(params, opt, batch)
+    assert jnp.isfinite(loss)
+    assert jnp.isfinite(metrics["grad_norm"])
+    for leaf in jax.tree.leaves(params):
+        assert jnp.isfinite(leaf.astype(jnp.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "granite-20b",
+                                  "mixtral-8x22b", "seamless-m4t-medium",
+                                  "rwkv6-3b", "jamba-v0.1-52b"])
+def test_prefill_decode_consistency(arch):
+    """Decoding token-by-token after prefill matches the full forward."""
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe:   # drop-free capacity so results are batch-size-invariant
+        cfg = cfg.with_(moe=MoEConfig(
+            cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.every,
+            capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k))
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), jax.random.PRNGKey(1))
+    rng = np.random.default_rng(0)
+    S, EXTRA, B = 32, 3, 2
+    toks = jnp.asarray(rng.integers(4, cfg.vocab, (B, S + EXTRA)), jnp.int32)
+    bp, bf = {"tokens": toks[:, :S]}, {"tokens": toks}
+    if cfg.kind == "encdec":
+        frames = jnp.asarray(rng.normal(0, 1, (B, 16, cfg.d_model)),
+                             jnp.bfloat16)
+        bp["frames"] = frames
+        bf["frames"] = frames
+    kw = {} if cfg.kind == "rwkv" else {"pad_to": S + EXTRA}
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, NULL_RULES, **kw))(params, bp)
+    dec = jax.jit(lambda p, c, b: model.decode_step(p, c, b, NULL_RULES))
+    for t in range(EXTRA):
+        logits, cache = dec(params, cache,
+                            {"tokens": toks[:, S + t:S + t + 1]})
+    logits_ref, _ = jax.jit(
+        lambda p, b: model.prefill(p, b, NULL_RULES))(params, bf)
+    err = float(jnp.max(jnp.abs(logits - logits_ref)))
+    scale = float(jnp.max(jnp.abs(logits_ref)))
+    assert err < 0.25 * max(scale, 1.0), (arch, err, scale)
+
+
+def test_vlm_decode_runs():
+    cfg = get_config("qwen2-vl-72b", reduced=True)
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), KEY)
+    cache_desc = model.cache_desc(2, 64)
+    cache = init_params(cache_desc, KEY)
+    pos = jnp.broadcast_to(
+        jnp.array([5, 5, 5], jnp.int32)[None, None], (2, 1, 3))
+    batch = {"tokens": jnp.ones((2, 1), jnp.int32), "positions": pos}
+    cache = dict(cache, pos=jnp.int32(5))
+    logits, cache2 = jax.jit(
+        lambda p, c, b: model.decode_step(p, c, b, NULL_RULES))(
+        params, cache, batch)
+    assert logits.shape == (2, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+    assert int(cache2["pos"]) == 6
+
+
+def test_moe_matches_dense_reference():
+    """Capacity-based MoE == per-token expert loop when nothing drops."""
+    from repro.models import blocks
+    cfg = get_config("phi3.5-moe-42b-a6.6b", reduced=True).with_(
+        moe=MoEConfig(n_experts=4, top_k=2, every=1, capacity_factor=2.0))
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), KEY)
+    lp = jax.tree.map(lambda x: x[0], params["layers"])
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (2, 16, cfg.d_model)), jnp.bfloat16)
+    out = blocks.moe_ffn(x, lp["moe"], cfg, NULL_RULES)
+    p = lp["moe"]
+    xf = x.reshape(-1, cfg.d_model)
+    probs = jax.nn.softmax(xf.astype(jnp.float32) @ p["router"], -1)
+    tv, ti = jax.lax.top_k(probs, 2)
+    tv = tv / tv.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(xf, dtype=jnp.float32)
+    for e in range(cfg.moe.n_experts):
+        h = jax.nn.silu(xf @ p["w_gate"][e]) * (xf @ p["w_in"][e])
+        y = (h @ p["w_out"][e]).astype(jnp.float32)
+        ref += y * ((ti == e) * tv).sum(-1)[:, None]
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(-1, cfg.d_model), np.float32),
+        np.asarray(ref), atol=0.06)
+
+
+def test_blockwise_attention_matches_kernel_ref():
+    from repro.models.blocks import blockwise_attention
+    from repro.kernels.attention import attention as kernel_attention
+    rng = np.random.default_rng(0)
+    B, S, H, KV, dh = 2, 128, 4, 2, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, KV, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, KV, dh)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out_m = blockwise_attention(q, k, v, q_positions=pos, kv_positions=pos,
+                                causal=True, window=None, chunk=32,
+                                rules=NULL_RULES)
+    out_k = kernel_attention(q, k, v, causal=True, impl="pallas")
+    np.testing.assert_allclose(np.asarray(out_m), np.asarray(out_k),
+                               atol=3e-5)
+
+
+def test_chunked_ce_matches_naive():
+    from repro.models.losses import chunked_cross_entropy
+    rng = np.random.default_rng(0)
+    B, S, D, V = 2, 64, 32, 100
+    x = jnp.asarray(rng.normal(0, 1, (B, S, D)), jnp.float32)
+    head = jnp.asarray(rng.normal(0, 0.1, (V, D)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, V, (B, S)), jnp.int32)
+    labels = labels.at[0, :5].set(-1)       # masked positions
+    got = chunked_cross_entropy(x, labels, head, NULL_RULES, chunk=16)
+    logits = x @ head.T
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, jnp.maximum(labels, 0)[..., None],
+                               -1)[..., 0]
+    valid = labels >= 0
+    want = (nll * valid).sum() / valid.sum()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)

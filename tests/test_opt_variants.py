@@ -1,0 +1,116 @@
+"""§Perf optimization paths must be semantically equivalent to baselines:
+grouped MoE dispatch, triangular attention, int8 KV decode, bf16-grad CE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.models import NULL_RULES, build_model, init_params
+from repro.models import blocks
+from repro.models.blocks import blockwise_attention, set_attn_triangular
+from repro.models.losses import chunked_cross_entropy, set_bf16_grad_barrier
+
+
+def test_grouped_moe_matches_global_when_dropfree():
+    cfg = get_config("phi3.5-moe-42b-a6.6b", reduced=True).with_(
+        moe=MoEConfig(n_experts=4, top_k=2, every=1, capacity_factor=2.0))
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda x: x[0], params["layers"])
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (2, 16, cfg.d_model)), jnp.bfloat16)
+    out_g = blocks.moe_ffn_grouped(x, lp["moe"], cfg, NULL_RULES)
+    out_b = blocks.moe_ffn_global(x, lp["moe"], cfg, NULL_RULES)
+    np.testing.assert_allclose(np.asarray(out_g, np.float32),
+                               np.asarray(out_b, np.float32), atol=0.05)
+
+
+def test_triangular_attention_matches_scan():
+    rng = np.random.default_rng(0)
+    B, S, H, KV, dh = 2, 128, 4, 2, 32
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, KV, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, KV, dh)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    kwargs = dict(q_positions=pos, kv_positions=pos, causal=True,
+                  chunk=16, rules=NULL_RULES)
+    try:
+        for window in (None, 48):
+            base = blockwise_attention(q, k, v, window=window, **kwargs)
+            set_attn_triangular(True)
+            tri = blockwise_attention(q, k, v, window=window, **kwargs)
+            set_attn_triangular(False)
+            np.testing.assert_allclose(np.asarray(tri), np.asarray(base),
+                                       atol=1e-5)
+    finally:
+        set_attn_triangular(False)
+
+
+def test_int8_kv_decode_close_to_bf16():
+    rng = np.random.default_rng(0)
+    S, EXTRA, B = 32, 3, 2
+    base = get_config("qwen3-32b", reduced=True)
+    toks = jnp.asarray(rng.integers(4, base.vocab, (B, S + EXTRA)),
+                       jnp.int32)
+    outs = {}
+    for name, cfg in (("bf16", base), ("int8", base.with_(kv_quant=True))):
+        model = build_model(cfg)
+        params = init_params(model.param_desc(), jax.random.PRNGKey(1))
+        logits, cache = jax.jit(
+            lambda p, b: model.prefill(p, b, NULL_RULES, pad_to=S + EXTRA)
+        )(params, {"tokens": toks[:, :S]})
+        dec = jax.jit(lambda p, c, b: model.decode_step(p, c, b, NULL_RULES))
+        for t in range(EXTRA):
+            logits, cache = dec(params, cache,
+                                {"tokens": toks[:, S + t:S + t + 1]})
+        outs[name] = logits
+    err = float(jnp.max(jnp.abs(outs["bf16"] - outs["int8"])))
+    scale = float(jnp.max(jnp.abs(outs["bf16"])))
+    assert err < 0.1 * max(scale, 1.0), (err, scale)
+    assert (jnp.argmax(outs["bf16"], -1) == jnp.argmax(outs["int8"], -1)
+            ).mean() > 0.99
+
+
+def test_bf16_grad_ce_matches_fp32():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64, 32)), jnp.bfloat16)
+    head = jnp.asarray(rng.normal(0, 0.1, (100, 32)), jnp.bfloat16)
+    labels = jnp.asarray(rng.integers(0, 100, (2, 64)), jnp.int32)
+
+    def f(x, h):
+        return chunked_cross_entropy(x, labels, h, NULL_RULES, chunk=16)
+
+    try:
+        l1, g1 = jax.value_and_grad(f, argnums=(0, 1))(x, head)
+        set_bf16_grad_barrier(True)
+        l2, g2 = jax.value_and_grad(f, argnums=(0, 1))(x, head)
+    finally:
+        set_bf16_grad_barrier(False)
+    assert abs(float(l1) - float(l2)) < 1e-5
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=0.01)
+
+
+def test_apply_variant_profiles():
+    from repro.launch.steps import apply_variant
+    cfg = get_config("qwen3-32b")
+    c, prof, gd = apply_variant(cfg, "train_4k", "baseline")
+    assert prof == "baseline" and gd == "fp32" and c.moe_impl == "global"
+    c, prof, gd = apply_variant(cfg, "train_4k", "opt")
+    assert prof == "fsdp_only" and gd == "bf16" and c.ce_chunk > 4096
+    c, prof, _ = apply_variant(cfg, "decode_32k", "opt")
+    assert prof == "decode_tp" and c.kv_quant
+    # mixtral (8e, no clean expert↔shard mapping): grouped dispatch
+    moe_cfg = get_config("mixtral-8x22b")
+    c, prof, _ = apply_variant(moe_cfg, "train_4k", "opt")
+    assert c.moe_impl == "grouped" and prof == "baseline"
+    # MoE decode keeps FSDP weight sharding (no resident-TP replication)
+    c, prof, _ = apply_variant(moe_cfg, "decode_32k", "opt")
+    assert prof == "baseline" and not c.kv_quant
+    # phi (16e == model axis): global dispatch already expert-local
+    phi_cfg = get_config("phi3.5-moe-42b-a6.6b")
+    c, prof, _ = apply_variant(phi_cfg, "train_4k", "opt")
+    assert c.moe_impl == "global"

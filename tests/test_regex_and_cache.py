@@ -1,0 +1,64 @@
+"""§IV-F regex-via-n-grams + §IV-A query-cache remark."""
+
+import re
+
+import numpy as np
+import pytest
+
+from repro.data import make_logs_like, write_corpus
+from repro.index import Builder, BuilderConfig, Searcher
+from repro.serving import SearchService
+from repro.storage import InMemoryBlobStore, SimCloudStore
+
+
+@pytest.fixture(scope="module")
+def ngram_index():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(1500, seed=21)
+    corpus = write_corpus(store, "corpus/ng", docs, n_blobs=2)
+    report = Builder(BuilderConfig(B=4000, F0=1.0, index_ngrams=3)).build(
+        corpus, store, "index/ng")
+    return store, docs, report
+
+
+def test_regex_query_exact(ngram_index):
+    store, docs, _report = ngram_index
+    s = Searcher(SimCloudStore(store, seed=0), "index/ng")
+    for pattern in (r"blk_1[0-9]2\b", r"node4[0-5] ", r"shuffle_9\d+"):
+        res = s.regex_query(pattern)
+        truth = {d for d in docs if re.search(pattern, d)}
+        assert set(res.texts) == truth, pattern
+        assert res.stats.rounds <= 2            # still two parallel rounds
+        # the prefilter must beat a full scan
+        assert res.stats.n_candidates < len(docs) / 2, pattern
+
+
+def test_regex_rejects_unfilterable(ngram_index):
+    store, _docs, _report = ngram_index
+    s = Searcher(SimCloudStore(store, seed=0), "index/ng")
+    with pytest.raises(ValueError, match="full corpus scan"):
+        s.regex_query(r"[0-9]+")
+
+
+def test_ngram_indexing_keeps_fp_model(ngram_index):
+    """F(L) still certifies the configured accuracy with n-grams counted
+    in |W_i| (the optimizer sees the inflated per-doc term sets)."""
+    _store, _docs, report = ngram_index
+    assert report.expected_fp <= 1.0
+    assert report.L >= 1
+
+
+def test_query_cache(ngram_index):
+    store, _docs, _report = ngram_index
+    svc = SearchService(SimCloudStore(store, seed=1), "index/ng",
+                        cache_size=8)
+    r1 = svc.search("error")
+    n_after_first = svc.stats.summary()["n"]
+    r2 = svc.search("error")
+    assert svc.cache_hits == 1
+    assert svc.stats.summary()["n"] == n_after_first   # no new fetch
+    assert r1.texts == r2.texts
+    # eviction keeps the cache bounded
+    for i in range(20):
+        svc.search(f"node{i}")
+    assert len(svc._cache) <= 8

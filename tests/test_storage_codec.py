@@ -1,0 +1,164 @@
+"""Blob stores, simulated cloud, and the superpost compaction codec."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.index import codec
+from repro.storage import (InMemoryBlobStore, LocalBlobStore, NetworkModel,
+                           RangeRequest, SimCloudStore)
+
+
+# ---------------------------------------------------------------- blobstore
+@pytest.mark.parametrize("make", [
+    InMemoryBlobStore, lambda: LocalBlobStore(_tmpdir())])
+def test_blobstore_roundtrip(make):
+    store = make()
+    store.put("a/b/blob1", b"hello world")
+    assert store.get("a/b/blob1") == b"hello world"
+    assert store.get_range(RangeRequest("a/b/blob1", 6, 5)) == b"world"
+    assert store.size("a/b/blob1") == 11
+    assert store.list("a/") == ["a/b/blob1"]
+    store.delete("a/b/blob1")
+    assert store.list() == []
+
+
+def _tmpdir():
+    import tempfile
+    return tempfile.mkdtemp()
+
+
+def test_local_store_atomic_overwrite():
+    store = LocalBlobStore(_tmpdir())
+    store.put("x", b"v1")
+    store.put("x", b"v2")
+    assert store.get("x") == b"v2"
+    assert store.list() == ["x"]
+
+
+def test_blob_name_escape_rejected():
+    store = LocalBlobStore(_tmpdir())
+    with pytest.raises(ValueError):
+        store.put("../escape", b"nope")
+
+
+# ----------------------------------------------------------------- simcloud
+def test_simcloud_deterministic():
+    base = InMemoryBlobStore()
+    base.put("b", b"x" * 1000)
+    reqs = [RangeRequest("b", 0, 100)] * 8
+    s1 = SimCloudStore(base, seed=7)
+    s2 = SimCloudStore(base, seed=7)
+    _, st1 = s1.fetch_batch(reqs)
+    _, st2 = s2.fetch_batch(reqs)
+    assert st1.elapsed_s == st2.elapsed_s
+
+
+def test_simcloud_affine_latency():
+    """Fig. 2: latency flat until ~MBs, then linear in bytes."""
+    base = InMemoryBlobStore()
+    base.put("b", b"x" * (64 << 20))
+    model = NetworkModel(jitter_sigma=0.0, tail_prob=0.0)
+    cloud = SimCloudStore(base, model=model, seed=0)
+    t_small = cloud.fetch(RangeRequest("b", 0, 1024))[1].elapsed_s
+    t_2mb = cloud.fetch(RangeRequest("b", 0, 2 << 20))[1].elapsed_s
+    t_32mb = cloud.fetch(RangeRequest("b", 0, 32 << 20))[1].elapsed_s
+    assert t_small == pytest.approx(model.first_byte_s, rel=0.05)
+    assert t_2mb < 2 * t_small                  # still latency-dominated
+    assert t_32mb > 5 * t_small                 # bandwidth-dominated
+
+
+def test_simcloud_parallel_beats_sequential():
+    """The paper's core claim, in miniature: one batch of n parallel
+    requests is far faster than n dependent round trips."""
+    base = InMemoryBlobStore()
+    base.put("b", b"x" * 10000)
+    reqs = [RangeRequest("b", i * 100, 100) for i in range(16)]
+    cloud = SimCloudStore(base, seed=0)
+    _, par = cloud.fetch_batch(reqs)
+    _, seq = cloud.fetch_chain(reqs)
+    assert seq.elapsed_s > 5 * par.elapsed_s
+
+
+def test_simcloud_hedging_cuts_tail():
+    """§IV-G: issue L+, wait for L — tail latency drops."""
+    base = InMemoryBlobStore()
+    base.put("b", b"x" * 10000)
+    model = NetworkModel(tail_prob=0.2, tail_scale=20.0)
+    lat_all, lat_hedged = [], []
+    for seed in range(300):
+        c = SimCloudStore(base, model=model, seed=seed)
+        reqs = [RangeRequest("b", 0, 100)] * 6
+        lat_all.append(c.fetch_batch(reqs)[1].elapsed_s)
+        c2 = SimCloudStore(base, model=model, seed=seed)
+        lat_hedged.append(c2.fetch_batch(reqs, wait_for=4)[1].elapsed_s)
+    assert np.percentile(lat_hedged, 95) < 0.6 * np.percentile(lat_all, 95)
+    assert np.mean(lat_hedged) < np.mean(lat_all)
+
+
+def test_simcloud_concurrency_queueing():
+    base = InMemoryBlobStore()
+    base.put("b", b"x" * 1000)
+    model = NetworkModel(jitter_sigma=0.0, tail_prob=0.0)
+    reqs = [RangeRequest("b", 0, 10)] * 64
+    wide = SimCloudStore(base, model=model, concurrency=64, seed=0)
+    narrow = SimCloudStore(base, model=model, concurrency=4, seed=0)
+    t_wide = wide.fetch_batch(reqs)[1].elapsed_s
+    t_narrow = narrow.fetch_batch(reqs)[1].elapsed_s
+    assert t_narrow == pytest.approx(16 * t_wide, rel=0.05)
+
+
+# -------------------------------------------------------------------- codec
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 2**50), max_size=200))
+def test_varint_roundtrip(values):
+    arr = np.asarray(sorted(values), dtype=np.uint64)
+    data = codec.encode_varints(arr)
+    out, used = codec.decode_varints(data, len(arr))
+    assert used == len(data)
+    assert (out == arr).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_superpost_roundtrip(data):
+    n = data.draw(st.integers(0, 300))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**16)))
+    keys = np.unique(rng.integers(0, 2**45, size=n).astype(np.uint64))
+    lengths = rng.integers(1, 10_000, size=len(keys)).astype(np.uint64)
+    blob = codec.encode_superpost(keys, lengths)
+    k2, l2 = codec.decode_superpost(blob)
+    assert (k2 == keys).all() and (l2 == lengths).all()
+
+
+def test_posting_key_split():
+    blob_keys = np.array([0, 3, 70000])
+    offsets = np.array([0, 12345, (1 << 40) - 1])
+    keys = codec.posting_key(blob_keys, offsets)
+    b, o = codec.split_posting_key(keys)
+    assert (b == blob_keys).all() and (o == offsets).all()
+
+
+def test_pointers_roundtrip():
+    ptrs = [codec.BinPointer(i % 3, i * 17, i + 1) for i in range(100)]
+    out = codec.unpack_pointers(codec.pack_pointers(ptrs))
+    assert out == ptrs
+
+
+def test_header_roundtrip_and_magic():
+    payload = {"spec": {"B": 10, "L": 2}, "names": ["a", "b"]}
+    data = codec.encode_header(payload)
+    assert codec.decode_header(data) == payload
+    with pytest.raises(ValueError):
+        codec.decode_header(b"XXXX" + data[4:])
+
+
+def test_superpost_compression_beats_raw():
+    """Delta-varint must beat 16-byte raw (key, length) pairs on
+    clustered postings (the paper's compression claim)."""
+    rng = np.random.default_rng(0)
+    offsets = np.sort(rng.integers(0, 1 << 24, size=1000).astype(np.uint64))
+    keys = codec.posting_key(np.zeros(1000, np.uint64), offsets)
+    lengths = rng.integers(50, 300, size=1000).astype(np.uint64)
+    blob = codec.encode_superpost(keys, lengths)
+    assert len(blob) < 0.5 * 16 * 1000

@@ -1,0 +1,203 @@
+"""Optimizer, gradient compression, checkpointing, fault-tolerant loop."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.storage import InMemoryBlobStore, SimCloudStore
+from repro.training import (CheckpointConfig, CheckpointManager,
+                            OptimizerConfig, adamw_update, global_norm,
+                            init_opt_state, schedule_lr)
+from repro.training.grad_compress import (bf16_compress, ef_compress_step,
+                                          init_residual, int8_compress,
+                                          int8_decompress)
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(0, 1, (4, 3)), jnp.float32),
+         "b": jnp.asarray(rng.normal(0, 1, (3,)), jnp.float32)}
+    g = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, p)
+    cfg = OptimizerConfig(lr=1e-2, warmup_steps=0, total_steps=100,
+                          schedule="constant", clip_norm=0.0,
+                          weight_decay=0.5)
+    opt = init_opt_state(p)
+    new_p, new_opt, metrics = adamw_update(p, g, opt, cfg)
+    # numpy replay
+    m = 0.1 * 0.1
+    v = 0.05 * 0.1 ** 2
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.95)
+    w_np = np.asarray(p["w"])
+    want_w = w_np - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8) + 0.5 * w_np)
+    want_b = np.asarray(p["b"]) - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want_w, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(new_p["b"]), want_b, rtol=1e-5)
+    assert int(new_opt["step"]) == 1
+
+
+def test_grad_clipping():
+    p = {"w": jnp.zeros((10,), jnp.float32)}
+    g = {"w": jnp.full((10,), 100.0)}
+    cfg = OptimizerConfig(lr=1.0, clip_norm=1.0, warmup_steps=0,
+                          schedule="constant", weight_decay=0.0)
+    opt = init_opt_state(p)
+    _, _, metrics = adamw_update(p, g, opt, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(
+        np.sqrt(10) * 100, rel=1e-4)
+
+
+def test_schedule_shapes():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine", min_lr_frac=0.1)
+    lrs = [float(schedule_lr(cfg, jnp.int32(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert lrs[10] == pytest.approx(1.0, rel=1e-3)
+    assert lrs[100] == pytest.approx(0.1, rel=1e-2)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # decays
+
+
+# --------------------------------------------------------------- compression
+def test_int8_roundtrip_bounded_error():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (64, 64)), jnp.float32)}
+    q, s = int8_compress(g)
+    back = int8_decompress(q, s)
+    err = float(jnp.max(jnp.abs(back["w"] - g["w"])))
+    assert err <= float(s["w"]) * 0.51
+
+
+def test_error_feedback_converges():
+    """EF compensates quantization bias: averaged decompressed grads
+    converge to the true mean gradient."""
+    rng = np.random.default_rng(0)
+    true = jnp.asarray(rng.normal(0, 1, (32,)), jnp.float32)
+    residual = init_residual({"g": true})
+    acc = jnp.zeros_like(true)
+    n = 200
+    for _ in range(n):
+        decomp, residual = ef_compress_step({"g": true}, residual)
+        acc = acc + decomp["g"]
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(true),
+                               atol=0.01)
+
+
+def test_bf16_compress_dtype():
+    g = {"w": jnp.ones((4,), jnp.float32)}
+    assert bf16_compress(g)["w"].dtype == jnp.bfloat16
+
+
+# --------------------------------------------------------------- checkpoints
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(0, 1, (8, 4)), jnp.bfloat16),
+                   "b": jnp.asarray(rng.normal(0, 1, (4,)), jnp.float32)},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip_bf16():
+    store = InMemoryBlobStore()
+    ckpt = CheckpointManager(store)
+    state = _state()
+    ckpt.save(7, state)
+    restored, manifest = ckpt.restore(state)
+    assert manifest["step"] == 7
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["w"], np.float32),
+        np.asarray(restored["params"]["w"], np.float32))
+    assert restored["params"]["w"].dtype == np.asarray(
+        state["params"]["w"]).dtype
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_checkpoint_keep_last_k():
+    store = InMemoryBlobStore()
+    ckpt = CheckpointManager(store, CheckpointConfig(keep_last_k=2))
+    for step in (1, 2, 3, 4):
+        ckpt.save(step, _state())
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_checkpoint_corruption_detected():
+    store = InMemoryBlobStore()
+    ckpt = CheckpointManager(store)
+    ckpt.save(1, _state())
+    # flip bytes in one leaf blob
+    name = [n for n in store.list() if n.endswith("w.npy")][0]
+    store.put(name, b"\x00" * store.size(name))
+    with pytest.raises(IOError, match="corruption"):
+        ckpt.restore(_state())
+
+
+def test_checkpoint_async_save_and_latest():
+    store = InMemoryBlobStore()
+    ckpt = CheckpointManager(store)
+    ckpt.save(5, _state(), blocking=False)
+    ckpt.wait()
+    assert ckpt.latest_step() == 5
+
+
+def test_checkpoint_restore_via_simcloud_single_round():
+    store = InMemoryBlobStore()
+    ckpt = CheckpointManager(store)
+    ckpt.save(3, _state())
+    cloud = SimCloudStore(store, seed=0)
+    before = cloud.totals.n_requests
+    restored, _ = ckpt.restore(_state(), cloud=cloud)
+    # all leaves fetched in ONE parallel batch
+    assert cloud.totals.n_requests - before == len(
+        jax.tree.leaves(_state()))
+    assert cloud.clock_s < 0.2
+
+
+# --------------------------------------------------------------- train loop
+def test_train_loop_loss_decreases_and_resumes():
+    from repro.configs import get_config
+    from repro.data import make_logs_like, write_corpus
+    from repro.data.pipeline import IndexedCorpusLoader, PipelineConfig
+    from repro.index import Builder, BuilderConfig
+    from repro.models import NULL_RULES, build_model, init_params
+    from repro.training.train_loop import TrainLoopConfig, run
+
+    store = InMemoryBlobStore()
+    docs = make_logs_like(500, seed=2)
+    from repro.data import write_corpus as wc
+    corpus = wc(store, "corpus/t", docs, n_blobs=2)
+    Builder(BuilderConfig(B=500, F0=1.0)).build(corpus, store, "index/t")
+    cloud = SimCloudStore(store, seed=0)
+    cfg = get_config("granite-20b", reduced=True).with_(
+        n_layers=2, d_model=64, n_heads=2, n_kv=1, d_ff=128, vocab=256)
+    loader = IndexedCorpusLoader(
+        cloud, "index/t",
+        PipelineConfig(seq_len=32, batch_size=4, vocab_size=cfg.vocab))
+    model = build_model(cfg)
+    params = init_params(model.param_desc(), jax.random.PRNGKey(0))
+    ckpt = CheckpointManager(store, CheckpointConfig(prefix="ck"))
+    opt_cfg = OptimizerConfig(lr=5e-3, warmup_steps=2, total_steps=30)
+    loop_cfg = TrainLoopConfig(total_steps=30, checkpoint_every=10,
+                               log_every=5, async_checkpoint=False)
+    state, log = run(model, params, loader, ckpt, loop_cfg, opt_cfg,
+                     NULL_RULES)
+    assert log.losses[-1] < log.losses[0]          # it learns
+    assert ckpt.latest_step() == 30
+
+    # fault tolerance: "crash" and restart — resumes from step 30 (no-op)
+    params2 = init_params(model.param_desc(), jax.random.PRNGKey(0))
+    state2, log2 = run(model, params2, loader, ckpt, loop_cfg, opt_cfg,
+                       NULL_RULES)
+    assert log2.resumed_from == 30
+    np.testing.assert_array_equal(
+        np.asarray(state["params"]["lm_head"], np.float32),
+        np.asarray(state2["params"]["lm_head"], np.float32))
+
+    # and a restart from a mid-run checkpoint continues deterministically
+    loop3 = TrainLoopConfig(total_steps=40, checkpoint_every=10,
+                            log_every=5, async_checkpoint=False)
+    state3, log3 = run(model, params2, loader, ckpt, loop3, opt_cfg,
+                       NULL_RULES)
+    assert log3.resumed_from == 30
+    assert int(state3["opt"]["step"]) == 40
