@@ -1,0 +1,179 @@
+"""Batched query engine benchmark: serial vs batched vs batched+cache.
+
+A 64-query mixed workload (rare terms, common words, And/Or trees, regex)
+arrives all at once — the multi-tenant serving burst the batched engine
+exists for. Three executions of the SAME workload:
+
+  serial        — the seed engine: a Python loop of per-query two-round
+                  lookups (no coalescing, no cache);
+  batched       — `SearchService.search_batch`: cross-query planning,
+                  request dedupe, range coalescing, two shared rounds;
+  batched+cache — same, plus a byte-bounded LRU superpost cache, measured
+                  on a second wave of the workload (steady-state traffic).
+
+Latency is *completion time* under concurrent arrival on the simulated
+virtual clock: query i's latency is (clock when its result is ready −
+clock when the burst arrived). For the serial loop that includes queueing
+behind earlier queries; for the batched engine every query completes when
+its shared round does. Results are asserted byte-identical across paths.
+
+Writes BENCH_query_engine.json at the repo root so future PRs have a
+perf trajectory to regress against.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.data import make_logs_like, write_corpus
+from repro.data.tokenizer import distinct_words
+from repro.index import And, Builder, BuilderConfig, Or, Regex, Term
+from repro.serving import SearchService
+from repro.storage import InMemoryBlobStore, SimCloudStore
+
+from .common import row
+
+N_QUERIES = 64
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_query_engine.json")
+
+
+def _fixture():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(3000, seed=13)
+    corpus = write_corpus(store, "corpus/qe", docs, n_blobs=4)
+    Builder(BuilderConfig(B=2500, F0=1.0, index_ngrams=3)).build(
+        corpus, store, "index/qe")
+    truth: dict[str, set[int]] = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    return store, docs, truth
+
+
+def _workload(truth) -> list:
+    """64 mixed queries: terms, And/Or, common words, regex."""
+    rng = np.random.default_rng(3)
+    words = sorted(truth)
+    rare = [w for w in words if len(truth[w]) <= 8]
+    mid = [w for w in words if 8 < len(truth[w]) <= 200]
+    common = sorted(words, key=lambda w: -len(truth[w]))[:12]
+    pick = lambda pool: str(rng.choice(pool))  # noqa: E731
+    queries: list = []
+    queries += [Term(pick(rare)) for _ in range(20)]          # rare terms
+    queries += [Term(pick(common)) for _ in range(8)]         # common words
+    queries += [And((Term(pick(mid)), Term(pick(mid))))       # AND pairs
+                for _ in range(12)]
+    queries += [And((Term(pick(common)), Term(pick(mid)),     # 3-way AND
+                     Term(pick(rare)))) for _ in range(4)]
+    queries += [Or((Term(pick(rare)), Term(pick(mid))))       # OR pairs
+                for _ in range(8)]
+    queries += [Or((And((Term(pick(mid)), Term(pick(mid)))),  # nested
+                    Term(pick(rare)))) for _ in range(8)]
+    queries += [Regex(r"blk_1[0-9]2\b"), Regex(r"node2[0-3] "),
+                Regex(r"shuffle_7\d+"), Regex(r"blk_9[0-9]{2}\b")]
+    assert len(queries) == N_QUERIES
+    return queries
+
+
+def _percentiles(samples_s: list[float]) -> dict:
+    arr = np.asarray(samples_s)
+    return {
+        "p50_ms": float(np.percentile(arr, 50) * 1e3),
+        "p99_ms": float(np.percentile(arr, 99) * 1e3),
+        "mean_ms": float(arr.mean() * 1e3),
+    }
+
+
+def _run_serial(store, queries) -> tuple[list, dict]:
+    cloud = SimCloudStore(store, seed=42)
+    svc = SearchService(cloud, "index/qe", coalesce_gap=None)
+    start = cloud.clock_s
+    completions, results = [], []
+    for q in queries:      # the seed path: one query at a time, queueing
+        results.append(svc.search_regex(q.pattern, ngram=q.ngram)
+                       if isinstance(q, Regex) else svc.search(q))
+        completions.append(cloud.clock_s - start)
+    report = {**_percentiles(completions),
+              "n_requests": cloud.totals.n_requests,
+              "bytes_fetched": cloud.totals.bytes_fetched,
+              "clock_ms": (cloud.clock_s - start) * 1e3}
+    return results, report
+
+
+def _run_batched(store, queries, cache_bytes: int = 0,
+                 waves: int = 1) -> tuple[list, dict]:
+    cloud = SimCloudStore(store, seed=42)
+    svc = SearchService(cloud, "index/qe",
+                        superpost_cache_bytes=cache_bytes)
+    results, last = [], {}
+    for _wave in range(waves):
+        start = cloud.clock_s
+        wave_requests = cloud.totals.n_requests
+        wave_bytes = cloud.totals.bytes_fetched
+        results = svc.search_batch(queries)
+        elapsed = cloud.clock_s - start
+        last = {**_percentiles([elapsed] * len(queries)),
+                "n_requests": cloud.totals.n_requests - wave_requests,
+                "bytes_fetched": cloud.totals.bytes_fetched - wave_bytes,
+                "clock_ms": elapsed * 1e3}
+    if cache_bytes and svc.superpost_cache is not None:
+        last["superpost_cache"] = svc.superpost_cache.summary()
+    return results, last
+
+
+def _identical(a, b) -> bool:
+    return all(x.texts == y.texts and x.refs == y.refs
+               for x, y in zip(a, b))
+
+
+def run() -> dict:
+    store, _docs, truth = _fixture()
+    queries = _workload(truth)
+
+    serial_res, serial = _run_serial(store, queries)
+    batched_res, batched = _run_batched(store, queries)
+    # steady state: second wave of the same mixed traffic, warm cache
+    cached_res, cached = _run_batched(store, queries,
+                                      cache_bytes=32 << 20, waves=2)
+
+    report = {
+        "workload": {
+            "n_queries": N_QUERIES,
+            "mix": {"rare_terms": 20, "common_words": 8, "and": 16,
+                    "or": 16, "regex": 4},
+            "n_docs": 3000,
+            "network": "us-central1 default NetworkModel",
+        },
+        "paths": {"serial": serial, "batched": batched,
+                  "batched_cache": cached},
+        "identical_results": _identical(serial_res, batched_res)
+        and _identical(serial_res, cached_res),
+        "speedup_p50": serial["p50_ms"] / batched["p50_ms"],
+        "request_reduction_frac":
+            1.0 - batched["n_requests"] / serial["n_requests"],
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return report
+
+
+def bench_query_engine():
+    """CSV view for benchmarks.run; also writes BENCH_query_engine.json."""
+    report = run()
+    for path, stats in report["paths"].items():
+        yield row(f"query_engine/{path}_p50", stats["p50_ms"] * 1e3,
+                  f"n_requests={stats['n_requests']}")
+        yield row(f"query_engine/{path}_p99", stats["p99_ms"] * 1e3,
+                  f"bytes={stats['bytes_fetched']}")
+    yield row("query_engine/speedup_p50", report["speedup_p50"],
+              f"identical={report['identical_results']}")
+    yield row("query_engine/request_reduction",
+              report["request_reduction_frac"] * 100, "percent")
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2, sort_keys=True))

@@ -11,6 +11,11 @@ import sys
 import time
 
 
+def _query_engine_bench():
+    from .query_engine import bench_query_engine
+    return bench_query_engine()
+
+
 def all_benchmarks():
     from . import paper_figures as pf
     from . import perf
@@ -29,6 +34,7 @@ def all_benchmarks():
         "fig16": pf.bench_fig16_tiny_sketch,
         "fig17": pf.bench_fig17_accuracy_f0,
         "regex": pf.bench_regex_ngram,
+        "query_engine": _query_engine_bench,
         "kernels": perf.bench_kernel_cpu_walltime,
         "roofline": perf.bench_roofline_table,
     }

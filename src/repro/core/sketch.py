@@ -26,7 +26,13 @@ from .hashing import HashFamily, fingerprints, word_fingerprint
 
 
 def intersect_sorted(lists: list[np.ndarray]) -> np.ndarray:
-    """Intersection of sorted unique uint32 arrays, smallest-first."""
+    """Intersection of sorted unique integer arrays, smallest-first.
+
+    k-way merge by binary search: the running result (never larger than
+    the smallest list) is probed into each remaining list with
+    `np.searchsorted`, O(n log m) per round with no temporaries — unlike
+    `np.isin`, which concatenates and re-sorts both operands each time.
+    """
     if not lists:
         return np.empty(0, dtype=np.uint32)
     lists = sorted(lists, key=len)
@@ -34,7 +40,11 @@ def intersect_sorted(lists: list[np.ndarray]) -> np.ndarray:
     for other in lists[1:]:
         if len(out) == 0:
             break
-        out = out[np.isin(out, other, assume_unique=True)]
+        idx = np.searchsorted(other, out)
+        # idx == len(other) means out[i] > other[-1]: clamp — the clamped
+        # element compares unequal, so membership stays correct
+        np.minimum(idx, len(other) - 1, out=idx)
+        out = out[other[idx] == out]
     return out
 
 
@@ -88,16 +98,32 @@ class IoUSketch:
                   for w in common_set if w in postings}
 
         words = [w for w in postings if w not in common_set]
-        acc: list[list[list[np.ndarray]]] = [
-            [[] for _ in range(spec.bins_per_layer)] for _ in range(spec.L)]
+        superposts: list[list[np.ndarray]] = [
+            [np.empty(0, dtype=np.uint32) for _ in range(spec.bins_per_layer)]
+            for _ in range(spec.L)]
         if words:
+            # Bulk union: flatten every posting once, then per layer group
+            # doc ids by bin with one lexsort and dedupe adjacent runs —
+            # no per-word Python loop over L × n_words cells.
             bins = hashes.bins(fingerprints(words))      # (L, n_words)
-            for j, w in enumerate(words):
-                plist = np.asarray(postings[w], dtype=np.uint32)
-                for l in range(spec.L):
-                    acc[l][int(bins[l, j])].append(plist)
-        superposts = [
-            [union_sorted(cell) for cell in layer] for layer in acc]
+            plists = [np.asarray(postings[w], dtype=np.uint32) for w in words]
+            lengths = np.array([len(p) for p in plists], dtype=np.int64)
+            all_docs = np.concatenate(plists) if plists else \
+                np.empty(0, dtype=np.uint32)
+            word_ids = np.repeat(np.arange(len(words)), lengths)
+            for l in range(spec.L):
+                bin_ids = bins[l][word_ids]
+                order = np.lexsort((all_docs, bin_ids))
+                b_s, d_s = bin_ids[order], all_docs[order]
+                keep = np.ones(len(d_s), dtype=bool)
+                keep[1:] = (b_s[1:] != b_s[:-1]) | (d_s[1:] != d_s[:-1])
+                b_u, d_u = b_s[keep], d_s[keep]
+                if not len(b_u):
+                    continue
+                cuts = np.flatnonzero(b_u[1:] != b_u[:-1]) + 1
+                group_bins = b_u[np.concatenate(([0], cuts))]
+                for bin_id, chunk in zip(group_bins, np.split(d_u, cuts)):
+                    superposts[l][int(bin_id)] = chunk
         return cls(spec=spec, hashes=hashes, superposts=superposts,
                    common=common)
 
@@ -124,7 +150,7 @@ class IoUSketch:
         `impl="bitmap"` combines through the Pallas TPU kernel
         (`kernels/intersect`): superposts become document-space bitsets and
         the L-way AND + popcount happens in one fused VMEM pass — the
-        TPU-native form of the paper's intersection (DESIGN.md §6).
+        TPU-native form of the paper's intersection (docs/query_engine.md).
         """
         fp = word_fingerprint(word)
         if fp in self.common:

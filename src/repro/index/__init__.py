@@ -1,9 +1,10 @@
 """Index build/search: Builder, Searcher, compaction codec, baselines."""
 
 from .builder import Builder, BuilderConfig, BuildReport
-from .query import And, Or, Query, Term, parse, query_words
+from .fetch_plan import coalesce_requests, slice_payloads
+from .query import And, Or, Query, Regex, Term, parse, query_words
 from .searcher import QueryResult, QueryStats, Searcher
 
 __all__ = ["Builder", "BuilderConfig", "BuildReport", "And", "Or", "Query",
-           "Term", "parse", "query_words", "QueryResult", "QueryStats",
-           "Searcher"]
+           "Regex", "Term", "parse", "query_words", "QueryResult",
+           "QueryStats", "Searcher", "coalesce_requests", "slice_payloads"]

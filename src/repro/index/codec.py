@@ -44,21 +44,34 @@ def encode_varints(values: np.ndarray) -> bytes:
 
 
 def decode_varints(data: bytes, count: int) -> tuple[np.ndarray, int]:
-    """Decode `count` LEB128 varints; returns (values, bytes_consumed)."""
-    vals = np.empty(count, dtype=np.uint64)
-    pos = 0
-    for i in range(count):
-        shift = 0
-        acc = 0
-        while True:
-            b = data[pos]
-            pos += 1
-            acc |= (b & 0x7F) << shift
-            if not b & 0x80:
-                break
-            shift += 7
-        vals[i] = acc
-    return vals, pos
+    """Decode `count` LEB128 varints; returns (values, bytes_consumed).
+
+    Vectorized: value boundaries are the bytes with the continuation bit
+    clear; each byte contributes its low 7 bits shifted by 7 × its position
+    within the value, and `np.add.reduceat` sums the disjoint bit groups.
+    This is the hot path of every superpost decode on the read path.
+    """
+    count = int(count)
+    if count == 0:
+        return np.empty(0, dtype=np.uint64), 0
+    # a u64 varint is at most 10 bytes — never scan past what `count`
+    # values could possibly occupy (decode_superpost passes whole tails)
+    buf = np.frombuffer(data, dtype=np.uint8)[:count * 10]
+    ends = np.flatnonzero((buf & 0x80) == 0)
+    if len(ends) < count:
+        raise ValueError(
+            f"truncated varint stream: {len(ends)} values, need {count}")
+    ends = ends[:count]
+    consumed = int(ends[-1]) + 1
+    buf = buf[:consumed]
+    starts = np.empty(count, dtype=np.int64)
+    starts[0] = 0
+    starts[1:] = ends[:-1] + 1
+    byte_pos = np.arange(consumed, dtype=np.int64) \
+        - np.repeat(starts, ends - starts + 1)
+    contrib = (buf & np.uint8(0x7F)).astype(np.uint64) \
+        << (np.uint64(7) * byte_pos.astype(np.uint64))
+    return np.add.reduceat(contrib, starts), consumed
 
 
 # ---------------------------------------------------------------- superposts
@@ -99,11 +112,12 @@ def encode_superpost(keys: np.ndarray, lengths: np.ndarray) -> bytes:
 
 def decode_superpost(data: bytes) -> tuple[np.ndarray, np.ndarray]:
     """Returns (sorted u64 posting keys, u64 lengths)."""
-    (count,), pos = decode_varints(data, 1)
+    view = memoryview(data)               # zero-copy section slicing
+    (count,), pos = decode_varints(view, 1)
     count = int(count)
-    deltas, used = decode_varints(data[pos:], count)
+    deltas, used = decode_varints(view[pos:], count)
     pos += used
-    lengths, _ = decode_varints(data[pos:], count)
+    lengths, _ = decode_varints(view[pos:], count)
     return np.cumsum(deltas).astype(np.uint64), lengths
 
 

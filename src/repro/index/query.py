@@ -32,6 +32,19 @@ class Or(Query):
     items: tuple[Query, ...]
 
 
+@dataclass(frozen=True)
+class Regex(Query):
+    """RegEx search via the n-gram prefilter (paper §IV-F).
+
+    A standalone job type for `Searcher.query`/`query_batch` — not
+    composable under And/Or, because matching needs the raw document
+    text rather than its word set.
+    """
+
+    pattern: str
+    ngram: int = 3
+
+
 def query_words(q: Query) -> list[str]:
     """Distinct words in a query tree, stable order."""
     out: list[str] = []

@@ -10,11 +10,30 @@ bin pointers) lives in memory. A query is:
             then filter by actual content → perfect precision.
 
 There is never a dependent read chain — that is the paper's whole thesis.
+
+The engine is phase-split so a *batch* of queries scales with concurrency
+instead of query count (docs/query_engine.md):
+
+  plan   — every query's superpost pointers are gathered together, bins
+           shared across words AND across queries are deduplicated;
+  fetch  — near-adjacent ranges in the same block are coalesced into one
+           spanning read (`fetch_plan`), an optional byte-bounded LRU
+           `SuperpostCache` serves hot bins with zero network cost, and
+           whatever remains goes out as ONE `fetch_batch`;
+  decode — each unique superpost is decoded once and distributed to all
+           queries that wanted it; combine/top-K/document filtering then
+           run per query, with round-2 document reads again deduplicated,
+           coalesced, and batched across the whole query batch.
+
+`lookup`/`query` are the single-query views of the same three phases, so
+serial and batched execution are result-identical by construction.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import re as _re
+from dataclasses import dataclass, field, replace
+from typing import Callable
 
 import numpy as np
 
@@ -24,9 +43,11 @@ from ..core.topk import sample_size
 from ..data.corpus import DocRef
 from ..data.tokenizer import distinct_words
 from ..storage.blobstore import RangeRequest
+from ..storage.cache import SuperpostCache
 from ..storage.simcloud import FetchStats, SimCloudStore
 from . import codec
-from .query import And, Or, Query, Term, query_words
+from .fetch_plan import coalesce_requests, slice_payloads
+from .query import And, Or, Query, Regex, Term, query_words
 
 
 @dataclass
@@ -50,10 +71,43 @@ class QueryResult:
     stats: QueryStats
 
 
+@dataclass
+class _LookupPlan:
+    """Round-1 fetch plan: unique words -> unique superpost requests."""
+
+    words: list[str]                      # first-appearance order
+    word_reqs: dict[str, list[int]]       # word -> indices into `requests`
+    requests: list[RangeRequest]          # deduplicated across the batch
+    # requests that appear ONLY as §IV-G hedge layers (position >= L of
+    # every word using them) — the only ones a hedged wait may abandon
+    hedgeable: set[int] = field(default_factory=set)
+
+
+@dataclass
+class _Job:
+    """One query of a batch: lookup tree + round-2 acceptance filter.
+
+    Exactly one of the predicates is set: tree queries filter on the
+    document's word set (computed once per unique document in a batch),
+    regex jobs on the raw text.
+    """
+
+    lookup_q: Query
+    accept_words: Callable[[set[str]], bool] | None = None
+    accept_text: Callable[[str], bool] | None = None
+    top_k: int | None = None
+    delta: float = 1e-6
+    fetch_documents: bool = True
+
+
 class Searcher:
-    def __init__(self, cloud: SimCloudStore, prefix: str) -> None:
+    def __init__(self, cloud: SimCloudStore, prefix: str,
+                 cache: SuperpostCache | None = None,
+                 coalesce_gap: int | None = 4096) -> None:
         self.cloud = cloud
         self.prefix = prefix
+        self.cache = cache
+        self.coalesce_gap = coalesce_gap
         # --- initialization: ONE read of the header block ---------------
         data, self.init_stats = cloud.fetch(
             RangeRequest(f"{prefix}/header.airp"))
@@ -85,6 +139,86 @@ class Searcher:
     def _request(self, ptr: codec.BinPointer) -> RangeRequest:
         return RangeRequest(self.blocks[ptr.block], ptr.offset, ptr.length)
 
+    # ----------------------------------------------------------- phase: plan
+    def _plan_words(self, word_lists: list[list[str]]) -> _LookupPlan:
+        """Merge all queries' words into one deduplicated request list."""
+        plan = _LookupPlan(words=[], word_reqs={}, requests=[])
+        req_index: dict[codec.BinPointer, int] = {}
+        required: set[int] = set()
+        for wl in word_lists:
+            for w in wl:
+                if w in plan.word_reqs:
+                    continue
+                ptrs, is_common = self._pointers_for_word(w)
+                idxs = []
+                for p in ptrs:
+                    if p not in req_index:
+                        req_index[p] = len(plan.requests)
+                        plan.requests.append(self._request(p))
+                    idxs.append(req_index[p])
+                if is_common:
+                    required.update(idxs)
+                else:
+                    required.update(idxs[:self.L])
+                    plan.hedgeable.update(idxs[self.L:])
+                plan.words.append(w)
+                plan.word_reqs[w] = idxs
+        plan.hedgeable -= required      # shared with a non-hedge layer
+        return plan
+
+    # ---------------------------------------------------------- phase: fetch
+    def _fetch_ranges(self, requests: list[RangeRequest], *,
+                      hedge: bool = False,
+                      hedgeable: set[int] | None = None,
+                      use_cache: bool = False,
+                      ) -> tuple[list[bytes | None], FetchStats]:
+        """One batched round: cache → coalesce → fetch → slice.
+
+        Hedging needs per-request completion granularity, so a hedged
+        round skips coalescing; cached payloads never hit the network
+        either way. `hedgeable` are the request indices a hedged wait is
+        allowed to abandon — the budget is counted over the actual miss
+        set, so a warm cache never causes non-hedge layers to be dropped.
+        """
+        stats = FetchStats()
+        payloads: list[bytes | None] = [None] * len(requests)
+        miss_idx: list[int] = []
+        cache = self.cache if use_cache else None
+        if cache is not None:
+            for i, r in enumerate(requests):
+                p = cache.get(r.blob, r.offset, r.length) \
+                    if r.length >= 0 else None
+                if p is None:
+                    miss_idx.append(i)
+                else:
+                    payloads[i] = p
+                    stats.cache_hits += 1
+                    stats.cache_bytes_saved += len(p)
+        else:
+            miss_idx = list(range(len(requests)))
+
+        miss = [requests[i] for i in miss_idx]
+        if miss:
+            n_hedgeable = len((hedgeable or set()) & set(miss_idx)) \
+                if hedge else 0
+            if n_hedgeable:      # nothing to abandon -> coalesce instead
+                wait_for = max(1, len(miss) - n_hedgeable)
+                got, fstats = self.cloud.fetch_batch(miss, wait_for=wait_for)
+            elif self.coalesce_gap is not None:
+                merged, slices = coalesce_requests(miss, self.coalesce_gap)
+                merged_payloads, fstats = self.cloud.fetch_batch(merged)
+                got = slice_payloads(miss, merged_payloads, slices)
+            else:
+                got, fstats = self.cloud.fetch_batch(miss)
+            stats.add(fstats)
+            for i, p in zip(miss_idx, got):
+                payloads[i] = p
+                if p is not None and cache is not None \
+                        and requests[i].length >= 0:
+                    cache.put(requests[i].blob, requests[i].offset,
+                              requests[i].length, p)
+        return payloads, stats
+
     # ---------------------------------------------------------------- lookup
     def lookup(self, q: Query | str, hedge: bool = False,
                ) -> tuple[dict[str, tuple[np.ndarray, np.ndarray]], QueryStats]:
@@ -97,101 +231,241 @@ class Searcher:
         batch-approximate for multi-term ones).
         """
         q = Term(q) if isinstance(q, str) else q
-        words = query_words(q)
-        stats = QueryStats()
-        plan: list[tuple[str, list[int]]] = []      # word -> request indices
-        requests: list[RangeRequest] = []
-        req_index: dict[codec.BinPointer, int] = {}
-        n_hedgeable = 0
-        for w in words:
-            ptrs, is_common = self._pointers_for_word(w)
-            idxs = []
-            for p in ptrs:
-                if p not in req_index:
-                    req_index[p] = len(requests)
-                    requests.append(self._request(p))
-                idxs.append(req_index[p])
-            if not is_common and self.L_total > self.L:
-                n_hedgeable += self.L_total - self.L
-            plan.append((w, idxs))
+        outs, stats = self.lookup_batch([q], hedge=hedge)
+        return outs[0], stats
 
-        wait_for = None
-        if hedge and n_hedgeable:
-            wait_for = max(1, len(requests) - n_hedgeable)
-        payloads, fstats = self.cloud.fetch_batch(requests, wait_for=wait_for)
+    def lookup_batch(self, queries: list[Query | str], hedge: bool = False,
+                     ) -> tuple[list[dict[str, tuple[np.ndarray, np.ndarray]]],
+                                QueryStats]:
+        """Round 1 for a whole batch: plan together, fetch once, decode once.
+
+        Bins shared across words and across queries are fetched (and
+        decoded) exactly once; near-adjacent bins in the same block ride
+        one coalesced range read.
+        """
+        qs = [Term(q) if isinstance(q, str) else q for q in queries]
+        word_lists = [query_words(q) for q in qs]
+        stats = QueryStats()
+        plan = self._plan_words(word_lists)
+        payloads, fstats = self._fetch_ranges(
+            plan.requests, hedge=hedge, hedgeable=plan.hedgeable,
+            use_cache=True)
         stats.lookup = fstats
         stats.rounds += 1
 
-        out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
-        for w, idxs in plan:
+        # hedging must keep >= 1 layer per word: re-fetch (in ONE batch)
+        # the first layer of any word whose every request was abandoned
+        missing = [w for w in plan.words
+                   if all(payloads[i] is None for i in plan.word_reqs[w])]
+        if missing:
+            fb, extra = self.cloud.fetch_batch(
+                [plan.requests[plan.word_reqs[w][0]] for w in missing])
+            stats.lookup.add(extra)
+            for w, p in zip(missing, fb):
+                payloads[plan.word_reqs[w][0]] = p
+
+        # --- phase: decode (each unique superpost exactly once) ---------
+        decoded: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        word_out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        for w in plan.words:
             posts = []
-            for i in idxs:
+            for i in plan.word_reqs[w]:
                 if payloads[i] is None:      # hedged-away straggler
                     continue
-                posts.append(codec.decode_superpost(payloads[i]))
-            if not posts:                    # hedging must keep >= 1 layer
-                payload, extra = self.cloud.fetch(requests[idxs[0]])
-                stats.lookup.add(extra)
-                posts.append(codec.decode_superpost(payload))
+                if i not in decoded:
+                    decoded[i] = codec.decode_superpost(payloads[i])
+                posts.append(decoded[i])
             keys = intersect_sorted([k for k, _len in posts])
             # recover lengths from whichever layer, via searchsorted
             k0, l0 = posts[0]
             lengths = l0[np.searchsorted(k0, keys)]
-            out[w] = (keys, lengths)
-        stats.n_candidates = int(sum(len(k) for k, _ in out.values()))
-        return out, stats
+            word_out[w] = (keys, lengths)
+        outs = [{w: word_out[w] for w in wl} for wl in word_lists]
+        stats.n_candidates = int(
+            sum(len(k) for d in outs for k, _ in d.values()))
+        return outs, stats
 
     # ----------------------------------------------------------------- query
     def query(self, q: Query | str, top_k: int | None = None,
               hedge: bool = False, delta: float = 1e-6,
               fetch_documents: bool = True) -> QueryResult:
         q = Term(q) if isinstance(q, str) else q
-        per_word, stats = self.lookup(q, hedge=hedge)
+        job = self._make_job(q, top_k=top_k, delta=delta,
+                             fetch_documents=fetch_documents)
+        return self._execute_jobs([job], hedge=hedge)[0]
 
-        keys, lengths = _combine(q, per_word)
-        stats.n_candidates = len(keys)
-        if not fetch_documents:
-            refs = self._refs(keys, lengths)
-            return QueryResult(refs=refs, texts=[], stats=stats)
+    def _make_job(self, q: Query, top_k: int | None = None,
+                  delta: float = 1e-6, fetch_documents: bool = True) -> _Job:
+        if isinstance(q, Regex):
+            lookup_q, compiled = self._regex_prefilter(q.pattern, q.ngram)
+            return _Job(lookup_q=lookup_q,
+                        accept_text=lambda t, c=compiled: bool(c.search(t)),
+                        top_k=top_k, delta=delta,
+                        fetch_documents=fetch_documents)
+        return _Job(lookup_q=q,
+                    accept_words=lambda ws, q=q: _matches(q, ws),
+                    top_k=top_k, delta=delta, fetch_documents=fetch_documents)
 
-        # --- top-K sampling (§IV-D, Eq. 6) ------------------------------
-        order = np.arange(len(keys))
-        want = len(keys)
-        if top_k is not None and len(keys):
-            rk = sample_size(len(keys), top_k, self.F0, delta)
-            rng = np.random.default_rng(int(keys[0]) & 0xFFFF)
-            order = rng.permutation(len(keys))
-            want = top_k
-            keys_s, lengths_s = keys[order[:rk]], lengths[order[:rk]]
-        else:
-            keys_s, lengths_s = keys, lengths
+    def query_batch(self, queries: list[Query | str],
+                    top_k: int | None = None, hedge: bool = False,
+                    impl: str = "sorted") -> list[QueryResult]:
+        """Execute a whole batch of queries in two shared fetch rounds.
 
-        texts, refs = self._fetch_and_filter(q, keys_s, lengths_s, stats)
-        if top_k is not None and len(texts) < want and len(keys) > len(keys_s):
-            # Eq. 6 failure (prob < delta) or tiny candidate set: fall back
-            # to fetching the remainder.
-            rest = order[len(keys_s):]
-            t2, r2 = self._fetch_and_filter(
-                q, keys[rest], lengths[rest], stats)
-            texts += t2
-            refs += r2
-        if top_k is not None:
-            texts, refs = texts[:want], refs[:want]
-        stats.n_results = len(texts)
-        return QueryResult(refs=refs, texts=texts, stats=stats)
+        Accepts Term/And/Or trees, raw strings (single terms), and `Regex`
+        jobs. Results are identical to per-query `query`; only the
+        (simulated) latency and request count differ. With
+        `impl="bitmap"`, multi-term AND combines run through the batched
+        Pallas intersection kernel (`kernels/intersect`).
+        """
+        jobs = [self._make_job(Term(q) if isinstance(q, str) else q,
+                               top_k=top_k) for q in queries]
+        return self._execute_jobs(jobs, hedge=hedge, impl=impl)
+
+    # ----------------------------------------------------------- job executor
+    def _execute_jobs(self, jobs: list[_Job], hedge: bool = False,
+                      impl: str = "sorted") -> list[QueryResult]:
+        per_word_list, lstats = self.lookup_batch(
+            [j.lookup_q for j in jobs], hedge=hedge)
+        combined = self._combine_jobs(jobs, per_word_list, impl)
+
+        results: list[QueryResult | None] = [None] * len(jobs)
+        stats_of = [QueryStats(lookup=replace(lstats.lookup), rounds=1)
+                    for _ in jobs]
+
+        # --- top-K sampling (§IV-D, Eq. 6) per job ----------------------
+        sampled: list[tuple[np.ndarray, np.ndarray]] = []
+        orders: list[np.ndarray] = []
+        wants: list[int] = []
+        for j, (job, (keys, lengths)) in enumerate(zip(jobs, combined)):
+            stats_of[j].n_candidates = len(keys)
+            order = np.arange(len(keys))
+            want = len(keys)
+            if job.top_k is not None and len(keys):
+                rk = sample_size(len(keys), job.top_k, self.F0, job.delta)
+                rng = np.random.default_rng(int(keys[0]) & 0xFFFF)
+                order = rng.permutation(len(keys))
+                want = job.top_k
+                sampled.append((keys[order[:rk]], lengths[order[:rk]]))
+            else:
+                sampled.append((keys, lengths))
+            orders.append(order)
+            wants.append(want)
+            if not job.fetch_documents:
+                refs = self._refs(keys, lengths)
+                results[j] = QueryResult(refs=refs, texts=[],
+                                         stats=stats_of[j])
+
+        # --- round 2: ONE deduplicated+coalesced batch for all jobs -----
+        live = [j for j in range(len(jobs)) if results[j] is None]
+        job_refs = {j: self._refs(*sampled[j]) for j in live}
+        texts_of, refs_of = self._fetch_and_filter_batch(
+            jobs, job_refs, stats_of)
+
+        # --- Eq. 6 failure (prob < delta) or tiny candidate set: fall
+        # back to fetching the remainder — again ONE batch for every job
+        # that came up short.
+        fallback: dict[int, list[DocRef]] = {}
+        for j in live:
+            keys, _lengths = combined[j]
+            n_sampled = len(sampled[j][0])
+            if jobs[j].top_k is not None and len(texts_of[j]) < wants[j] \
+                    and len(keys) > n_sampled:
+                rest = orders[j][n_sampled:]
+                fallback[j] = self._refs(keys[rest], combined[j][1][rest])
+        if fallback:
+            t2, r2 = self._fetch_and_filter_batch(jobs, fallback, stats_of)
+            for j in fallback:
+                texts_of[j] += t2[j]
+                refs_of[j] += r2[j]
+
+        for j in live:
+            texts, refs = texts_of[j], refs_of[j]
+            if jobs[j].top_k is not None:
+                texts, refs = texts[:wants[j]], refs[:wants[j]]
+            stats_of[j].n_results = len(texts)
+            results[j] = QueryResult(refs=refs, texts=texts,
+                                     stats=stats_of[j])
+        return results  # type: ignore[return-value]
+
+    def _fetch_and_filter_batch(self, jobs: list[_Job],
+                                job_refs: dict[int, list[DocRef]],
+                                stats_of: list[QueryStats],
+                                ) -> tuple[dict[int, list[str]],
+                                           dict[int, list[DocRef]]]:
+        """Round 2 for many jobs: documents wanted by several queries are
+        fetched once; ranges are coalesced; false positives filtered per
+        job by its own acceptance predicate."""
+        uniq: dict[tuple[str, int, int], int] = {}
+        requests: list[RangeRequest] = []
+        for j in sorted(job_refs):
+            for r in job_refs[j]:
+                key = (r.blob, r.offset, r.length)
+                if key not in uniq:
+                    uniq[key] = len(requests)
+                    requests.append(RangeRequest(r.blob, r.offset, r.length))
+        texts_of: dict[int, list[str]] = {j: [] for j in job_refs}
+        refs_of: dict[int, list[DocRef]] = {j: [] for j in job_refs}
+        if not requests:
+            return texts_of, refs_of
+        payloads, fstats = self._fetch_ranges(requests)
+        # decode-once: a document wanted by several queries is utf-8
+        # decoded (and tokenized, for word filters) a single time
+        texts_u: list[str | None] = [None] * len(requests)
+        words_u: list[set[str] | None] = [None] * len(requests)
+        for j, refs in job_refs.items():
+            if not refs:         # done after round 1 — no doc round for it
+                continue
+            stats_of[j].docs.add(fstats)
+            stats_of[j].rounds += 1
+            job = jobs[j]
+            for ref in refs:
+                u = uniq[(ref.blob, ref.offset, ref.length)]
+                if texts_u[u] is None:
+                    payload = payloads[u]
+                    assert payload is not None
+                    texts_u[u] = payload.decode("utf-8")
+                text = texts_u[u]
+                if job.accept_text is not None:
+                    ok = job.accept_text(text)
+                else:
+                    if words_u[u] is None:
+                        words_u[u] = distinct_words(text)
+                    ok = job.accept_words(words_u[u])
+                if ok:
+                    texts_of[j].append(text)
+                    refs_of[j].append(ref)
+                else:
+                    stats_of[j].n_false_positives += 1
+        return texts_of, refs_of
+
+    # ----------------------------------------------------------- combine
+    def _combine_jobs(self, jobs: list[_Job],
+                      per_word_list: list[dict],
+                      impl: str) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Per-job ∪/∩ combine; `impl="bitmap"` batches every multi-term
+        AND through one `intersect_batch` Pallas call."""
+        out: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(jobs)
+        bitmap_jobs: list[int] = []
+        for j, (job, per_word) in enumerate(zip(jobs, per_word_list)):
+            q = job.lookup_q
+            if impl == "bitmap" and isinstance(q, And) \
+                    and all(isinstance(s, Term) for s in q.items) \
+                    and len(per_word) >= 2:
+                bitmap_jobs.append(j)
+            else:
+                out[j] = _combine(q, per_word)
+        if bitmap_jobs:
+            parts_list = [[per_word_list[j][w]
+                           for w in query_words(jobs[j].lookup_q)]
+                          for j in bitmap_jobs]
+            for j, res in zip(bitmap_jobs, _bitmap_and_batch(parts_list)):
+                out[j] = res
+        return out  # type: ignore[return-value]
 
     # ------------------------------------------------------------- regex
-    def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
-        """RegEx search via n-gram prefilter (paper §IV-F).
-
-        Literal runs (>= n chars) in the pattern are broken into the
-        n-grams the Builder indexed (`index_ngrams=n`); the sketch's AND
-        over those grams yields a candidate superset (no false
-        negatives); fetched documents are then matched against the real
-        regex — superpost false positives never affect correctness.
-        """
-        import re as _re
-
+    def _regex_prefilter(self, pattern: str, ngram: int,
+                         ) -> tuple[Query, "_re.Pattern[str]"]:
+        """Literal runs (>= n chars) → AND of indexed n-grams (§IV-F)."""
         from .builder import NGRAM_PREFIX
         # extract guaranteed-literal runs: strip character classes,
         # escapes, and quantified atoms (an atom before ?/*/{m,n} may not
@@ -214,55 +488,23 @@ class Searcher:
                 "chars to prefilter on (a full corpus scan would be "
                 "required — rejected, like the paper's RegEx engines)")
         q = And(tuple(Term(NGRAM_PREFIX + g) for g in dict.fromkeys(grams)))
-        per_word, stats = self.lookup(q)
-        keys, lengths = _combine(q, per_word)
-        stats.n_candidates = len(keys)
-        texts, refs = [], []
-        compiled = _re.compile(pattern)
-        cand_refs = self._refs(keys, lengths)
-        if cand_refs:
-            payloads, fstats = self.cloud.fetch_batch(
-                [RangeRequest(r.blob, r.offset, r.length)
-                 for r in cand_refs])
-            stats.docs.add(fstats)
-            stats.rounds += 1
-            for ref, payload in zip(cand_refs, payloads):
-                text = payload.decode("utf-8")
-                if compiled.search(text):
-                    texts.append(text)
-                    refs.append(ref)
-                else:
-                    stats.n_false_positives += 1
-        stats.n_results = len(texts)
-        return QueryResult(refs=refs, texts=texts, stats=stats)
+        return q, _re.compile(pattern)
+
+    def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
+        """RegEx search via n-gram prefilter (paper §IV-F).
+
+        The sketch's AND over the pattern's literal n-grams yields a
+        candidate superset (no false negatives); fetched documents are
+        then matched against the real regex — superpost false positives
+        never affect correctness.
+        """
+        return self._execute_jobs([self._make_job(Regex(pattern, ngram))])[0]
 
     # ----------------------------------------------------------------- utils
     def _refs(self, keys: np.ndarray, lengths: np.ndarray) -> list[DocRef]:
         blob_keys, offsets = codec.split_posting_key(keys)
         return [DocRef(self.string_table[int(b)], int(o), int(n))
                 for b, o, n in zip(blob_keys, offsets, lengths)]
-
-    def _fetch_and_filter(self, q: Query, keys: np.ndarray,
-                          lengths: np.ndarray, stats: QueryStats,
-                          ) -> tuple[list[str], list[DocRef]]:
-        """Round 2: fetch candidate documents, filter false positives."""
-        refs = self._refs(keys, lengths)
-        if not refs:
-            return [], []
-        payloads, fstats = self.cloud.fetch_batch(
-            [RangeRequest(r.blob, r.offset, r.length) for r in refs])
-        stats.docs.add(fstats)
-        stats.rounds += 1
-        texts, kept = [], []
-        for ref, payload in zip(refs, payloads):
-            assert payload is not None
-            text = payload.decode("utf-8")
-            if _matches(q, distinct_words(text)):
-                texts.append(text)
-                kept.append(ref)
-            else:
-                stats.n_false_positives += 1
-        return texts, kept
 
 
 def _combine(q: Query, per_word: dict[str, tuple[np.ndarray, np.ndarray]],
@@ -287,6 +529,52 @@ def _combine(q: Query, per_word: dict[str, tuple[np.ndarray, np.ndarray]],
             hit = k[idx] == keys
             lengths[hit] = l[idx[hit]]
     return keys, lengths
+
+
+def _bitmap_and_batch(parts_list: list[list[tuple[np.ndarray, np.ndarray]]],
+                      ) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Batched multi-way AND via the Pallas bitmap kernel.
+
+    Each job's posting keys are mapped into a dense per-job universe
+    (the union of its words' candidate keys); all jobs' bitsets are then
+    intersected in ONE `intersect_batch` call, ragged L and W padded to
+    the batch maxima (all-ones layers are AND identities; key universes
+    shorter than the widest job simply leave their tail bits zero).
+    """
+    from ..kernels.intersect import intersect_batch, postings_to_bitmap_batch
+
+    universes: list[np.ndarray | None] = []
+    rows: list[list[np.ndarray]] = []
+    for parts in parts_list:
+        keys_list = [k for k, _l in parts]
+        if any(len(k) == 0 for k in keys_list):
+            universes.append(None)      # empty AND — no kernel work
+            continue
+        uni = np.unique(np.concatenate(keys_list))
+        universes.append(uni)
+        rows.append([np.searchsorted(uni, k).astype(np.uint32)
+                     for k in keys_list])
+
+    out: list[tuple[np.ndarray, np.ndarray]] = []
+    if rows:
+        n_bits = max(len(u) for u in universes if u is not None)
+        bitmaps = postings_to_bitmap_batch(rows, n_bits)
+        inter, _counts = intersect_batch(bitmaps)
+        inter = np.asarray(inter)
+    row_i = 0
+    for parts, uni in zip(parts_list, universes):
+        if uni is None:
+            out.append((np.empty(0, dtype=np.uint64),
+                        np.empty(0, dtype=np.uint64)))
+            continue
+        bits = np.unpackbits(inter[row_i].view(np.uint8), bitorder="little")
+        sel = np.flatnonzero(bits[:len(uni)])
+        row_i += 1
+        keys = uni[sel]
+        k0, l0 = parts[0]
+        lengths = l0[np.searchsorted(k0, keys)]
+        out.append((keys, lengths))
+    return out
 
 
 def _matches(q: Query, words: set[str]) -> bool:

@@ -1,5 +1,7 @@
-from .ops import bitmap_to_docs, intersect, postings_to_bitmap
-from .ref import intersect_ref, popcount
+from .ops import (bitmap_to_docs, intersect, intersect_batch,
+                  postings_to_bitmap, postings_to_bitmap_batch)
+from .ref import intersect_batch_ref, intersect_ref, popcount
 
-__all__ = ["bitmap_to_docs", "intersect", "postings_to_bitmap",
-           "intersect_ref", "popcount"]
+__all__ = ["bitmap_to_docs", "intersect", "intersect_batch",
+           "postings_to_bitmap", "postings_to_bitmap_batch",
+           "intersect_batch_ref", "intersect_ref", "popcount"]

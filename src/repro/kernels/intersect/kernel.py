@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: L-way bitmap intersection + popcount.
+"""Pallas TPU kernels: L-way bitmap intersection + popcount.
 
 The IoU Sketch query combine (paper §II-C): L superposts arrive as
 document-space bitsets; the final postings list is their intersection.
@@ -6,9 +6,17 @@ On TPU we tile the document axis through VMEM in (8, 128)-aligned blocks
 and fuse AND-reduce with population count in one pass, so candidate
 counting (needed by top-K sampling, Eq. 6) costs no extra HBM traffic.
 
-Layout: bitmaps (L, W) uint32 where W = n_docs/32, padded to the tile.
-Grid is 1-D over W tiles; each program streams an (L, TILE) block
-HBM→VMEM, writes the (TILE,) intersection and a per-tile partial count.
+Two entry points:
+
+  * `intersect_pallas`  — one query: bitmaps (L, W), 1-D grid over W tiles;
+  * `intersect_batch_pallas` — a whole query batch: bitmaps (Q, L, W),
+    2-D grid over (query, tile) so every query's AND tree runs in ONE
+    `pallas_call` — the kernel-side half of the batched query engine
+    (ragged batches are padded with all-ones layers, the AND identity).
+
+Layout: bitmaps (… , L, W) uint32 where W = n_docs/32, padded to the tile.
+Each program streams an (L, TILE) block HBM→VMEM, writes the (TILE,)
+intersection and a per-tile partial count.
 """
 
 from __future__ import annotations
@@ -22,19 +30,21 @@ from jax.experimental import pallas as pl
 TILE = 1024           # uint32 words per program: L×4 KiB of VMEM per layer
 
 
+def _popcount_swar(x: jnp.ndarray) -> jnp.ndarray:
+    """Bit-parallel SWAR popcount of a uint32 vector."""
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
 def _kernel(bm_ref, out_ref, cnt_ref):
     block = bm_ref[...]                     # (L, TILE) uint32
     acc = block[0]
     for l in range(1, block.shape[0]):      # L is static — unrolled AND tree
         acc = jnp.bitwise_and(acc, block[l])
     out_ref[...] = acc
-    # fused popcount (bit-parallel SWAR)
-    x = acc
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    counts = (x * jnp.uint32(0x01010101)) >> 24
-    cnt_ref[...] = jnp.sum(counts, dtype=jnp.uint32)[None]
+    cnt_ref[...] = jnp.sum(_popcount_swar(acc), dtype=jnp.uint32)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -58,3 +68,41 @@ def intersect_pallas(bitmaps: jnp.ndarray, interpret: bool = True,
         interpret=interpret,
     )(bitmaps)
     return out[:W], jnp.sum(counts, dtype=jnp.uint32)
+
+
+def _batch_kernel(bm_ref, out_ref, cnt_ref):
+    block = bm_ref[...]                     # (1, L, TILE) uint32
+    acc = block[0, 0]
+    for l in range(1, block.shape[1]):      # L static — unrolled AND tree
+        acc = jnp.bitwise_and(acc, block[0, l])
+    out_ref[...] = acc[None]
+    cnt_ref[...] = jnp.sum(_popcount_swar(acc),
+                           dtype=jnp.uint32)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def intersect_batch_pallas(bitmaps: jnp.ndarray, interpret: bool = True,
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """bitmaps: (Q, L, W) uint32 → (intersections (Q, W), counts (Q,)).
+
+    Grid is (query, tile): program (q, i) ANDs the i-th document tile of
+    query q's L layers and emits its partial popcount — a whole batch of
+    multi-term queries combines in one fused pass.
+    """
+    Q, L, W = bitmaps.shape
+    pad = (-W) % TILE
+    if pad:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, 0), (0, pad)))
+    Wp = W + pad
+    n_tiles = Wp // TILE
+    out, counts = pl.pallas_call(
+        _batch_kernel,
+        grid=(Q, n_tiles),
+        in_specs=[pl.BlockSpec((1, L, TILE), lambda q, i: (q, 0, i))],
+        out_specs=[pl.BlockSpec((1, TILE), lambda q, i: (q, i)),
+                   pl.BlockSpec((1, 1), lambda q, i: (q, i))],
+        out_shape=[jax.ShapeDtypeStruct((Q, Wp), jnp.uint32),
+                   jax.ShapeDtypeStruct((Q, n_tiles), jnp.uint32)],
+        interpret=interpret,
+    )(bitmaps)
+    return out[:, :W], jnp.sum(counts, axis=1, dtype=jnp.uint32)

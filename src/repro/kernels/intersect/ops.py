@@ -5,8 +5,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import intersect_pallas
-from .ref import intersect_ref
+from .kernel import intersect_batch_pallas, intersect_pallas
+from .ref import intersect_batch_ref, intersect_ref
 
 
 def postings_to_bitmap(postings: list[np.ndarray], n_docs: int) -> np.ndarray:
@@ -17,6 +17,23 @@ def postings_to_bitmap(postings: list[np.ndarray], n_docs: int) -> np.ndarray:
         docs = np.asarray(docs, dtype=np.uint64)
         np.bitwise_or.at(out[l], (docs // 32).astype(np.int64),
                          np.uint32(1) << (docs % 32).astype(np.uint32))
+    return out
+
+
+def postings_to_bitmap_batch(postings_batch: list[list[np.ndarray]],
+                             n_docs: int) -> np.ndarray:
+    """Ragged batch of doc-id lists → (Q, L_max, W) uint32 bitsets.
+
+    Queries with fewer than L_max postings lists are padded with all-ones
+    layers — the AND identity — so one fused kernel call handles a batch
+    of queries with different term counts.
+    """
+    L_max = max(len(p) for p in postings_batch)
+    W = (n_docs + 31) // 32
+    out = np.full((len(postings_batch), L_max, W), 0xFFFFFFFF,
+                  dtype=np.uint32)
+    for q, posts in enumerate(postings_batch):
+        out[q, :len(posts)] = postings_to_bitmap(posts, n_docs)
     return out
 
 
@@ -33,3 +50,11 @@ def intersect(bitmaps, impl: str = "pallas", interpret: bool = True):
     if impl == "ref":
         return intersect_ref(bitmaps)
     return intersect_pallas(bitmaps, interpret=interpret)
+
+
+def intersect_batch(bitmaps, impl: str = "pallas", interpret: bool = True):
+    """(Q, L, W) uint32 → (bitmaps (Q, W), counts (Q,)). impl: pallas | ref."""
+    bitmaps = jnp.asarray(bitmaps, dtype=jnp.uint32)
+    if impl == "ref":
+        return intersect_batch_ref(bitmaps)
+    return intersect_batch_pallas(bitmaps, interpret=interpret)

@@ -4,6 +4,13 @@ A Searcher instance is ~2 MB of MHT state: it boots from one header read
 and serves queries statelessly (FaaS-style, paper §III-A). The service
 wraps one Searcher per corpus with latency accounting that mirrors the
 paper's benchmarks (mean / p99 / wait-vs-download split).
+
+`search_batch` is the scale path: N concurrent queries are planned,
+fetched, and decoded together through `Searcher.query_batch`, so the
+whole batch costs two shared fetch rounds instead of 2·N sequential ones
+(docs/query_engine.md). Two caches bound the hot-word worst case the
+paper's §IV-A remark describes: an LRU over whole query results here,
+and an optional byte-bounded LRU over raw superposts inside the Searcher.
 """
 
 from __future__ import annotations
@@ -14,6 +21,7 @@ import numpy as np
 
 from ..index.query import Query, parse
 from ..index.searcher import Searcher
+from ..storage.cache import LRUCache, SuperpostCache
 from ..storage.simcloud import SimCloudStore
 
 
@@ -24,6 +32,8 @@ class LatencyStats:
     download_s: list = field(default_factory=list)
     false_positives: int = 0
     results: int = 0
+    cache_hits: int = 0          # query-result cache
+    cache_lookups: int = 0
 
     def observe(self, stats) -> None:
         self.samples_s.append(stats.total_s)
@@ -44,34 +54,61 @@ class LatencyStats:
             "download_ms": float(np.mean(self.download_s) * 1e3)
             if len(arr) else 0.0,
             "avg_false_positives": self.false_positives / max(len(arr), 1),
+            "cache_hit_rate": self.cache_hits / self.cache_lookups
+            if self.cache_lookups else 0.0,
         }
 
 
 class SearchService:
     def __init__(self, cloud: SimCloudStore, index_prefix: str,
-                 hedge: bool = False, cache_size: int = 0) -> None:
-        self.searcher = Searcher(cloud, index_prefix)
+                 hedge: bool = False, cache_size: int = 0,
+                 superpost_cache_bytes: int = 0,
+                 coalesce_gap: int | None = 4096) -> None:
+        self.superpost_cache = SuperpostCache(superpost_cache_bytes) \
+            if superpost_cache_bytes else None
+        self.searcher = Searcher(cloud, index_prefix,
+                                 cache=self.superpost_cache,
+                                 coalesce_gap=coalesce_gap)
         self.hedge = hedge
         self.stats = LatencyStats()
-        # query cache (paper §IV-A remark: memoization bounds the worst
-        # case where a few irrelevant hot words dominate the distribution)
-        self._cache_size = cache_size
-        self._cache: dict = {}
-        self.cache_hits = 0
+        # query-result cache (paper §IV-A remark: memoization bounds the
+        # worst case where a few irrelevant hot words dominate) — LRU, so
+        # a burst of distinct queries evicts the coldest entry, not the
+        # oldest hot one
+        self._cache: LRUCache | None = \
+            LRUCache(cache_size) if cache_size else None
 
+    @property
+    def cache_hits(self) -> int:
+        return self.stats.cache_hits
+
+    # ------------------------------------------------------------ internals
+    def _cache_get(self, key):
+        if self._cache is None:
+            return None
+        hit = self._cache.get(key)
+        # mirror the LRU's own counters into the latency report
+        self.stats.cache_lookups += 1
+        if hit is not None:
+            self.stats.cache_hits += 1
+        return hit
+
+    def _cache_put(self, key, result) -> None:
+        if self._cache is not None:
+            self._cache.put(key, result)
+
+    # -------------------------------------------------------------- serving
     def search(self, query: Query | str, top_k: int | None = None):
+        """Serve one query (Term/And/Or tree, string, or `Regex`)."""
         if isinstance(query, str):
             query = parse(query)
         key = (query, top_k)
-        if self._cache_size and key in self._cache:
-            self.cache_hits += 1
-            return self._cache[key]
+        hit = self._cache_get(key)
+        if hit is not None:
+            return hit
         result = self.searcher.query(query, top_k=top_k, hedge=self.hedge)
         self.stats.observe(result.stats)
-        if self._cache_size:
-            if len(self._cache) >= self._cache_size:    # FIFO eviction
-                self._cache.pop(next(iter(self._cache)))
-            self._cache[key] = result
+        self._cache_put(key, result)
         return result
 
     def search_regex(self, pattern: str, ngram: int = 3):
@@ -79,5 +116,33 @@ class SearchService:
         self.stats.observe(result.stats)
         return result
 
-    def search_batch(self, queries, top_k: int | None = None):
-        return [self.search(q, top_k=top_k) for q in queries]
+    def search_batch(self, queries, top_k: int | None = None,
+                     batched: bool = True, impl: str = "sorted"):
+        """Serve a batch of queries (Query trees, strings, or `Regex`).
+
+        `batched=True` plans and fetches the whole batch together — two
+        shared rounds of range reads for all N queries. `batched=False`
+        is the serial per-query loop, kept for comparison benchmarks.
+        Results are identical either way; only latency and request count
+        differ.
+        """
+        if not batched:
+            return [self.search(q, top_k=top_k) for q in queries]
+        qs = [parse(q) if isinstance(q, str) else q for q in queries]
+        results: list = [None] * len(qs)
+        miss: list[int] = []
+        for i, q in enumerate(qs):
+            hit = self._cache_get((q, top_k))
+            if hit is not None:
+                results[i] = hit
+            else:
+                miss.append(i)
+        if miss:
+            batch = self.searcher.query_batch(
+                [qs[i] for i in miss], top_k=top_k, hedge=self.hedge,
+                impl=impl)
+            for i, res in zip(miss, batch):
+                results[i] = res
+                self.stats.observe(res.stats)
+                self._cache_put((qs[i], top_k), res)
+        return results

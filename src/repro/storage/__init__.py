@@ -1,7 +1,9 @@
 """Separation of compute and storage: blob stores + simulated cloud."""
 
 from .blobstore import BlobStore, InMemoryBlobStore, LocalBlobStore, RangeRequest
+from .cache import LRUCache, SuperpostCache
 from .simcloud import REGIONS, FetchStats, NetworkModel, SimCloudStore
 
 __all__ = ["BlobStore", "InMemoryBlobStore", "LocalBlobStore", "RangeRequest",
+           "LRUCache", "SuperpostCache",
            "REGIONS", "FetchStats", "NetworkModel", "SimCloudStore"]

@@ -50,6 +50,8 @@ class BlobStore(ABC):
         return self.get_range(RangeRequest(name))
 
     def exists(self, name: str) -> bool:
+        """Fallback for exotic subclasses; both built-in stores override
+        this with an O(1) check — `list` walks every blob."""
         return name in self.list(name)
 
     def total_bytes(self, prefix: str = "") -> int:
@@ -86,6 +88,10 @@ class InMemoryBlobStore(BlobStore):
     def list(self, prefix: str = "") -> list[str]:
         with self._lock:
             return sorted(n for n in self._blobs if n.startswith(prefix))
+
+    def exists(self, name: str) -> bool:
+        with self._lock:
+            return name in self._blobs
 
     def delete(self, name: str) -> None:
         with self._lock:
@@ -139,6 +145,9 @@ class LocalBlobStore(BlobStore):
                 if rel.startswith(prefix):
                     out.append(rel)
         return sorted(out)
+
+    def exists(self, name: str) -> bool:
+        return os.path.isfile(self._path(name))
 
     def delete(self, name: str) -> None:
         try:

@@ -1,0 +1,132 @@
+"""Weight-bounded LRU caching for the read path.
+
+Two users:
+
+  * `SuperpostCache` sits between the Searcher and `SimCloudStore` so hot
+    bins (common words, repeated query terms) stop paying first-byte
+    latency at all — each hit removes one range read from the next batch;
+  * `SearchService` reuses the plain `LRUCache` for whole query results
+    (the paper's §IV-A memoization remark), replacing its old unbounded
+    FIFO dict.
+
+Both are deliberately synchronous and in-process: a Searcher is FaaS-style
+per-worker state (paper §III-A), so its cache is too.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Hashable
+
+
+class LRUCache:
+    """LRU mapping bounded by total weight (entry count by default).
+
+    `weigh` turns a value into its weight; pass `len` to bound by bytes.
+    A single value heavier than `max_weight` is simply not admitted.
+    """
+
+    def __init__(self, max_weight: int,
+                 weigh: Callable[[object], int] = lambda v: 1) -> None:
+        self.max_weight = int(max_weight)
+        self.weigh = weigh
+        self._data: OrderedDict = OrderedDict()
+        self.weight = 0
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._data     # does not touch recency or counters
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+    def get(self, key: Hashable, default=None):
+        try:
+            value = self._data[key]
+        except KeyError:
+            self.misses += 1
+            return default
+        self._data.move_to_end(key)
+        self.hits += 1
+        return value
+
+    def put(self, key: Hashable, value) -> None:
+        w = self.weigh(value)
+        old = self._data.pop(key, None)
+        if old is not None:
+            self.weight -= self.weigh(old)
+        if w > self.max_weight:
+            return              # never admit — and never keep a stale entry
+        self._data[key] = value
+        self.weight += w
+        while self.weight > self.max_weight:
+            _k, v = self._data.popitem(last=False)
+            self.weight -= self.weigh(v)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.weight = 0
+
+
+class SuperpostCache:
+    """Byte-bounded LRU over raw superpost payloads, keyed by range.
+
+    Keys are `(blob, offset, length)` triples — exactly a `RangeRequest`'s
+    identity — so a hit returns the same bytes the store would, and cached
+    runs stay result-identical to uncached ones. `bytes_saved` counts
+    payload bytes served from memory instead of the (simulated) network.
+    """
+
+    def __init__(self, max_bytes: int = 32 << 20) -> None:
+        self._lru = LRUCache(max_bytes, weigh=len)
+        self.bytes_saved = 0
+
+    # -- stats ------------------------------------------------------------
+    @property
+    def hits(self) -> int:
+        return self._lru.hits
+
+    @property
+    def misses(self) -> int:
+        return self._lru.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self._lru.hit_rate
+
+    @property
+    def cached_bytes(self) -> int:
+        return self._lru.weight
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    # -- access -----------------------------------------------------------
+    @staticmethod
+    def _key(blob: str, offset: int, length: int) -> tuple:
+        return (blob, int(offset), int(length))
+
+    def get(self, blob: str, offset: int, length: int) -> bytes | None:
+        payload = self._lru.get(self._key(blob, offset, length))
+        if payload is not None:
+            self.bytes_saved += len(payload)
+        return payload
+
+    def put(self, blob: str, offset: int, length: int, payload: bytes) -> None:
+        self._lru.put(self._key(blob, offset, length), payload)
+
+    def summary(self) -> dict:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "hit_rate": self.hit_rate, "bytes_saved": self.bytes_saved,
+            "cached_bytes": self.cached_bytes, "entries": len(self),
+        }

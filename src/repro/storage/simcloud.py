@@ -60,6 +60,8 @@ class FetchStats:
     bytes_fetched: int = 0
     n_requests: int = 0
     n_hedged_abandoned: int = 0  # hedged requests we did not wait for
+    cache_hits: int = 0          # range reads served by a SuperpostCache
+    cache_bytes_saved: int = 0   # payload bytes those hits avoided fetching
 
     def add(self, other: "FetchStats") -> None:
         self.elapsed_s += other.elapsed_s
@@ -68,6 +70,8 @@ class FetchStats:
         self.bytes_fetched += other.bytes_fetched
         self.n_requests += other.n_requests
         self.n_hedged_abandoned += other.n_hedged_abandoned
+        self.cache_hits += other.cache_hits
+        self.cache_bytes_saved += other.cache_bytes_saved
 
 
 class SimCloudStore:

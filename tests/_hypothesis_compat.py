@@ -1,0 +1,108 @@
+"""`hypothesis` when available, a tiny seeded-example fallback otherwise.
+
+The property tests in this suite only use a small slice of the hypothesis
+API: `@given` over `st.integers`, `st.floats`, `st.lists`, and `st.data()`
+draws, with `@settings(max_examples=..., deadline=...)` on top. When the
+real package is installed (see requirements-dev.txt) we re-export it and
+get full shrinking/coverage. Offline images without it still run every
+property test against a deterministic batch of seeded random examples —
+weaker than hypothesis, but far better than skipping the module.
+
+Usage in tests:
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+import random
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        """A strategy is just a callable drawing one value from an RNG."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _DataObject:
+        """Mimics the object produced by `st.data()`."""
+
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy: _Strategy):
+            return strategy.example(self._rng)
+
+    class _Namespace:
+        @staticmethod
+        def integers(min_value=0, max_value=2**63 - 1):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size if max_size is not None
+                                else min_size + 10)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def data():
+            return _Strategy(_DataObject)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+    st = _Namespace()
+
+    def given(*strategies: _Strategy):
+        def decorate(fn):
+            # NOTE: the wrapper must expose a ZERO-arg signature — pytest
+            # would otherwise read the wrapped test's parameters as fixture
+            # requests (functools.wraps copies __wrapped__, which
+            # inspect.signature follows, so it cannot be used here).
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                for ex in range(n):
+                    rng = random.Random(
+                        (zlib.crc32(fn.__qualname__.encode()) << 32) | ex)
+                    fn(*(s.example(rng) for s in strategies))
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = _DEFAULT_EXAMPLES
+            return wrapper
+        return decorate
+
+    def settings(max_examples: int | None = None, **_kw):
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+        return decorate
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

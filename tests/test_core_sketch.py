@@ -5,7 +5,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CorpusProfile, F_approx, F_exact, HashFamily,
                         InfeasibleSketchError, IoUSketch, L_star_per_doc,

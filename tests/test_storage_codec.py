@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.index import codec
 from repro.storage import (InMemoryBlobStore, LocalBlobStore, NetworkModel,
