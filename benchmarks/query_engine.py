@@ -32,13 +32,19 @@ from repro.data import make_logs_like, write_corpus
 from repro.data.tokenizer import distinct_words
 from repro.index import And, Builder, BuilderConfig, Or, Regex, Term
 from repro.serving import SearchService
-from repro.storage import InMemoryBlobStore, SimCloudStore
+from repro.storage import (InMemoryBlobStore, NetworkModel, SimCloudStore,
+                           SimCloudTransport, TransportPolicy)
 
 from .common import row
 
 N_QUERIES = 64
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_query_engine.json")
+
+# a straggler-heavy link (§IV-G regime): same base latency as the default
+# model, much fatter tail — where transport-level hedged GETs pay off
+TAIL_MODEL = NetworkModel(jitter_sigma=0.35, tail_prob=0.08,
+                          tail_scale=12.0, name="us-central1-highvar")
 
 
 def _fixture():
@@ -88,15 +94,28 @@ def _percentiles(samples_s: list[float]) -> dict:
     }
 
 
+def _serve_serially(cloud, svc, queries, *, queueing: bool,
+                    ) -> tuple[list, list[float]]:
+    """One query at a time on the virtual clock. With `queueing`, each
+    completion is measured from the burst's arrival (the seed engine's
+    latency under concurrent arrival); without, per-query clock deltas
+    (the tail scenario's per-request latency)."""
+    burst_start = cloud.clock_s
+    completions, results = [], []
+    for q in queries:
+        start = burst_start if queueing else cloud.clock_s
+        results.append(svc.search_regex(q.pattern, ngram=q.ngram)
+                       if isinstance(q, Regex) else svc.search(q))
+        completions.append(cloud.clock_s - start)
+    return results, completions
+
+
 def _run_serial(store, queries) -> tuple[list, dict]:
     cloud = SimCloudStore(store, seed=42)
     svc = SearchService(cloud, "index/qe", coalesce_gap=None)
     start = cloud.clock_s
-    completions, results = [], []
-    for q in queries:      # the seed path: one query at a time, queueing
-        results.append(svc.search_regex(q.pattern, ngram=q.ngram)
-                       if isinstance(q, Regex) else svc.search(q))
-        completions.append(cloud.clock_s - start)
+    results, completions = _serve_serially(cloud, svc, queries,
+                                           queueing=True)
     report = {**_percentiles(completions),
               "n_requests": cloud.totals.n_requests,
               "bytes_fetched": cloud.totals.bytes_fetched,
@@ -123,6 +142,41 @@ def _run_batched(store, queries, cache_bytes: int = 0,
     if cache_bytes and svc.superpost_cache is not None:
         last["superpost_cache"] = svc.superpost_cache.summary()
     return results, last
+
+
+def _run_tail(store, queries, policy: TransportPolicy | None,
+              ) -> tuple[list, dict]:
+    """Serve the workload serially on the high-variance model, so every
+    query's completion time (and therefore the tail) is visible."""
+    cloud = SimCloudStore(store, model=TAIL_MODEL, seed=7)
+    svc = SearchService(SimCloudTransport(cloud, policy=policy), "index/qe")
+    results, completions = _serve_serially(cloud, svc, queries,
+                                           queueing=False)
+    return results, {**_percentiles(completions),
+                     "n_requests": cloud.totals.n_requests,
+                     "n_hedges_issued": cloud.totals.n_hedges_issued,
+                     "n_hedge_wins": cloud.totals.n_hedge_wins}
+
+
+def _tail_scenario(store, queries) -> dict:
+    """Hedged-vs-unhedged duplicate GETs (docs/index_lifecycle.md):
+    identical bytes, fewer stragglers on the critical path."""
+    plain_res, plain = _run_tail(store, queries, None)
+    policy = TransportPolicy(hedge_after_s=2.0 * TAIL_MODEL.first_byte_s)
+    hedged_res, hedged = _run_tail(store, queries, policy)
+    return {
+        "network": (f"{TAIL_MODEL.name}: jitter_sigma="
+                    f"{TAIL_MODEL.jitter_sigma}, tail_prob="
+                    f"{TAIL_MODEL.tail_prob}, tail_scale="
+                    f"{TAIL_MODEL.tail_scale}"),
+        "hedge_after_ms": policy.hedge_after_s * 1e3,
+        "unhedged": plain,
+        "hedged": hedged,
+        "p99_speedup": plain["p99_ms"] / hedged["p99_ms"],
+        "extra_request_frac":
+            hedged["n_requests"] / plain["n_requests"] - 1.0,
+        "identical_results": _identical(plain_res, hedged_res),
+    }
 
 
 def _identical(a, b) -> bool:
@@ -155,6 +209,7 @@ def run() -> dict:
         "speedup_p50": serial["p50_ms"] / batched["p50_ms"],
         "request_reduction_frac":
             1.0 - batched["n_requests"] / serial["n_requests"],
+        "tail_scenario": _tail_scenario(store, queries),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
@@ -173,6 +228,13 @@ def bench_query_engine():
               f"identical={report['identical_results']}")
     yield row("query_engine/request_reduction",
               report["request_reduction_frac"] * 100, "percent")
+    tail = report["tail_scenario"]
+    for path in ("unhedged", "hedged"):
+        yield row(f"query_engine/tail_{path}_p99",
+                  tail[path]["p99_ms"] * 1e3,
+                  f"n_requests={tail[path]['n_requests']}")
+    yield row("query_engine/tail_hedged_p99_speedup", tail["p99_speedup"],
+              f"extra_requests={tail['extra_request_frac'] * 100:.1f}%")
 
 
 if __name__ == "__main__":

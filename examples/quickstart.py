@@ -1,5 +1,6 @@
-"""Quickstart: build an IoU Sketch index on (simulated) cloud storage and
-search it — the paper's Figure 1 flow, end to end.
+"""Quickstart: the index lifecycle on (simulated) cloud storage — build,
+open, search, append a delta segment, merge. The paper's Figure 1 flow
+end to end, through the `Index` façade (docs/index_lifecycle.md).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,8 +9,9 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro import BuilderConfig, Index
 from repro.data import make_logs_like, write_corpus
-from repro.index import And, Builder, BuilderConfig, Searcher, Term
+from repro.index import And, Term
 from repro.storage import InMemoryBlobStore, SimCloudStore
 
 
@@ -20,20 +22,25 @@ def main() -> None:
     corpus = write_corpus(store, "corpus/logs", docs, n_blobs=4)
     print(f"corpus: {corpus.n_docs} documents in 4 blobs")
 
-    # 2. Builder: profile -> optimize (Algorithm 1) -> compact -> persist
-    report = Builder(BuilderConfig(B=2000, F0=1.0, hedge_layers=1)).build(
-        corpus, store, "index/logs")
-    print(f"index: L*={report.L} layers (+{report.L_total - report.L} hedge)"
-          f", expected FP/query={report.expected_fp:.3f},"
-          f" {report.index_bytes / 1024:.0f} KiB on cloud storage,"
-          f" {report.n_common} common words")
+    # 2. Index.build: profile -> optimize (Algorithm 1) -> compact ->
+    #    persist base + manifest (generation 1)
+    index = Index.build(corpus, BuilderConfig(B=2000, F0=1.0,
+                                              hedge_layers=1),
+                        store, "index/logs")
+    report = index.report
+    print(f"index: generation {index.generation}, L*={report.L} layers "
+          f"(+{report.L_total - report.L} hedge), expected "
+          f"FP/query={report.expected_fp:.3f}, "
+          f"{report.index_bytes / 1024:.0f} KiB on cloud storage, "
+          f"{report.n_common} common words")
 
-    # 3. Searcher: boots from ONE header read, then queries in two
-    #    parallel-fetch rounds (never a dependent chain)
-    cloud = SimCloudStore(store, seed=42)
-    searcher = Searcher(cloud, "index/logs")
+    # 3. Index.open anywhere: one LIST + one manifest read, then one
+    #    header read per unit. Queries run in two parallel-fetch rounds
+    #    (never a dependent chain).
+    index = Index.open(SimCloudStore(store, seed=42), "index/logs")
+    searcher = index.searcher()
     print(f"searcher init: {searcher.init_stats.elapsed_s * 1e3:.0f} ms "
-          f"(one read)")
+          f"(header read)")
 
     for query in ("error", "terminating", "0x1125"):
         res = searcher.query(query)
@@ -53,6 +60,25 @@ def main() -> None:
     res = searcher.query("block", hedge=True)
     print(f"  hedged 'block': {res.stats.n_results} docs, abandoned "
           f"{res.stats.lookup.n_hedged_abandoned} straggler request(s)")
+
+    # 6. writer session: append a delta segment, commit a new generation
+    fresh = make_logs_like(800, seed=9)
+    delta = write_corpus(store, "corpus/logs-delta", fresh, n_blobs=2)
+    writer = index.writer()
+    writer.append(delta)
+    writer.commit()
+    searcher = index.searcher()       # base + 1 segment, shared rounds
+    res = searcher.query("error")
+    print(f"after commit: generation {index.generation}, "
+          f"{index.n_segments} segment(s); 'error' now "
+          f"{res.stats.n_results} docs")
+
+    # 7. merge: compact base + segments back into one base index
+    writer.merge()
+    res = index.searcher().query("error")
+    print(f"after merge: generation {index.generation}, "
+          f"{index.n_segments} segments; 'error' still "
+          f"{res.stats.n_results} docs")
 
 
 if __name__ == "__main__":

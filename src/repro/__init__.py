@@ -2,7 +2,44 @@
 storage layer of a multi-pod JAX training/serving framework.
 
 Subpackages import lazily -- importing `repro` must never touch jax device
-state (the dry-run pins XLA_FLAGS before any jax initialization).
+state (the dry-run pins XLA_FLAGS before any jax initialization). The
+index-lifecycle façade re-exports here for the one-import experience:
+
+    from repro import Index, BuilderConfig
+    index = Index.open(store, "idx/logs")
+    index.searcher().query_batch([...])
 """
 
-__version__ = "1.0.0"
+import importlib
+
+__version__ = "1.1.0"
+
+# public façade -> defining module; resolved on first attribute access so
+# `import repro` stays dependency-free (no numpy/jax/msgpack at import time)
+_LAZY_EXPORTS = {
+    "Index": "repro.index",
+    "IndexWriter": "repro.index",
+    "MultiSegmentSearcher": "repro.index",
+    "Builder": "repro.index",
+    "BuilderConfig": "repro.index",
+    "Searcher": "repro.index",
+    "SearchService": "repro.serving",
+    "StorageTransport": "repro.storage",
+    "TransportPolicy": "repro.storage",
+    "SimCloudTransport": "repro.storage",
+    "BlobStoreTransport": "repro.storage",
+    "as_transport": "repro.storage",
+}
+
+__all__ = ["__version__", *_LAZY_EXPORTS]
+
+
+def __getattr__(name: str):
+    module = _LAZY_EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    return getattr(importlib.import_module(module), name)
+
+
+def __dir__():
+    return sorted(__all__)

@@ -1,10 +1,13 @@
-"""Index build/search: Builder, Searcher, compaction codec, baselines."""
+"""Index lifecycle + build/search: Index façade, Builder, Searcher,
+segmented writer, compaction codec, baselines."""
 
 from .builder import Builder, BuilderConfig, BuildReport
 from .fetch_plan import coalesce_requests, slice_payloads
+from .lifecycle import Index, IndexWriter, MultiSegmentSearcher
 from .query import And, Or, Query, Regex, Term, parse, query_words
 from .searcher import QueryResult, QueryStats, Searcher
 
 __all__ = ["Builder", "BuilderConfig", "BuildReport", "And", "Or", "Query",
            "Regex", "Term", "parse", "query_words", "QueryResult",
-           "QueryStats", "Searcher", "coalesce_requests", "slice_payloads"]
+           "QueryStats", "Searcher", "coalesce_requests", "slice_payloads",
+           "Index", "IndexWriter", "MultiSegmentSearcher"]

@@ -1,0 +1,500 @@
+"""Index lifecycle façade: build, open, append, commit, merge.
+
+The paper's engine "builds, optimizes, and manages" indexes on cloud
+storage (§III); this module is the public API for that management plane:
+
+    index = Index.build(corpus, BuilderConfig(...), store, "idx/logs")
+    index = Index.open(store, "idx/logs")            # from a blob prefix
+    results = index.searcher().query_batch([...])    # read session
+    w = index.writer()                               # write session
+    w.append(more_corpus); w.commit()                # delta segment
+    w.merge()                                        # compact to one base
+
+Layout on the object store (all blobs immutable once visible):
+
+    prefix/manifest-00000001.airm    versioned manifest, one per generation
+    prefix/header.airp               base index (legacy layout, so the
+    prefix/superposts-*.blk            pre-lifecycle Searcher still boots)
+    prefix/seg-00000002-<tok>-0000/  delta segments (self-contained small
+                                       sketches: own header + blocks; the
+                                       token is unique per write session)
+    prefix/base-00000003/...         merged bases (never overwrite a live
+                                       generation's blobs)
+
+The **manifest** is the unit of atomicity, Lucene `segments_N`-style: a
+commit writes `manifest-<generation+1>` and readers resolve the current
+index as the highest-numbered manifest under the prefix — writers never
+block readers, readers never see a half-commit. The generation number
+also keys every cache on the read path (`SuperpostCache`, the
+`SearchService` result LRU), so a commit or merge can never serve
+pre-commit bytes or results.
+
+Readers over a segmented index fan one batch plan across base + segments
+with shared fetch rounds (`MultiSegmentSearcher`, built on the searcher's
+multi-unit executor) and union the per-unit results — query results over
+base+segments are identical to a monolithic rebuild of the concatenated
+corpus (enforced by tests/test_index_lifecycle.py).
+"""
+
+from __future__ import annotations
+
+import uuid
+from dataclasses import asdict, replace
+
+import msgpack
+
+from ..data.corpus import Corpus, DocRef
+from ..storage.blobstore import RangeRequest
+from ..storage.cache import SuperpostCache
+from ..storage.simcloud import FetchStats
+from ..storage.transport import StorageTransport, as_transport
+from .builder import Builder, BuilderConfig, BuildReport
+from .query import Query, Regex, Term
+from .searcher import (QueryResult, Searcher, _Fetcher, execute_jobs,
+                       lookup_units, make_job)
+
+MANIFEST_MAGIC = b"AIRM"
+MANIFEST_VERSION = 1
+
+
+# ------------------------------------------------------------- manifest codec
+def _manifest_name(prefix: str, generation: int) -> str:
+    return f"{prefix}/manifest-{generation:08d}.airm"
+
+
+def _pack_refs(refs: list[DocRef]) -> dict:
+    """Compact corpus map: blob-name string table + per-doc triples.
+
+    The manifest carries each ingest's document refs so `merge()` can
+    re-profile the concatenated corpus without a side channel.
+    """
+    blobs: list[str] = []
+    blob_key: dict[str, int] = {}
+    docs = []
+    for r in refs:
+        k = blob_key.get(r.blob)
+        if k is None:
+            k = blob_key[r.blob] = len(blobs)
+            blobs.append(r.blob)
+        docs.append((k, r.offset, r.length))
+    return {"blobs": blobs, "docs": docs}
+
+
+def _unpack_refs(packed: dict) -> list[DocRef]:
+    blobs = packed["blobs"]
+    return [DocRef(blobs[k], int(o), int(n)) for k, o, n in packed["docs"]]
+
+
+def encode_manifest(manifest: dict) -> bytes:
+    return MANIFEST_MAGIC + bytes([MANIFEST_VERSION]) + \
+        msgpack.packb(manifest, use_bin_type=True)
+
+
+def decode_manifest(data: bytes) -> dict:
+    if data[:4] != MANIFEST_MAGIC:
+        raise ValueError("not an Airphant index manifest")
+    if data[4] != MANIFEST_VERSION:
+        raise ValueError(
+            f"manifest version {data[4]} != supported {MANIFEST_VERSION}")
+    return msgpack.unpackb(data[5:], raw=False, strict_map_key=False)
+
+
+def _latest_generation(blobs, prefix: str) -> int:
+    """Current committed generation: highest-numbered manifest blob."""
+    names = blobs.list(f"{prefix}/manifest-")
+    if not names:
+        return 0
+    # zero-padded generations sort lexicographically
+    tail = max(names).rsplit("manifest-", 1)[1]
+    return int(tail.split(".")[0])
+
+
+def _publish(blobs, prefix: str, manifest: dict) -> None:
+    """Publish a manifest generation with compare-and-swap semantics.
+
+    `put_if_absent` is the linearization point: of two writers racing to
+    publish the same generation number, exactly one creates the blob —
+    the loser gets the same "concurrent writer" error the pre-publish
+    generation check raises, never a silent overwrite.
+    """
+    name = _manifest_name(prefix, int(manifest["generation"]))
+    if not blobs.put_if_absent(name, encode_manifest(manifest)):
+        raise RuntimeError(
+            f"concurrent writer already published generation "
+            f"{manifest['generation']} of {prefix!r}; refresh and retry")
+
+
+# ===================================================================== reader
+class MultiSegmentSearcher:
+    """Reader over a base index + delta segments.
+
+    One plan/fetch/decode pipeline fans the whole query batch across
+    every unit with **shared** fetch rounds (still two rounds total, not
+    two per segment), then unions per-unit results and dedupes document
+    identities — so readers never block on writers and a segmented index
+    answers exactly like its monolithic rebuild. Mirrors the `Searcher`
+    query surface (`query`, `query_batch`, `regex_query`). Raw lookups
+    are exposed as `lookup_units`/`lookup_batch_units` — deliberately
+    NOT named `lookup*`: per-unit posting keys index per-unit string
+    tables and cannot be unioned into one `Searcher.lookup`-shaped dict,
+    so the different shape carries a different name.
+    """
+
+    def __init__(self, units: list[Searcher], fetcher: _Fetcher,
+                 init_stats: FetchStats | None = None) -> None:
+        assert units, "need at least a base unit"
+        self.units = units
+        self._fetcher = fetcher
+        if init_stats is None:
+            init_stats = FetchStats()
+            for u in units:
+                init_stats.add(u.init_stats)
+        self.init_stats = init_stats
+        self.F0 = max(u.F0 for u in units)
+
+    @property
+    def n_units(self) -> int:
+        return len(self.units)
+
+    # live views into the shared fetcher, same as Searcher's properties —
+    # post-construction mutation keeps taking effect
+    @property
+    def cache(self):
+        return self._fetcher.cache
+
+    @cache.setter
+    def cache(self, value) -> None:
+        self._fetcher.cache = value
+
+    @property
+    def coalesce_gap(self) -> int | None:
+        return self._fetcher.coalesce_gap
+
+    @coalesce_gap.setter
+    def coalesce_gap(self, value: int | None) -> None:
+        self._fetcher.coalesce_gap = value
+
+    @property
+    def generation(self) -> int:
+        return self._fetcher.generation
+
+    @generation.setter
+    def generation(self, value: int) -> None:
+        self._fetcher.generation = int(value)
+
+    # -- lookups ----------------------------------------------------------
+    def lookup_batch_units(self, queries: list[Query | str],
+                           hedge: bool = False):
+        """Per-unit candidate postings: `outs[u][q][word] -> (keys, lens)`."""
+        return lookup_units(self.units, queries, self._fetcher, hedge=hedge)
+
+    def lookup_units(self, q: Query | str, hedge: bool = False):
+        outs, stats = self.lookup_batch_units([q], hedge=hedge)
+        return [per_unit[0] for per_unit in outs], stats
+
+    # -- queries ----------------------------------------------------------
+    def query(self, q: Query | str, top_k: int | None = None,
+              hedge: bool = False, delta: float = 1e-6,
+              fetch_documents: bool = True) -> QueryResult:
+        q = Term(q) if isinstance(q, str) else q
+        job = make_job(q, top_k=top_k, delta=delta,
+                       fetch_documents=fetch_documents)
+        return execute_jobs(self.units, [job], self._fetcher,
+                            hedge=hedge)[0]
+
+    def query_batch(self, queries: list[Query | str],
+                    top_k: int | None = None, hedge: bool = False,
+                    impl: str = "sorted") -> list[QueryResult]:
+        jobs = [make_job(Term(q) if isinstance(q, str) else q,
+                         top_k=top_k) for q in queries]
+        return execute_jobs(self.units, jobs, self._fetcher,
+                            hedge=hedge, impl=impl)
+
+    def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
+        return execute_jobs(self.units, [make_job(Regex(pattern, ngram))],
+                            self._fetcher)[0]
+
+
+# ===================================================================== handle
+class Index:
+    """Handle on one index prefix: owns the manifest, vends sessions.
+
+    `searcher(...)` opens a read session pinned to this handle's
+    generation; `writer()` opens a write session that stages delta
+    segments. `refresh()` re-resolves the current generation (cheap: one
+    LIST + at most one manifest read).
+    """
+
+    def __init__(self, transport: StorageTransport, prefix: str,
+                 manifest: dict, report: BuildReport | None = None,
+                 owns_transport: bool = False) -> None:
+        self.transport = transport
+        self.prefix = prefix
+        self._manifest = manifest
+        self.report = report
+        self._owns_transport = owns_transport
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def manifest(self) -> dict:
+        return self._manifest
+
+    @property
+    def generation(self) -> int:
+        return int(self._manifest["generation"])
+
+    @property
+    def base_prefix(self) -> str:
+        return self._manifest["base"]["prefix"]
+
+    @property
+    def segment_prefixes(self) -> list[str]:
+        return [s["prefix"] for s in self._manifest["segments"]]
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._manifest["segments"])
+
+    @property
+    def config(self) -> BuilderConfig | None:
+        cfg = self._manifest.get("config")
+        return BuilderConfig(**cfg) if cfg is not None else None
+
+    def __repr__(self) -> str:
+        return (f"Index(prefix={self.prefix!r}, "
+                f"generation={self.generation}, "
+                f"segments={self.n_segments})")
+
+    def close(self) -> None:
+        """Release the transport if this handle created it (a bare store
+        was passed to build/open); a transport the caller supplied stays
+        the caller's to close. Idempotent."""
+        if self._owns_transport:
+            self.transport.close()
+
+    def __enter__(self) -> "Index":
+        return self
+
+    def __exit__(self, *_exc) -> None:
+        self.close()
+
+    # -- lifecycle --------------------------------------------------------
+    @classmethod
+    def build(cls, corpus: Corpus, config: BuilderConfig | None,
+              store, prefix: str) -> "Index":
+        """Build a base index at `prefix` and commit generation N+1.
+
+        The base uses the legacy single-index layout (`header.airp` +
+        superpost blocks at the prefix root), so the deprecated
+        `Searcher(cloud, prefix)` constructor keeps booting from the same
+        prefix. Rebuilding an existing prefix overwrites those base blobs
+        in place — the bumped generation is what keeps caches of the old
+        bytes unreachable.
+        """
+        owns = not isinstance(store, StorageTransport)
+        transport = as_transport(store)
+        cfg = config or BuilderConfig()
+        report = Builder(cfg).build(corpus, transport.blobs, prefix)
+        generation = _latest_generation(transport.blobs, prefix) + 1
+        manifest = {
+            "generation": generation,
+            "base": {"prefix": prefix, "corpus": _pack_refs(corpus.refs)},
+            "segments": [],
+            "config": asdict(cfg),
+        }
+        # one CAS attempt, no retry: a competing builder has ALREADY
+        # overwritten these base blobs in place, so claiming the next
+        # generation slot would publish a corpus map for someone else's
+        # bytes — erroring out is the only honest outcome of that race
+        _publish(transport.blobs, prefix, manifest)
+        return cls(transport, prefix, manifest, report=report,
+                   owns_transport=owns)
+
+    @classmethod
+    def open(cls, store, prefix: str) -> "Index":
+        """Open the current generation of the index at `prefix`.
+
+        One LIST resolves the newest manifest; one range read fetches it.
+        A prefix holding only a legacy `header.airp` (built before the
+        lifecycle existed) opens read-only as generation 0.
+        """
+        owns = not isinstance(store, StorageTransport)
+        transport = as_transport(store)
+        generation = _latest_generation(transport.blobs, prefix)
+        if generation == 0:
+            if not transport.blobs.exists(f"{prefix}/header.airp"):
+                raise FileNotFoundError(
+                    f"no manifest or header under {prefix!r}")
+            manifest = {"generation": 0,
+                        "base": {"prefix": prefix, "corpus": None},
+                        "segments": [], "config": None}
+            return cls(transport, prefix, manifest, owns_transport=owns)
+        data, _stats = transport.fetch(
+            RangeRequest(_manifest_name(prefix, generation)))
+        return cls(transport, prefix, decode_manifest(data),
+                   owns_transport=owns)
+
+    def refresh(self) -> "Index":
+        """Re-resolve the current generation (after another writer's
+        commit/merge); no-op when already current. Returns self."""
+        generation = _latest_generation(self.transport.blobs, self.prefix)
+        if generation not in (0, self.generation):
+            data, _stats = self.transport.fetch(
+                RangeRequest(_manifest_name(self.prefix, generation)))
+            self._manifest = decode_manifest(data)
+        return self
+
+    # -- sessions ---------------------------------------------------------
+    def searcher(self, cache: SuperpostCache | None = None,
+                 coalesce_gap: int | None = 4096,
+                 ) -> Searcher | MultiSegmentSearcher:
+        """Open a read session pinned to this generation.
+
+        Boots with ONE batched fetch of every unit's header (base +
+        segments — a parallel round, never a per-segment chain), all
+        keyed to this generation in the optional shared `cache`. Returns
+        a plain `Searcher` when there are no segments — byte-identical
+        to the classic engine — and a `MultiSegmentSearcher` otherwise.
+        """
+        gen = self.generation
+        if not self._manifest["segments"]:
+            return Searcher(self.transport, self.base_prefix, cache=cache,
+                            coalesce_gap=coalesce_gap, generation=gen)
+        prefixes = [self.base_prefix] + self.segment_prefixes
+        headers, init_stats = self.transport.fetch_batch(
+            [RangeRequest(f"{p}/header.airp") for p in prefixes])
+        units = [Searcher(self.transport, p, cache=cache,
+                          coalesce_gap=coalesce_gap, generation=gen,
+                          header=h)
+                 for p, h in zip(prefixes, headers)]
+        return MultiSegmentSearcher(units, units[0]._fetcher,
+                                    init_stats=init_stats)
+
+    def writer(self) -> "IndexWriter":
+        """Open a write session (stage segments, then commit/merge)."""
+        return IndexWriter(self)
+
+
+# ===================================================================== writer
+class IndexWriter:
+    """Segmented write session: append → commit, or merge to compact.
+
+    Appends build **delta segments** — small self-contained sketches
+    (own header + superpost blocks) over just the new documents — under
+    the index prefix. Nothing is visible to readers until `commit()`
+    writes the next manifest generation; `abort()` deletes staged blobs.
+    `merge()` compacts base + committed segments back into a single base
+    index by re-profiling the concatenated corpus (so the optimizer's L
+    and the common-word table reflect the full document set again).
+    """
+
+    def __init__(self, index: Index) -> None:
+        if index.manifest.get("config") is None:
+            raise ValueError(
+                "index was opened from a legacy header-only layout (no "
+                "manifest); rebuild it with Index.build(...) to enable "
+                "writes")
+        self._index = index
+        self._config = BuilderConfig(**index.manifest["config"])
+        self._base_generation = index.generation
+        self._staged: list[dict] = []          # manifest segment entries
+        self._staged_prefixes: list[str] = []
+        # per-session token: two writers based on the same generation must
+        # never stage to the same blob names — else the loser's abort()
+        # could delete blobs the winner's commit already published
+        self._token = uuid.uuid4().hex[:8]
+
+    @property
+    def n_staged(self) -> int:
+        return len(self._staged)
+
+    def _segment_config(self, corpus: Corpus) -> BuilderConfig:
+        """Scale the bin budget to the delta so tiny appends do not pay a
+        full-size header; accuracy knobs (F0, seed, hedge layers, n-gram
+        indexing) are inherited from the base config."""
+        B = min(self._config.B, max(128, 8 * corpus.n_docs))
+        return replace(self._config, B=B)
+
+    def append(self, corpus: Corpus) -> BuildReport:
+        """Stage one delta segment over `corpus` (not yet visible)."""
+        seg_prefix = (f"{self._index.prefix}/"
+                      f"seg-{self._base_generation + 1:08d}"
+                      f"-{self._token}-{len(self._staged):04d}")
+        report = Builder(self._segment_config(corpus)).build(
+            corpus, self._index.transport.blobs, seg_prefix)
+        self._staged.append({"prefix": seg_prefix,
+                             "corpus": _pack_refs(corpus.refs)})
+        self._staged_prefixes.append(seg_prefix)
+        return report
+
+    def _check_not_raced(self) -> int:
+        current = _latest_generation(self._index.transport.blobs,
+                                     self._index.prefix)
+        if current != self._base_generation:
+            raise RuntimeError(
+                f"concurrent writer committed generation {current} "
+                f"(this session is based on {self._base_generation}); "
+                "refresh the index and retry")
+        return current + 1
+
+    def commit(self) -> Index:
+        """Publish staged segments as the next manifest generation."""
+        if not self._staged:
+            return self._index
+        generation = self._check_not_raced()
+        idx = self._index
+        manifest = {
+            "generation": generation,
+            "base": idx.manifest["base"],
+            "segments": list(idx.manifest["segments"]) + self._staged,
+            "config": idx.manifest["config"],
+        }
+        _publish(idx.transport.blobs, idx.prefix, manifest)
+        idx._manifest = manifest
+        self._base_generation = generation
+        self._staged = []
+        self._staged_prefixes = []
+        return idx
+
+    def abort(self) -> None:
+        """Drop staged segments and delete their blobs (readers never saw
+        them — segments only become reachable through a manifest)."""
+        blobs = self._index.transport.blobs
+        for seg_prefix in self._staged_prefixes:
+            for name in blobs.list(seg_prefix + "/"):
+                blobs.delete(name)
+        self._staged = []
+        self._staged_prefixes = []
+
+    def merge(self) -> Index:
+        """Compact base + committed segments into one new base index.
+
+        Rebuilds from the concatenated corpus (manifest-recorded doc
+        refs, texts range-read back from the store) under a fresh
+        `base-<generation>` prefix — live generations' blobs are never
+        overwritten, so concurrent readers on the old generation keep
+        working; their blobs can be garbage-collected once unreferenced.
+        """
+        if self._staged:
+            raise RuntimeError(
+                "commit() or abort() staged segments before merge()")
+        idx = self._index
+        if idx.manifest["base"]["corpus"] is None:
+            raise ValueError("legacy index has no corpus map to merge")
+        refs = _unpack_refs(idx.manifest["base"]["corpus"])
+        for seg in idx.manifest["segments"]:
+            refs += _unpack_refs(seg["corpus"])
+        generation = self._check_not_raced()
+        corpus = Corpus(store=idx.transport.blobs, refs=refs)
+        new_base = f"{idx.prefix}/base-{generation:08d}"
+        Builder(self._config).build(corpus, idx.transport.blobs, new_base)
+        manifest = {
+            "generation": generation,
+            "base": {"prefix": new_base, "corpus": _pack_refs(refs)},
+            "segments": [],
+            "config": idx.manifest["config"],
+        }
+        _publish(idx.transport.blobs, idx.prefix, manifest)
+        idx._manifest = manifest
+        self._base_generation = generation
+        return idx

@@ -19,7 +19,7 @@ instead of query count (docs/query_engine.md):
   fetch  — near-adjacent ranges in the same block are coalesced into one
            spanning read (`fetch_plan`), an optional byte-bounded LRU
            `SuperpostCache` serves hot bins with zero network cost, and
-           whatever remains goes out as ONE `fetch_batch`;
+           whatever remains goes out as ONE transport batch;
   decode — each unique superpost is decoded once and distributed to all
            queries that wanted it; combine/top-K/document filtering then
            run per query, with round-2 document reads again deduplicated,
@@ -27,11 +27,21 @@ instead of query count (docs/query_engine.md):
 
 `lookup`/`query` are the single-query views of the same three phases, so
 serial and batched execution are result-identical by construction.
+
+Since the lifecycle redesign (docs/index_lifecycle.md) the executor is
+**multi-unit**: the same plan/fetch/decode pipeline fans one query batch
+across several index units (a base index plus delta segments), sharing
+the fetch rounds, then unions the per-unit results. A single-unit run is
+bit-identical to the pre-lifecycle engine. All bytes move through a
+`StorageTransport` (storage/transport.py) — the Searcher never touches a
+concrete store; the legacy `Searcher(SimCloudStore, prefix)` constructor
+survives as a deprecated shim over the transport adapter.
 """
 
 from __future__ import annotations
 
 import re as _re
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Callable
 
@@ -45,6 +55,8 @@ from ..data.tokenizer import distinct_words
 from ..storage.blobstore import RangeRequest
 from ..storage.cache import SuperpostCache
 from ..storage.simcloud import FetchStats, SimCloudStore
+from ..storage.transport import (SimCloudTransport, StorageTransport,
+                                 as_transport)
 from . import codec
 from .fetch_plan import coalesce_requests, slice_payloads
 from .query import And, Or, Query, Regex, Term, query_words
@@ -100,18 +112,102 @@ class _Job:
     fetch_documents: bool = True
 
 
+@dataclass
+class _Fetcher:
+    """Shared fetch machinery: transport + cache + coalescing.
+
+    One `_Fetcher` serves a whole reader — a lone `Searcher` or every
+    unit of a multi-segment index — so cross-unit rounds share the same
+    cache, coalescing policy, and (simulated) connections. `generation`
+    qualifies every cache key: a committed writer bumps it, making
+    pre-commit bytes unreachable (the stale-read guard)."""
+
+    transport: StorageTransport
+    cache: SuperpostCache | None = None
+    coalesce_gap: int | None = 4096
+    generation: int = 0
+
+    def fetch_ranges(self, requests: list[RangeRequest], *,
+                     hedge: bool = False,
+                     hedgeable: set[int] | None = None,
+                     use_cache: bool = False,
+                     ) -> tuple[list[bytes | None], FetchStats]:
+        """One batched round: cache → coalesce → fetch → slice.
+
+        Hedging needs per-request completion granularity, so a hedged
+        round skips coalescing; cached payloads never hit the network
+        either way. `hedgeable` are the request indices a hedged wait is
+        allowed to abandon — the budget is counted over the actual miss
+        set, so a warm cache never causes non-hedge layers to be dropped.
+        """
+        stats = FetchStats()
+        payloads: list[bytes | None] = [None] * len(requests)
+        miss_idx: list[int] = []
+        cache = self.cache if use_cache else None
+        if cache is not None:
+            for i, r in enumerate(requests):
+                p = cache.get(r.blob, r.offset, r.length, self.generation) \
+                    if r.length >= 0 else None
+                if p is None:
+                    miss_idx.append(i)
+                else:
+                    payloads[i] = p
+                    stats.cache_hits += 1
+                    stats.cache_bytes_saved += len(p)
+        else:
+            miss_idx = list(range(len(requests)))
+
+        miss = [requests[i] for i in miss_idx]
+        if miss:
+            n_hedgeable = len((hedgeable or set()) & set(miss_idx)) \
+                if hedge else 0
+            if n_hedgeable:      # nothing to abandon -> coalesce instead
+                wait_for = max(1, len(miss) - n_hedgeable)
+                got, fstats = self.transport.fetch_batch(miss,
+                                                         wait_for=wait_for)
+            elif self.coalesce_gap is not None:
+                merged, slices = coalesce_requests(miss, self.coalesce_gap)
+                merged_payloads, fstats = self.transport.fetch_batch(merged)
+                got = slice_payloads(miss, merged_payloads, slices)
+            else:
+                got, fstats = self.transport.fetch_batch(miss)
+            stats.add(fstats)
+            for i, p in zip(miss_idx, got):
+                payloads[i] = p
+                if p is not None and cache is not None \
+                        and requests[i].length >= 0:
+                    cache.put(requests[i].blob, requests[i].offset,
+                              requests[i].length, p, self.generation)
+        return payloads, stats
+
+
 class Searcher:
-    def __init__(self, cloud: SimCloudStore, prefix: str,
+    def __init__(self, source, prefix: str,
                  cache: SuperpostCache | None = None,
-                 coalesce_gap: int | None = 4096) -> None:
-        self.cloud = cloud
+                 coalesce_gap: int | None = 4096,
+                 generation: int = 0,
+                 header: bytes | None = None) -> None:
+        if isinstance(source, SimCloudStore):
+            warnings.warn(
+                "Searcher(SimCloudStore, prefix) is deprecated: pass a "
+                "StorageTransport (storage.as_transport / SimCloudTransport)"
+                " or use Index.open(store, prefix).searcher()",
+                DeprecationWarning, stacklevel=2)
+            transport: StorageTransport = SimCloudTransport(source)
+        else:
+            transport = as_transport(source)
+        self.transport = transport
         self.prefix = prefix
-        self.cache = cache
-        self.coalesce_gap = coalesce_gap
-        # --- initialization: ONE read of the header block ---------------
-        data, self.init_stats = cloud.fetch(
-            RangeRequest(f"{prefix}/header.airp"))
-        hdr = codec.decode_header(data)
+        self._fetcher = _Fetcher(transport, cache, coalesce_gap,
+                                 int(generation))
+        # --- initialization: ONE read of the header block (skipped when
+        # the lifecycle pre-fetched all units' headers in one batch) ----
+        if header is None:
+            header, self.init_stats = transport.fetch(
+                RangeRequest(f"{prefix}/header.airp"))
+        else:
+            self.init_stats = FetchStats()
+        hdr = codec.decode_header(header)
         self.spec = hdr["spec"]
         self.L = int(self.spec["L"])
         self.L_total = int(self.spec["L_total"])
@@ -125,6 +221,32 @@ class Searcher:
             int(fp): p for fp, p in zip(hdr["common_fps"], common_ptrs)}
         self.profile = hdr["profile"]
         self.F0 = float(self.profile.get("F0", 1.0))
+
+    # fetch knobs live in ONE place — the _Fetcher every round goes
+    # through — so post-construction mutation keeps taking effect
+    @property
+    def cache(self) -> SuperpostCache | None:
+        return self._fetcher.cache
+
+    @cache.setter
+    def cache(self, value: SuperpostCache | None) -> None:
+        self._fetcher.cache = value
+
+    @property
+    def coalesce_gap(self) -> int | None:
+        return self._fetcher.coalesce_gap
+
+    @coalesce_gap.setter
+    def coalesce_gap(self, value: int | None) -> None:
+        self._fetcher.coalesce_gap = value
+
+    @property
+    def generation(self) -> int:
+        return self._fetcher.generation
+
+    @generation.setter
+    def generation(self, value: int) -> None:
+        self._fetcher.generation = int(value)
 
     # ------------------------------------------------------------- pointers
     def _pointers_for_word(self, word: str) -> tuple[list[codec.BinPointer], bool]:
@@ -172,52 +294,8 @@ class Searcher:
                       hedgeable: set[int] | None = None,
                       use_cache: bool = False,
                       ) -> tuple[list[bytes | None], FetchStats]:
-        """One batched round: cache → coalesce → fetch → slice.
-
-        Hedging needs per-request completion granularity, so a hedged
-        round skips coalescing; cached payloads never hit the network
-        either way. `hedgeable` are the request indices a hedged wait is
-        allowed to abandon — the budget is counted over the actual miss
-        set, so a warm cache never causes non-hedge layers to be dropped.
-        """
-        stats = FetchStats()
-        payloads: list[bytes | None] = [None] * len(requests)
-        miss_idx: list[int] = []
-        cache = self.cache if use_cache else None
-        if cache is not None:
-            for i, r in enumerate(requests):
-                p = cache.get(r.blob, r.offset, r.length) \
-                    if r.length >= 0 else None
-                if p is None:
-                    miss_idx.append(i)
-                else:
-                    payloads[i] = p
-                    stats.cache_hits += 1
-                    stats.cache_bytes_saved += len(p)
-        else:
-            miss_idx = list(range(len(requests)))
-
-        miss = [requests[i] for i in miss_idx]
-        if miss:
-            n_hedgeable = len((hedgeable or set()) & set(miss_idx)) \
-                if hedge else 0
-            if n_hedgeable:      # nothing to abandon -> coalesce instead
-                wait_for = max(1, len(miss) - n_hedgeable)
-                got, fstats = self.cloud.fetch_batch(miss, wait_for=wait_for)
-            elif self.coalesce_gap is not None:
-                merged, slices = coalesce_requests(miss, self.coalesce_gap)
-                merged_payloads, fstats = self.cloud.fetch_batch(merged)
-                got = slice_payloads(miss, merged_payloads, slices)
-            else:
-                got, fstats = self.cloud.fetch_batch(miss)
-            stats.add(fstats)
-            for i, p in zip(miss_idx, got):
-                payloads[i] = p
-                if p is not None and cache is not None \
-                        and requests[i].length >= 0:
-                    cache.put(requests[i].blob, requests[i].offset,
-                              requests[i].length, p)
-        return payloads, stats
+        return self._fetcher.fetch_ranges(
+            requests, hedge=hedge, hedgeable=hedgeable, use_cache=use_cache)
 
     # ---------------------------------------------------------------- lookup
     def lookup(self, q: Query | str, hedge: bool = False,
@@ -243,68 +321,18 @@ class Searcher:
         decoded) exactly once; near-adjacent bins in the same block ride
         one coalesced range read.
         """
-        qs = [Term(q) if isinstance(q, str) else q for q in queries]
-        word_lists = [query_words(q) for q in qs]
-        stats = QueryStats()
-        plan = self._plan_words(word_lists)
-        payloads, fstats = self._fetch_ranges(
-            plan.requests, hedge=hedge, hedgeable=plan.hedgeable,
-            use_cache=True)
-        stats.lookup = fstats
-        stats.rounds += 1
-
-        # hedging must keep >= 1 layer per word: re-fetch (in ONE batch)
-        # the first layer of any word whose every request was abandoned
-        missing = [w for w in plan.words
-                   if all(payloads[i] is None for i in plan.word_reqs[w])]
-        if missing:
-            fb, extra = self.cloud.fetch_batch(
-                [plan.requests[plan.word_reqs[w][0]] for w in missing])
-            stats.lookup.add(extra)
-            for w, p in zip(missing, fb):
-                payloads[plan.word_reqs[w][0]] = p
-
-        # --- phase: decode (each unique superpost exactly once) ---------
-        decoded: dict[int, tuple[np.ndarray, np.ndarray]] = {}
-        word_out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
-        for w in plan.words:
-            posts = []
-            for i in plan.word_reqs[w]:
-                if payloads[i] is None:      # hedged-away straggler
-                    continue
-                if i not in decoded:
-                    decoded[i] = codec.decode_superpost(payloads[i])
-                posts.append(decoded[i])
-            keys = intersect_sorted([k for k, _len in posts])
-            # recover lengths from whichever layer, via searchsorted
-            k0, l0 = posts[0]
-            lengths = l0[np.searchsorted(k0, keys)]
-            word_out[w] = (keys, lengths)
-        outs = [{w: word_out[w] for w in wl} for wl in word_lists]
-        stats.n_candidates = int(
-            sum(len(k) for d in outs for k, _ in d.values()))
-        return outs, stats
+        outs_per_unit, stats = lookup_units([self], queries, self._fetcher,
+                                            hedge=hedge)
+        return outs_per_unit[0], stats
 
     # ----------------------------------------------------------------- query
     def query(self, q: Query | str, top_k: int | None = None,
               hedge: bool = False, delta: float = 1e-6,
               fetch_documents: bool = True) -> QueryResult:
         q = Term(q) if isinstance(q, str) else q
-        job = self._make_job(q, top_k=top_k, delta=delta,
-                             fetch_documents=fetch_documents)
+        job = make_job(q, top_k=top_k, delta=delta,
+                       fetch_documents=fetch_documents)
         return self._execute_jobs([job], hedge=hedge)[0]
-
-    def _make_job(self, q: Query, top_k: int | None = None,
-                  delta: float = 1e-6, fetch_documents: bool = True) -> _Job:
-        if isinstance(q, Regex):
-            lookup_q, compiled = self._regex_prefilter(q.pattern, q.ngram)
-            return _Job(lookup_q=lookup_q,
-                        accept_text=lambda t, c=compiled: bool(c.search(t)),
-                        top_k=top_k, delta=delta,
-                        fetch_documents=fetch_documents)
-        return _Job(lookup_q=q,
-                    accept_words=lambda ws, q=q: _matches(q, ws),
-                    top_k=top_k, delta=delta, fetch_documents=fetch_documents)
 
     def query_batch(self, queries: list[Query | str],
                     top_k: int | None = None, hedge: bool = False,
@@ -317,178 +345,14 @@ class Searcher:
         `impl="bitmap"`, multi-term AND combines run through the batched
         Pallas intersection kernel (`kernels/intersect`).
         """
-        jobs = [self._make_job(Term(q) if isinstance(q, str) else q,
-                               top_k=top_k) for q in queries]
+        jobs = [make_job(Term(q) if isinstance(q, str) else q,
+                         top_k=top_k) for q in queries]
         return self._execute_jobs(jobs, hedge=hedge, impl=impl)
 
-    # ----------------------------------------------------------- job executor
     def _execute_jobs(self, jobs: list[_Job], hedge: bool = False,
                       impl: str = "sorted") -> list[QueryResult]:
-        per_word_list, lstats = self.lookup_batch(
-            [j.lookup_q for j in jobs], hedge=hedge)
-        combined = self._combine_jobs(jobs, per_word_list, impl)
-
-        results: list[QueryResult | None] = [None] * len(jobs)
-        stats_of = [QueryStats(lookup=replace(lstats.lookup), rounds=1)
-                    for _ in jobs]
-
-        # --- top-K sampling (§IV-D, Eq. 6) per job ----------------------
-        sampled: list[tuple[np.ndarray, np.ndarray]] = []
-        orders: list[np.ndarray] = []
-        wants: list[int] = []
-        for j, (job, (keys, lengths)) in enumerate(zip(jobs, combined)):
-            stats_of[j].n_candidates = len(keys)
-            order = np.arange(len(keys))
-            want = len(keys)
-            if job.top_k is not None and len(keys):
-                rk = sample_size(len(keys), job.top_k, self.F0, job.delta)
-                rng = np.random.default_rng(int(keys[0]) & 0xFFFF)
-                order = rng.permutation(len(keys))
-                want = job.top_k
-                sampled.append((keys[order[:rk]], lengths[order[:rk]]))
-            else:
-                sampled.append((keys, lengths))
-            orders.append(order)
-            wants.append(want)
-            if not job.fetch_documents:
-                refs = self._refs(keys, lengths)
-                results[j] = QueryResult(refs=refs, texts=[],
-                                         stats=stats_of[j])
-
-        # --- round 2: ONE deduplicated+coalesced batch for all jobs -----
-        live = [j for j in range(len(jobs)) if results[j] is None]
-        job_refs = {j: self._refs(*sampled[j]) for j in live}
-        texts_of, refs_of = self._fetch_and_filter_batch(
-            jobs, job_refs, stats_of)
-
-        # --- Eq. 6 failure (prob < delta) or tiny candidate set: fall
-        # back to fetching the remainder — again ONE batch for every job
-        # that came up short.
-        fallback: dict[int, list[DocRef]] = {}
-        for j in live:
-            keys, _lengths = combined[j]
-            n_sampled = len(sampled[j][0])
-            if jobs[j].top_k is not None and len(texts_of[j]) < wants[j] \
-                    and len(keys) > n_sampled:
-                rest = orders[j][n_sampled:]
-                fallback[j] = self._refs(keys[rest], combined[j][1][rest])
-        if fallback:
-            t2, r2 = self._fetch_and_filter_batch(jobs, fallback, stats_of)
-            for j in fallback:
-                texts_of[j] += t2[j]
-                refs_of[j] += r2[j]
-
-        for j in live:
-            texts, refs = texts_of[j], refs_of[j]
-            if jobs[j].top_k is not None:
-                texts, refs = texts[:wants[j]], refs[:wants[j]]
-            stats_of[j].n_results = len(texts)
-            results[j] = QueryResult(refs=refs, texts=texts,
-                                     stats=stats_of[j])
-        return results  # type: ignore[return-value]
-
-    def _fetch_and_filter_batch(self, jobs: list[_Job],
-                                job_refs: dict[int, list[DocRef]],
-                                stats_of: list[QueryStats],
-                                ) -> tuple[dict[int, list[str]],
-                                           dict[int, list[DocRef]]]:
-        """Round 2 for many jobs: documents wanted by several queries are
-        fetched once; ranges are coalesced; false positives filtered per
-        job by its own acceptance predicate."""
-        uniq: dict[tuple[str, int, int], int] = {}
-        requests: list[RangeRequest] = []
-        for j in sorted(job_refs):
-            for r in job_refs[j]:
-                key = (r.blob, r.offset, r.length)
-                if key not in uniq:
-                    uniq[key] = len(requests)
-                    requests.append(RangeRequest(r.blob, r.offset, r.length))
-        texts_of: dict[int, list[str]] = {j: [] for j in job_refs}
-        refs_of: dict[int, list[DocRef]] = {j: [] for j in job_refs}
-        if not requests:
-            return texts_of, refs_of
-        payloads, fstats = self._fetch_ranges(requests)
-        # decode-once: a document wanted by several queries is utf-8
-        # decoded (and tokenized, for word filters) a single time
-        texts_u: list[str | None] = [None] * len(requests)
-        words_u: list[set[str] | None] = [None] * len(requests)
-        for j, refs in job_refs.items():
-            if not refs:         # done after round 1 — no doc round for it
-                continue
-            stats_of[j].docs.add(fstats)
-            stats_of[j].rounds += 1
-            job = jobs[j]
-            for ref in refs:
-                u = uniq[(ref.blob, ref.offset, ref.length)]
-                if texts_u[u] is None:
-                    payload = payloads[u]
-                    assert payload is not None
-                    texts_u[u] = payload.decode("utf-8")
-                text = texts_u[u]
-                if job.accept_text is not None:
-                    ok = job.accept_text(text)
-                else:
-                    if words_u[u] is None:
-                        words_u[u] = distinct_words(text)
-                    ok = job.accept_words(words_u[u])
-                if ok:
-                    texts_of[j].append(text)
-                    refs_of[j].append(ref)
-                else:
-                    stats_of[j].n_false_positives += 1
-        return texts_of, refs_of
-
-    # ----------------------------------------------------------- combine
-    def _combine_jobs(self, jobs: list[_Job],
-                      per_word_list: list[dict],
-                      impl: str) -> list[tuple[np.ndarray, np.ndarray]]:
-        """Per-job ∪/∩ combine; `impl="bitmap"` batches every multi-term
-        AND through one `intersect_batch` Pallas call."""
-        out: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(jobs)
-        bitmap_jobs: list[int] = []
-        for j, (job, per_word) in enumerate(zip(jobs, per_word_list)):
-            q = job.lookup_q
-            if impl == "bitmap" and isinstance(q, And) \
-                    and all(isinstance(s, Term) for s in q.items) \
-                    and len(per_word) >= 2:
-                bitmap_jobs.append(j)
-            else:
-                out[j] = _combine(q, per_word)
-        if bitmap_jobs:
-            parts_list = [[per_word_list[j][w]
-                           for w in query_words(jobs[j].lookup_q)]
-                          for j in bitmap_jobs]
-            for j, res in zip(bitmap_jobs, _bitmap_and_batch(parts_list)):
-                out[j] = res
-        return out  # type: ignore[return-value]
-
-    # ------------------------------------------------------------- regex
-    def _regex_prefilter(self, pattern: str, ngram: int,
-                         ) -> tuple[Query, "_re.Pattern[str]"]:
-        """Literal runs (>= n chars) → AND of indexed n-grams (§IV-F)."""
-        from .builder import NGRAM_PREFIX
-        # extract guaranteed-literal runs: strip character classes,
-        # escapes, and quantified atoms (an atom before ?/*/{m,n} may not
-        # occur, and text around +/| is not contiguous), then split on
-        # the remaining metacharacters
-        stripped = pattern.lower()
-        stripped = _re.sub(r"\[[^\]]*\]", " ", stripped)     # [...] classes
-        stripped = _re.sub(r"\\.", " ", stripped)            # \d \b escapes
-        stripped = _re.sub(r".[*?]", " ", stripped)          # X? X* atoms
-        stripped = _re.sub(r".\{[^}]*\}", " ", stripped)     # X{m,n}
-        stripped = _re.sub(r"[()|.^$+]", " ", stripped)      # other meta
-        literals = _re.findall(r"[a-z0-9_\-./]{%d,}" % ngram, stripped)
-        grams: list[str] = []
-        for lit in literals:
-            grams.extend(lit[i:i + ngram]
-                         for i in range(len(lit) - ngram + 1))
-        if not grams:
-            raise ValueError(
-                f"pattern {pattern!r} has no literal run of >= {ngram} "
-                "chars to prefilter on (a full corpus scan would be "
-                "required — rejected, like the paper's RegEx engines)")
-        q = And(tuple(Term(NGRAM_PREFIX + g) for g in dict.fromkeys(grams)))
-        return q, _re.compile(pattern)
+        return execute_jobs([self], jobs, self._fetcher,
+                            hedge=hedge, impl=impl)
 
     def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
         """RegEx search via n-gram prefilter (paper §IV-F).
@@ -498,13 +362,352 @@ class Searcher:
         then matched against the real regex — superpost false positives
         never affect correctness.
         """
-        return self._execute_jobs([self._make_job(Regex(pattern, ngram))])[0]
+        return self._execute_jobs([make_job(Regex(pattern, ngram))])[0]
 
     # ----------------------------------------------------------------- utils
     def _refs(self, keys: np.ndarray, lengths: np.ndarray) -> list[DocRef]:
         blob_keys, offsets = codec.split_posting_key(keys)
         return [DocRef(self.string_table[int(b)], int(o), int(n))
                 for b, o, n in zip(blob_keys, offsets, lengths)]
+
+
+# =================================================================== executor
+# The phases below operate on a LIST of units (Searchers over a base
+# index and its delta segments) sharing one `_Fetcher`: every unit's
+# requests ride the same fetch rounds, then per-unit results are
+# unioned. With one unit this is exactly the classic engine — request
+# order, RNG draws, and payloads are bit-identical.
+
+def lookup_units(units: list[Searcher], queries: list[Query | str],
+                 fetcher: _Fetcher, hedge: bool = False,
+                 ) -> tuple[list[list[dict[str, tuple[np.ndarray, np.ndarray]]]],
+                            QueryStats]:
+    """Round 1 across units: plan everything, ONE shared fetch, decode once.
+
+    Returns `(outs_per_unit, stats)` where `outs_per_unit[u][q]` maps each
+    of query q's words to its candidate `(keys, lengths)` in unit u.
+    """
+    qs = [Term(q) if isinstance(q, str) else q for q in queries]
+    word_lists = [query_words(q) for q in qs]
+    stats = QueryStats()
+    plans = [u._plan_words(word_lists) for u in units]
+    requests: list[RangeRequest] = []
+    hedgeable: set[int] = set()
+    bases: list[int] = []
+    for plan in plans:
+        bases.append(len(requests))
+        requests.extend(plan.requests)
+        hedgeable.update(i + bases[-1] for i in plan.hedgeable)
+    payloads, fstats = fetcher.fetch_ranges(
+        requests, hedge=hedge, hedgeable=hedgeable, use_cache=True)
+    stats.lookup = fstats
+    stats.rounds += 1
+
+    # hedging must keep >= 1 layer per word per unit: re-fetch (in ONE
+    # batch) the first layer of any word whose every request was abandoned
+    missing: list[int] = []
+    for plan, base in zip(plans, bases):
+        missing.extend(base + plan.word_reqs[w][0] for w in plan.words
+                       if all(payloads[base + i] is None
+                              for i in plan.word_reqs[w]))
+    if missing:
+        fb, extra = fetcher.transport.fetch_batch(
+            [requests[i] for i in missing])
+        stats.lookup.add(extra)
+        for i, p in zip(missing, fb):
+            payloads[i] = p
+
+    # --- phase: decode (each unique superpost exactly once) -------------
+    outs_per_unit: list[list[dict[str, tuple[np.ndarray, np.ndarray]]]] = []
+    n_candidates = 0
+    for plan, base in zip(plans, bases):
+        decoded: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        word_out: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+        for w in plan.words:
+            posts = []
+            for i in plan.word_reqs[w]:
+                if payloads[base + i] is None:   # hedged-away straggler
+                    continue
+                if i not in decoded:
+                    decoded[i] = codec.decode_superpost(payloads[base + i])
+                posts.append(decoded[i])
+            keys = intersect_sorted([k for k, _len in posts])
+            # recover lengths from whichever layer, via searchsorted
+            k0, l0 = posts[0]
+            lengths = l0[np.searchsorted(k0, keys)]
+            word_out[w] = (keys, lengths)
+        outs = [{w: word_out[w] for w in wl} for wl in word_lists]
+        n_candidates += int(
+            sum(len(k) for d in outs for k, _ in d.values()))
+        outs_per_unit.append(outs)
+    stats.n_candidates = n_candidates
+    return outs_per_unit, stats
+
+
+def make_job(q: Query, top_k: int | None = None,
+             delta: float = 1e-6, fetch_documents: bool = True) -> _Job:
+    if isinstance(q, Regex):
+        lookup_q, compiled = regex_prefilter(q.pattern, q.ngram)
+        return _Job(lookup_q=lookup_q,
+                    accept_text=lambda t, c=compiled: bool(c.search(t)),
+                    top_k=top_k, delta=delta,
+                    fetch_documents=fetch_documents)
+    return _Job(lookup_q=q,
+                accept_words=lambda ws, q=q: _matches(q, ws),
+                top_k=top_k, delta=delta, fetch_documents=fetch_documents)
+
+
+def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
+                 hedge: bool = False, impl: str = "sorted",
+                 ) -> list[QueryResult]:
+    """Run a job batch over base + segments in two shared fetch rounds."""
+    n_units = len(units)
+    outs_per_unit, lstats = lookup_units(
+        units, [j.lookup_q for j in jobs], fetcher, hedge=hedge)
+    combined = [_combine_jobs(jobs, outs, impl) for outs in outs_per_unit]
+
+    results: list[QueryResult | None] = [None] * len(jobs)
+    stats_of = [QueryStats(lookup=replace(lstats.lookup), rounds=1)
+                for _ in jobs]
+
+    # --- top-K sampling (§IV-D, Eq. 6) per (unit, job) ------------------
+    sampled: list[list[tuple[np.ndarray, np.ndarray]]] = \
+        [[None] * len(jobs) for _ in units]    # type: ignore[list-item]
+    orders: list[list[np.ndarray]] = \
+        [[None] * len(jobs) for _ in units]    # type: ignore[list-item]
+    wants: list[int] = [0] * len(jobs)
+    for j, job in enumerate(jobs):
+        total = sum(len(combined[u][j][0]) for u in range(n_units))
+        stats_of[j].n_candidates = total
+        want = total
+        if job.top_k is not None and total:
+            want = job.top_k
+        wants[j] = want
+        for u, unit in enumerate(units):
+            keys, lengths = combined[u][j]
+            order = np.arange(len(keys))
+            if job.top_k is not None and len(keys):
+                rk = sample_size(len(keys), job.top_k, unit.F0, job.delta)
+                rng = np.random.default_rng(int(keys[0]) & 0xFFFF)
+                order = rng.permutation(len(keys))
+                sampled[u][j] = (keys[order[:rk]], lengths[order[:rk]])
+            else:
+                sampled[u][j] = (keys, lengths)
+            orders[u][j] = order
+        if not job.fetch_documents:
+            refs, _texts = _merge_results(
+                [units[u]._refs(*combined[u][j]) for u in range(n_units)],
+                None, already_merged=n_units == 1,
+                sort=job.top_k is None)
+            results[j] = QueryResult(refs=refs, texts=[],
+                                     stats=stats_of[j])
+
+    # --- round 2: ONE deduplicated+coalesced batch for all units+jobs ---
+    live = [j for j in range(len(jobs)) if results[j] is None]
+    unit_job_refs = [{j: units[u]._refs(*sampled[u][j]) for j in live}
+                     for u in range(n_units)]
+    texts_of, refs_of = _fetch_and_filter_units(
+        units, jobs, unit_job_refs, stats_of, fetcher)
+
+    # --- Eq. 6 failure (prob < delta) or tiny candidate set: fall back
+    # to fetching the remainder — again ONE batch for every unit of every
+    # job that came up short.
+    fallback: list[dict[int, list[DocRef]]] = [{} for _ in units]
+    if any(jobs[j].top_k is not None for j in live):
+        for j in live:
+            if jobs[j].top_k is None:
+                continue
+            # count unique doc identities — a doc accepted by several
+            # units (duplicate append) merges to ONE result, so a per-
+            # unit sum could skip a fallback the deduped set still needs
+            accepted = len({(r.blob, r.offset, r.length)
+                            for u in range(n_units)
+                            for r in refs_of[u][j]})
+            if accepted >= wants[j]:
+                continue
+            for u in range(n_units):
+                keys, lengths = combined[u][j]
+                n_sampled = len(sampled[u][j][0])
+                if len(keys) > n_sampled:
+                    rest = orders[u][j][n_sampled:]
+                    fallback[u][j] = units[u]._refs(keys[rest],
+                                                    lengths[rest])
+    if any(fallback):
+        t2, r2 = _fetch_and_filter_units(units, jobs, fallback, stats_of,
+                                         fetcher)
+        for u in range(n_units):
+            for j in fallback[u]:
+                texts_of[u][j] += t2[u][j]
+                refs_of[u][j] += r2[u][j]
+
+    # --- union per job across units (dedupe doc identity; non-top-K
+    # results restored to the monolithic (blob, offset) order) -----------
+    for j in live:
+        refs, texts = _merge_results(
+            [refs_of[u][j] for u in range(n_units)],
+            [texts_of[u][j] for u in range(n_units)],
+            already_merged=n_units == 1,
+            sort=jobs[j].top_k is None)
+        if jobs[j].top_k is not None:
+            texts, refs = texts[:wants[j]], refs[:wants[j]]
+        stats_of[j].n_results = len(texts)
+        results[j] = QueryResult(refs=refs, texts=texts,
+                                 stats=stats_of[j])
+    return results  # type: ignore[return-value]
+
+
+def _merge_results(refs_lists: list[list[DocRef]],
+                   texts_lists: list[list[str]] | None,
+                   already_merged: bool, sort: bool,
+                   ) -> tuple[list[DocRef], list[str]]:
+    """Union per-unit results into one list.
+
+    Documents are deduplicated by (blob, offset, length) identity — a doc
+    appended twice is indexed in two units but is one result, matching a
+    monolithic rebuild where duplicate posting keys collapse. `sort`
+    restores ascending (blob, offset), the order a monolithic index emits
+    (its posting keys are blob_key<<40|offset with blob keys assigned in
+    sorted-name order); sampled top-K results keep unit-major order.
+    """
+    if already_merged:       # single unit: preserve the classic path as-is
+        refs = refs_lists[0]
+        return refs, (texts_lists[0] if texts_lists is not None else [])
+    seen: set[tuple[str, int, int]] = set()
+    refs: list[DocRef] = []
+    texts: list[str] = []
+    for u, rl in enumerate(refs_lists):
+        tl = texts_lists[u] if texts_lists is not None else [""] * len(rl)
+        for r, t in zip(rl, tl):
+            key = (r.blob, r.offset, r.length)
+            if key in seen:
+                continue
+            seen.add(key)
+            refs.append(r)
+            texts.append(t)
+    if sort:
+        order = sorted(range(len(refs)),
+                       key=lambda i: (refs[i].blob, refs[i].offset))
+        refs = [refs[i] for i in order]
+        texts = [texts[i] for i in order]
+    return refs, (texts if texts_lists is not None else [])
+
+
+def _fetch_and_filter_units(units: list[Searcher], jobs: list[_Job],
+                            unit_job_refs: list[dict[int, list[DocRef]]],
+                            stats_of: list[QueryStats], fetcher: _Fetcher,
+                            ) -> tuple[list[dict[int, list[str]]],
+                                       list[dict[int, list[DocRef]]]]:
+    """Round 2 for many jobs across units: documents wanted by several
+    queries (or several units) are fetched once; ranges are coalesced;
+    false positives filtered per job by its own acceptance predicate."""
+    uniq: dict[tuple[str, int, int], int] = {}
+    requests: list[RangeRequest] = []
+    for refs_by_job in unit_job_refs:
+        for j in sorted(refs_by_job):
+            for r in refs_by_job[j]:
+                key = (r.blob, r.offset, r.length)
+                if key not in uniq:
+                    uniq[key] = len(requests)
+                    requests.append(RangeRequest(r.blob, r.offset, r.length))
+    texts_of = [{j: [] for j in refs_by_job}
+                for refs_by_job in unit_job_refs]
+    refs_of = [{j: [] for j in refs_by_job}
+               for refs_by_job in unit_job_refs]
+    if not requests:
+        return texts_of, refs_of
+    payloads, fstats = fetcher.fetch_ranges(requests)
+    # a job's doc round is accounted once, no matter how many units fed it
+    rounds_jobs = sorted({j for refs_by_job in unit_job_refs
+                          for j, refs in refs_by_job.items() if refs})
+    for j in rounds_jobs:
+        stats_of[j].docs.add(fstats)
+        stats_of[j].rounds += 1
+    # decode-once: a document wanted by several queries is utf-8
+    # decoded (and tokenized, for word filters) a single time
+    texts_u: list[str | None] = [None] * len(requests)
+    words_u: list[set[str] | None] = [None] * len(requests)
+    # a doc indexed by several units is ONE false positive for a job, as
+    # it would be in a monolithic rebuild — dedupe rejections by identity
+    rejected: dict[int, set[int]] = {}
+    for u, refs_by_job in enumerate(unit_job_refs):
+        for j, refs in refs_by_job.items():
+            if not refs:         # done after round 1 — no doc round for it
+                continue
+            job = jobs[j]
+            for ref in refs:
+                i = uniq[(ref.blob, ref.offset, ref.length)]
+                if texts_u[i] is None:
+                    payload = payloads[i]
+                    assert payload is not None
+                    texts_u[i] = payload.decode("utf-8")
+                text = texts_u[i]
+                if job.accept_text is not None:
+                    ok = job.accept_text(text)
+                else:
+                    if words_u[i] is None:
+                        words_u[i] = distinct_words(text)
+                    ok = job.accept_words(words_u[i])
+                if ok:
+                    texts_of[u][j].append(text)
+                    refs_of[u][j].append(ref)
+                elif i not in rejected.setdefault(j, set()):
+                    rejected[j].add(i)
+                    stats_of[j].n_false_positives += 1
+    return texts_of, refs_of
+
+
+# ----------------------------------------------------------- combine
+def _combine_jobs(jobs: list[_Job],
+                  per_word_list: list[dict],
+                  impl: str) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per-job ∪/∩ combine; `impl="bitmap"` batches every multi-term
+    AND through one `intersect_batch` Pallas call."""
+    out: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(jobs)
+    bitmap_jobs: list[int] = []
+    for j, (job, per_word) in enumerate(zip(jobs, per_word_list)):
+        q = job.lookup_q
+        if impl == "bitmap" and isinstance(q, And) \
+                and all(isinstance(s, Term) for s in q.items) \
+                and len(per_word) >= 2:
+            bitmap_jobs.append(j)
+        else:
+            out[j] = _combine(q, per_word)
+    if bitmap_jobs:
+        parts_list = [[per_word_list[j][w]
+                       for w in query_words(jobs[j].lookup_q)]
+                      for j in bitmap_jobs]
+        for j, res in zip(bitmap_jobs, _bitmap_and_batch(parts_list)):
+            out[j] = res
+    return out  # type: ignore[return-value]
+
+
+# ------------------------------------------------------------- regex
+def regex_prefilter(pattern: str, ngram: int,
+                    ) -> tuple[Query, "_re.Pattern[str]"]:
+    """Literal runs (>= n chars) → AND of indexed n-grams (§IV-F)."""
+    from .builder import NGRAM_PREFIX
+    # extract guaranteed-literal runs: strip character classes,
+    # escapes, and quantified atoms (an atom before ?/*/{m,n} may not
+    # occur, and text around +/| is not contiguous), then split on
+    # the remaining metacharacters
+    stripped = pattern.lower()
+    stripped = _re.sub(r"\[[^\]]*\]", " ", stripped)     # [...] classes
+    stripped = _re.sub(r"\\.", " ", stripped)            # \d \b escapes
+    stripped = _re.sub(r".[*?]", " ", stripped)          # X? X* atoms
+    stripped = _re.sub(r".\{[^}]*\}", " ", stripped)     # X{m,n}
+    stripped = _re.sub(r"[()|.^$+]", " ", stripped)      # other meta
+    literals = _re.findall(r"[a-z0-9_\-./]{%d,}" % ngram, stripped)
+    grams: list[str] = []
+    for lit in literals:
+        grams.extend(lit[i:i + ngram]
+                     for i in range(len(lit) - ngram + 1))
+    if not grams:
+        raise ValueError(
+            f"pattern {pattern!r} has no literal run of >= {ngram} "
+            "chars to prefilter on (a full corpus scan would be "
+            "required — rejected, like the paper's RegEx engines)")
+    q = And(tuple(Term(NGRAM_PREFIX + g) for g in dict.fromkeys(grams)))
+    return q, _re.compile(pattern)
 
 
 def _combine(q: Query, per_word: dict[str, tuple[np.ndarray, np.ndarray]],

@@ -19,6 +19,21 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+# jax < 0.6 compat: shard_map lived under jax.experimental and had no
+# varying-ness type system (no jax.lax.pcast) — there, replication
+# checking is disabled instead and the pcasts are identities.
+_HAS_PCAST = hasattr(jax.lax, "pcast")
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _shard_map = partial(_shard_map, check_rep=False)
+
+
+def _pipe_varying(x):
+    """Mark an initial carry device-varying over 'pipe' (newer jax)."""
+    return jax.lax.pcast(x, ("pipe",), to="varying") if _HAS_PCAST else x
+
 
 def _stage_fn(w, x):
     """One pipeline stage: the layer block owned by this device."""
@@ -52,10 +67,9 @@ def pipelined_mlp(mesh: Mesh, ws: jax.Array, x: jax.Array,
         w = w[0]
         n_ticks = n_micro + n_stages - 1
         # initial carries must already be device-varying over 'pipe'
-        buf = jax.lax.pcast(jnp.zeros((micro, d), xs_local.dtype),
-                            ("pipe",), to="varying")
-        outs = jax.lax.pcast(jnp.zeros((n_micro, micro, d), xs_local.dtype),
-                             ("pipe",), to="varying")
+        buf = _pipe_varying(jnp.zeros((micro, d), xs_local.dtype))
+        outs = _pipe_varying(jnp.zeros((n_micro, micro, d),
+                                       xs_local.dtype))
 
         def tick(t, carry):
             buf, outs = carry
@@ -82,7 +96,7 @@ def pipelined_mlp(mesh: Mesh, ws: jax.Array, x: jax.Array,
 
     spec_w = P("pipe", None, None)
     spec_x = P()          # replicated microbatch feed
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(_shard_map(
         stage_program, mesh=mesh, in_specs=(spec_w, spec_x),
         out_specs=P("pipe", None, None)))(ws, xs)
     # out: (n_stages*n_micro, micro, d) — every stage wrote its copy; only

@@ -1,28 +1,42 @@
 """Batched keyword-search serving — the paper's own application.
 
-A Searcher instance is ~2 MB of MHT state: it boots from one header read
-and serves queries statelessly (FaaS-style, paper §III-A). The service
-wraps one Searcher per corpus with latency accounting that mirrors the
-paper's benchmarks (mean / p99 / wait-vs-download split).
+A search session is ~2 MB of MHT state: it boots from one header read
+per index unit and serves queries statelessly (FaaS-style, paper
+§III-A). The service wraps one reader per corpus with latency accounting
+that mirrors the paper's benchmarks (mean / p99 / wait-vs-download
+split).
+
+The service fronts the index lifecycle (docs/index_lifecycle.md):
+construct it from an `Index` handle and it serves that handle's current
+generation — base plus any delta segments — through the multi-unit
+engine; `refresh()` re-resolves the generation after a writer commits or
+merges. Both caches are **generation-keyed**, so a refresh can never
+serve pre-commit bytes (superpost cache) or pre-commit results (the LRU
+over whole query results); entries of dead generations simply age out.
 
 `search_batch` is the scale path: N concurrent queries are planned,
-fetched, and decoded together through `Searcher.query_batch`, so the
-whole batch costs two shared fetch rounds instead of 2·N sequential ones
-(docs/query_engine.md). Two caches bound the hot-word worst case the
-paper's §IV-A remark describes: an LRU over whole query results here,
-and an optional byte-bounded LRU over raw superposts inside the Searcher.
+fetched, and decoded together through `query_batch`, so the whole batch
+costs two shared fetch rounds instead of 2·N sequential ones
+(docs/query_engine.md).
+
+The legacy `SearchService(cloud, index_prefix)` constructor (a
+`SimCloudStore` + prefix) survives as a deprecated shim over the
+transport adapter; transports and bare blob stores are accepted too.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..index.lifecycle import Index
 from ..index.query import Query, parse
 from ..index.searcher import Searcher
 from ..storage.cache import LRUCache, SuperpostCache
 from ..storage.simcloud import SimCloudStore
+from ..storage.transport import SimCloudTransport
 
 
 @dataclass
@@ -60,29 +74,84 @@ class LatencyStats:
 
 
 class SearchService:
-    def __init__(self, cloud: SimCloudStore, index_prefix: str,
+    def __init__(self, source, index_prefix: str | None = None,
                  hedge: bool = False, cache_size: int = 0,
                  superpost_cache_bytes: int = 0,
                  coalesce_gap: int | None = 4096) -> None:
         self.superpost_cache = SuperpostCache(superpost_cache_bytes) \
             if superpost_cache_bytes else None
-        self.searcher = Searcher(cloud, index_prefix,
-                                 cache=self.superpost_cache,
-                                 coalesce_gap=coalesce_gap)
         self.hedge = hedge
+        self.coalesce_gap = coalesce_gap
         self.stats = LatencyStats()
         # query-result cache (paper §IV-A remark: memoization bounds the
         # worst case where a few irrelevant hot words dominate) — LRU, so
         # a burst of distinct queries evicts the coldest entry, not the
-        # oldest hot one
+        # oldest hot one; keys carry the index generation so a committed
+        # write can never serve pre-commit results
         self._cache: LRUCache | None = \
             LRUCache(cache_size) if cache_size else None
+
+        if isinstance(source, Index):
+            self._index = source
+        else:
+            if index_prefix is None:
+                raise TypeError(
+                    "SearchService(store_or_transport, index_prefix) "
+                    "requires a prefix when not given an Index handle")
+            if isinstance(source, SimCloudStore):
+                warnings.warn(
+                    "SearchService(SimCloudStore, index_prefix) is "
+                    "deprecated: pass an Index handle "
+                    "(Index.open(store, prefix)) or a StorageTransport",
+                    DeprecationWarning, stacklevel=2)
+                source = SimCloudTransport(source)
+            # the raw source goes straight to Index.open so a bare store
+            # keeps owns_transport=True and close() actually releases it
+            self._index = Index.open(source, index_prefix)
+        self._open_searcher()
+
+    def _open_searcher(self) -> None:
+        self.searcher = self._index.searcher(
+            cache=self.superpost_cache, coalesce_gap=self.coalesce_gap)
+
+    # ------------------------------------------------------------ lifecycle
+    @property
+    def index(self) -> Index:
+        return self._index
+
+    @property
+    def generation(self) -> int:
+        return self._index.generation
+
+    def refresh(self) -> bool:
+        """Pick up the index's current generation (after a writer's
+        commit/merge). Returns True when a newer generation was opened.
+        Cache entries of the old generation become unreachable (keys are
+        generation-qualified) and age out of the LRUs."""
+        before = self._index.generation
+        self._index.refresh()
+        if self._index.generation == before \
+                and self.searcher.generation == before:
+            return False
+        self._open_searcher()
+        return True
 
     @property
     def cache_hits(self) -> int:
         return self.stats.cache_hits
 
+    def close(self) -> None:
+        """Release the index handle's transport (worker pools)."""
+        self._index.close()
+
     # ------------------------------------------------------------ internals
+    def _cache_key(self, query, top_k):
+        # keyed by the generation of the searcher actually serving — NOT
+        # the Index handle's, which a shared writer may have bumped ahead
+        # of refresh(); results cached between a commit and a refresh()
+        # must stay filed under the snapshot that produced them
+        return (self.searcher.generation, query, top_k)
+
     def _cache_get(self, key):
         if self._cache is None:
             return None
@@ -102,7 +171,7 @@ class SearchService:
         """Serve one query (Term/And/Or tree, string, or `Regex`)."""
         if isinstance(query, str):
             query = parse(query)
-        key = (query, top_k)
+        key = self._cache_key(query, top_k)
         hit = self._cache_get(key)
         if hit is not None:
             return hit
@@ -132,7 +201,7 @@ class SearchService:
         results: list = [None] * len(qs)
         miss: list[int] = []
         for i, q in enumerate(qs):
-            hit = self._cache_get((q, top_k))
+            hit = self._cache_get(self._cache_key(q, top_k))
             if hit is not None:
                 results[i] = hit
             else:
@@ -144,5 +213,5 @@ class SearchService:
             for i, res in zip(miss, batch):
                 results[i] = res
                 self.stats.observe(res.stats)
-                self._cache_put((qs[i], top_k), res)
+                self._cache_put(self._cache_key(qs[i], top_k), res)
         return results

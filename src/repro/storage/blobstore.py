@@ -54,6 +54,22 @@ class BlobStore(ABC):
         this with an O(1) check — `list` walks every blob."""
         return name in self.list(name)
 
+    def put_if_absent(self, name: str, data: bytes) -> bool:
+        """Create `name` only if it does not exist; True on creation.
+
+        This is the primitive that makes index-manifest publication a
+        compare-and-swap (docs/index_lifecycle.md): of two writers racing
+        to publish the same generation, exactly one wins. Both built-in
+        stores override this with a genuinely atomic version (real object
+        stores expose the same via if-none-match / precondition PUTs);
+        this fallback is check-then-put and only suitable for stores
+        without concurrent writers.
+        """
+        if self.exists(name):
+            return False
+        self.put(name, data)
+        return True
+
     def total_bytes(self, prefix: str = "") -> int:
         return sum(self.size(n) for n in self.list(prefix))
 
@@ -68,6 +84,13 @@ class InMemoryBlobStore(BlobStore):
     def put(self, name: str, data: bytes) -> None:
         with self._lock:
             self._blobs[name] = bytes(data)
+
+    def put_if_absent(self, name: str, data: bytes) -> bool:
+        with self._lock:
+            if name in self._blobs:
+                return False
+            self._blobs[name] = bytes(data)
+            return True
 
     def get_range(self, req: RangeRequest) -> bytes:
         with self._lock:
@@ -125,6 +148,22 @@ class LocalBlobStore(BlobStore):
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
+
+    def put_if_absent(self, name: str, data: bytes) -> bool:
+        path = self._path(name)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        try:
+            os.link(tmp, path)      # atomic create-exclusive on POSIX
+        except FileExistsError:
+            return False
+        finally:
+            os.remove(tmp)
+        return True
 
     def get_range(self, req: RangeRequest) -> bytes:
         with open(self._path(req.blob), "rb") as f:

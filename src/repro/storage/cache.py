@@ -80,9 +80,15 @@ class LRUCache:
 class SuperpostCache:
     """Byte-bounded LRU over raw superpost payloads, keyed by range.
 
-    Keys are `(blob, offset, length)` triples — exactly a `RangeRequest`'s
-    identity — so a hit returns the same bytes the store would, and cached
-    runs stay result-identical to uncached ones. `bytes_saved` counts
+    Keys are `(generation, blob, offset, length)` — a `RangeRequest`'s
+    identity qualified by the **index generation** that fetched it — so a
+    hit returns the same bytes the store would, and cached runs stay
+    result-identical to uncached ones. The generation term is the
+    stale-read guard for the index lifecycle (docs/index_lifecycle.md):
+    a `writer.commit()`/`merge()` bumps the generation, so a reader
+    reopened on the new generation can never be served pre-commit bytes
+    even when a rebuild reused the same blob names and ranges. Entries of
+    dead generations age out of the LRU naturally. `bytes_saved` counts
     payload bytes served from memory instead of the (simulated) network.
     """
 
@@ -112,17 +118,19 @@ class SuperpostCache:
 
     # -- access -----------------------------------------------------------
     @staticmethod
-    def _key(blob: str, offset: int, length: int) -> tuple:
-        return (blob, int(offset), int(length))
+    def _key(blob: str, offset: int, length: int, generation: int) -> tuple:
+        return (int(generation), blob, int(offset), int(length))
 
-    def get(self, blob: str, offset: int, length: int) -> bytes | None:
-        payload = self._lru.get(self._key(blob, offset, length))
+    def get(self, blob: str, offset: int, length: int,
+            generation: int = 0) -> bytes | None:
+        payload = self._lru.get(self._key(blob, offset, length, generation))
         if payload is not None:
             self.bytes_saved += len(payload)
         return payload
 
-    def put(self, blob: str, offset: int, length: int, payload: bytes) -> None:
-        self._lru.put(self._key(blob, offset, length), payload)
+    def put(self, blob: str, offset: int, length: int, payload: bytes,
+            generation: int = 0) -> None:
+        self._lru.put(self._key(blob, offset, length, generation), payload)
 
     def summary(self) -> dict:
         return {

@@ -62,6 +62,11 @@ class FetchStats:
     n_hedged_abandoned: int = 0  # hedged requests we did not wait for
     cache_hits: int = 0          # range reads served by a SuperpostCache
     cache_bytes_saved: int = 0   # payload bytes those hits avoided fetching
+    # transport-level accounting (storage/transport.py policies)
+    n_retries: int = 0           # re-issued after a deadline miss / error
+    n_deadline_misses: int = 0   # requests that ran out of retry budget
+    n_hedges_issued: int = 0     # duplicate GETs issued for tail latency
+    n_hedge_wins: int = 0        # duplicates that beat their primary
 
     def add(self, other: "FetchStats") -> None:
         self.elapsed_s += other.elapsed_s
@@ -72,6 +77,10 @@ class FetchStats:
         self.n_hedged_abandoned += other.n_hedged_abandoned
         self.cache_hits += other.cache_hits
         self.cache_bytes_saved += other.cache_bytes_saved
+        self.n_retries += other.n_retries
+        self.n_deadline_misses += other.n_deadline_misses
+        self.n_hedges_issued += other.n_hedges_issued
+        self.n_hedge_wins += other.n_hedge_wins
 
 
 class SimCloudStore:
@@ -100,6 +109,50 @@ class SimCloudStore:
         tail = self._rng.random(n) < m.tail_prob
         return np.where(tail, base * m.tail_scale, base)
 
+    def sample_first_byte(self, n: int) -> np.ndarray:
+        """Draw `n` first-byte latencies from the model (advances the RNG).
+
+        Public so a `StorageTransport` policy (retry, hedged duplicates)
+        can simulate extra attempts on the same latency distribution.
+        """
+        return self._sample_first_byte(n)
+
+    def advance(self, stats: FetchStats) -> None:
+        """Account a batch simulated outside `fetch_batch` (transport
+        policies): advance the virtual clock and lifetime totals."""
+        self.clock_s += stats.elapsed_s
+        self.totals.add(stats)
+
+    def schedule_batch(self, service_s: np.ndarray, sizes: np.ndarray,
+                       wait_for: int | None,
+                       ) -> tuple[float, float, set[int]]:
+        """The batch latency model, shared with transport policies.
+
+        Per-request service times (first-byte latencies, however shaped)
+        are assigned greedily to `concurrency` virtual connections in
+        issue order (matches a thread-pool downloader); first-byte
+        latencies overlap across connections, while transfers share the
+        VM's aggregate NIC bandwidth — total-bytes / bandwidth no matter
+        how many connections carry it. This is what makes big fetch
+        batches bandwidth-bound and small chatty ones latency-bound
+        (Fig. 2). Returns `(wait, download, abandoned)` where
+        `abandoned` are the requests a `wait_for=k` hedged wait gave up
+        on.
+        """
+        n = len(service_s)
+        conn_free = np.zeros(min(self.concurrency, n))
+        done = np.empty(n)
+        for i in range(n):
+            c = int(np.argmin(conn_free))
+            done[i] = conn_free[c] + service_s[i]
+            conn_free[c] = done[i]
+        k = n if wait_for is None else min(int(wait_for), n)
+        order = np.argsort(done)
+        kept = order[:k]
+        wait = float(done[kept[-1]])
+        download = float(sizes[kept].sum() / self.model.bandwidth_bps)
+        return wait, download, set(order[k:].tolist())
+
     def _transfer_time(self, sizes: np.ndarray) -> np.ndarray:
         return sizes / self.model.bandwidth_bps
 
@@ -123,35 +176,16 @@ class SimCloudStore:
         sizes = np.array([len(p) for p in payloads], dtype=np.float64)
 
         first_byte = self._sample_first_byte(n)
-
-        # first-byte latencies overlap across connections (greedy queueing);
-        # transfers share the VM's aggregate NIC bandwidth, so the batch's
-        # download time is total-bytes / bandwidth no matter how many
-        # connections carry it — this is what makes big fetch batches
-        # bandwidth-bound and small chatty ones latency-bound (Fig. 2).
-        conn_free = np.zeros(min(self.concurrency, n))
-        start = np.empty(n)
-        for i in range(n):
-            c = int(np.argmin(conn_free))
-            start[i] = conn_free[c]
-            conn_free[c] = start[i] + first_byte[i]
-        headers_done = start + first_byte
-
-        k = n if wait_for is None else min(int(wait_for), n)
-        order = np.argsort(headers_done)
-        kept = order[:k]
-        wait = float(headers_done[kept[-1]])
-        download = float(sizes[kept].sum() / self.model.bandwidth_bps)
+        wait, download, abandoned = self.schedule_batch(first_byte, sizes,
+                                                        wait_for)
         elapsed = wait + download
-
-        abandoned = set(order[k:].tolist())
         out: list[bytes | None] = [
             None if i in abandoned else payloads[i] for i in range(n)]
 
         stats = FetchStats(
             elapsed_s=elapsed, wait_s=wait, download_s=download,
             bytes_fetched=int(sizes[list(set(range(n)) - abandoned)].sum()),
-            n_requests=n, n_hedged_abandoned=n - k)
+            n_requests=n, n_hedged_abandoned=len(abandoned))
         self.clock_s += elapsed
         self.totals.add(stats)
         return out, stats

@@ -16,10 +16,13 @@ SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _run(code: str) -> dict:
+    # pin the cpu platform explicitly: the forced host device count still
+    # applies, and an unset JAX_PLATFORMS would probe the container's TPU
+    # PJRT plugin, which hangs for minutes when no TPU is attached
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
                PYTHONPATH=SRC)
-    env.pop("JAX_PLATFORMS", None)
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=900)
     assert out.returncode == 0, out.stderr[-3000:]

@@ -16,10 +16,12 @@ SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
 def _run(code: str) -> dict:
+    # pin cpu: forced host device count still applies, and probing the
+    # container's TPU plugin (unset JAX_PLATFORMS) can hang for minutes
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
                PYTHONPATH=SRC)
-    env.pop("JAX_PLATFORMS", None)
     out = subprocess.run([sys.executable, "-c", code], env=env,
                          capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]

@@ -1,0 +1,458 @@
+"""Index lifecycle: build/open façade, segmented writer, manifest
+generations, generation-keyed caches, and the StorageTransport protocol.
+
+The load-bearing acceptance criterion: byte-identity across the
+redesign. `query_batch` through `Index.open(...).searcher()` over a
+base+segments index must equal a monolithic rebuild of the concatenated
+corpus, and the legacy `Searcher(cloud, prefix)` constructor must keep
+returning identical results (with a DeprecationWarning)."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data import make_logs_like, write_corpus
+from repro.data.corpus import Corpus
+from repro.data.tokenizer import distinct_words
+from repro.index import (And, BuilderConfig, Index, MultiSegmentSearcher,
+                         Or, Regex, Searcher, Term)
+from repro.index.lifecycle import decode_manifest, encode_manifest
+from repro.serving import SearchService
+from repro.storage import (BlobStoreTransport, InMemoryBlobStore,
+                           RangeRequest, SimCloudStore, SimCloudTransport,
+                           SuperpostCache, TransportError, TransportPolicy,
+                           as_transport)
+
+CFG = BuilderConfig(B=1200, F0=1.0, hedge_layers=1)
+
+MIXED = [
+    "error", "info", "block",
+    And((Term("error"), Term("block"))),
+    Or((Term("warn"), Term("node7"))),
+    Or((And((Term("error"), Term("block"))), Term("node9"))),
+]
+
+
+def _truth(docs):
+    truth: dict[str, set[int]] = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    return truth
+
+
+@pytest.fixture(scope="module")
+def corpora():
+    store = InMemoryBlobStore()
+    docs1 = make_logs_like(900, seed=21)
+    docs2 = make_logs_like(250, seed=22)
+    c1 = write_corpus(store, "corpus/one", docs1, n_blobs=3)
+    c2 = write_corpus(store, "corpus/two", docs2, n_blobs=2)
+    return store, docs1, docs2, c1, c2
+
+
+# ------------------------------------------------------------ build / open
+def test_build_open_roundtrip_and_manifest(corpora):
+    store, docs1, _docs2, c1, _c2 = corpora
+    idx = Index.build(c1, CFG, store, "index/bo")
+    assert idx.generation == 1 and idx.n_segments == 0
+    assert idx.report is not None and idx.report.n_docs == len(docs1)
+    # manifest blob round-trips through its codec
+    raw = store.get(f"index/bo/manifest-00000001.airm")
+    m = decode_manifest(raw)
+    assert m["generation"] == 1 and m["base"]["prefix"] == "index/bo"
+    assert decode_manifest(encode_manifest(m)) == m
+
+    opened = Index.open(SimCloudStore(store, seed=3), "index/bo")
+    assert opened.generation == 1
+    assert opened.config == CFG
+    s = opened.searcher()
+    assert isinstance(s, Searcher)        # no segments -> classic engine
+    truth = _truth(docs1)
+    res = s.query("error")
+    assert set(res.texts) == {docs1[i] for i in truth["error"]}
+
+
+def test_open_missing_prefix_raises(corpora):
+    store, *_ = corpora
+    with pytest.raises(FileNotFoundError):
+        Index.open(store, "index/does-not-exist")
+
+
+def test_legacy_searcher_constructor_identical_and_warns(corpora):
+    store, _docs1, _docs2, c1, _c2 = corpora
+    Index.build(c1, CFG, store, "index/legacy")
+    facade = Index.open(SimCloudStore(store, seed=5),
+                        "index/legacy").searcher()
+    with pytest.warns(DeprecationWarning):
+        legacy = Searcher(SimCloudStore(store, seed=5), "index/legacy")
+    a = facade.query_batch(MIXED)
+    b = legacy.query_batch(MIXED)
+    for x, y in zip(a, b):
+        assert x.texts == y.texts and x.refs == y.refs
+
+
+def test_legacy_header_only_prefix_opens_read_only(corpora):
+    store, docs1, _docs2, c1, _c2 = corpora
+    from repro.index import Builder
+    Builder(CFG).build(c1, store, "index/oldstyle")   # no manifest
+    idx = Index.open(store, "index/oldstyle")
+    assert idx.generation == 0 and idx.config is None
+    res = idx.searcher().query("error")
+    assert set(res.texts) == {docs1[i] for i in _truth(docs1)["error"]}
+    with pytest.raises(ValueError):
+        idx.writer()
+
+
+# --------------------------------------------- segments: the identity test
+def test_append_commit_reopen_identical_to_monolithic_rebuild(corpora):
+    store, docs1, docs2, c1, c2 = corpora
+    idx = Index.build(c1, CFG, store, "index/seg")
+    w = idx.writer()
+    rep = w.append(c2)
+    assert rep.n_docs == len(docs2)
+    assert idx.n_segments == 0            # staged, not yet visible
+    w.commit()
+    assert idx.generation == 2 and idx.n_segments == 1
+
+    reopened = Index.open(SimCloudStore(store, seed=4), "index/seg")
+    seg = reopened.searcher()
+    assert isinstance(seg, MultiSegmentSearcher) and seg.n_units == 2
+
+    cat = Corpus(store=store, refs=c1.refs + c2.refs, texts=docs1 + docs2)
+    Index.build(cat, CFG, store, "index/mono")
+    mono = Index.open(SimCloudStore(store, seed=4), "index/mono").searcher()
+
+    queries = MIXED + [Regex(r"blk_4[0-9]1\b")]
+    a = seg.query_batch(queries)
+    b = mono.query_batch(queries)
+    for q, x, y in zip(queries, a, b):
+        assert x.texts == y.texts, q
+        assert x.refs == y.refs, q
+    # ground truth over the concatenated corpus, for good measure
+    alldocs = docs1 + docs2
+    truth = _truth(alldocs)
+    assert set(a[0].texts) == {alldocs[i] for i in truth["error"]}
+
+
+def test_topk_over_segments_returns_k_matching(corpora):
+    store, *_ = corpora
+    seg = Index.open(SimCloudStore(store, seed=4), "index/seg").searcher()
+    for res in seg.query_batch(["error", "info"], top_k=5):
+        assert len(res.texts) == 5 and len(res.refs) == 5
+    for res, w in zip(seg.query_batch(["error", "info"], top_k=5),
+                      ["error", "info"]):
+        assert all(w in distinct_words(t) for t in res.texts)
+
+
+def test_merge_compacts_to_single_base_identical(corpora):
+    store, docs1, docs2, c1, c2 = corpora
+    idx = Index.build(c1, CFG, store, "index/mrg")
+    w = idx.writer()
+    w.append(c2)
+    w.commit()
+    before = Index.open(SimCloudStore(store, seed=6),
+                        "index/mrg").searcher().query_batch(MIXED)
+    w.merge()
+    assert idx.generation == 3 and idx.n_segments == 0
+    merged = Index.open(SimCloudStore(store, seed=6), "index/mrg")
+    s = merged.searcher()
+    assert isinstance(s, Searcher)        # compacted back to one unit
+    assert merged.base_prefix == "index/mrg/base-00000003"
+    after = s.query_batch(MIXED)
+    for x, y in zip(after, before):
+        assert x.texts == y.texts and x.refs == y.refs
+
+
+def test_abort_deletes_staged_segment_blobs(corpora):
+    store, _docs1, _docs2, c1, c2 = corpora
+    idx = Index.build(c1, CFG, store, "index/abort")
+    w = idx.writer()
+    w.append(c2)
+    staged = [n for n in store.list("index/abort/seg-")]
+    assert staged                          # blobs written but unreferenced
+    w.abort()
+    assert not store.list("index/abort/seg-")
+    assert idx.generation == 1             # nothing committed
+    # readers never saw the staged segment
+    s = Index.open(store, "index/abort").searcher()
+    assert isinstance(s, Searcher)
+
+
+def test_concurrent_commit_detected(corpora):
+    store, docs1, docs2, c1, c2 = corpora
+    Index.build(c1, CFG, store, "index/race")
+    w_a = Index.open(store, "index/race").writer()
+    w_b = Index.open(store, "index/race").writer()
+    w_a.append(c2)
+    w_b.append(c2)
+    # sessions stage to disjoint blob names (per-session token), so the
+    # loser can neither overwrite nor abort() away the winner's segment
+    a_blobs = set(store.list(w_a._staged_prefixes[0]))
+    b_blobs = set(store.list(w_b._staged_prefixes[0]))
+    assert a_blobs and b_blobs and a_blobs.isdisjoint(b_blobs)
+    w_a.commit()
+    with pytest.raises(RuntimeError, match="concurrent"):
+        w_b.commit()
+    w_b.abort()
+    alldocs = docs1 + docs2
+    res = Index.open(store, "index/race").searcher().query("error")
+    assert set(res.texts) == {alldocs[i] for i in _truth(alldocs)["error"]}
+
+
+def test_put_if_absent_atomic_create(tmp_path):
+    from repro.storage import LocalBlobStore
+    mem = InMemoryBlobStore()
+    assert mem.put_if_absent("m", b"winner") is True
+    assert mem.put_if_absent("m", b"loser") is False
+    assert mem.get("m") == b"winner"
+    loc = LocalBlobStore(str(tmp_path))
+    assert loc.put_if_absent("d/m", b"winner") is True
+    assert loc.put_if_absent("d/m", b"loser") is False
+    assert loc.get("d/m") == b"winner"
+    assert not [n for n in loc.list("") if ".tmp." in n]
+
+
+def test_commit_publication_is_compare_and_swap(corpora):
+    """Even a writer that passes the generation check must lose the
+    publish if a racer claimed the generation in between — put_if_absent
+    is the linearization point, never a silent overwrite."""
+    store, _docs1, _docs2, c1, c2 = corpora
+    idx = Index.build(c1, CFG, store, "index/cas")
+    w = Index.open(store, "index/cas").writer()
+    w.append(c2)
+    from repro.index.lifecycle import _manifest_name, encode_manifest
+    racer = dict(idx.manifest, generation=2)
+    store.put(_manifest_name("index/cas", 2), encode_manifest(racer))
+    w._check_not_raced = lambda: 2     # interleave: check already passed
+    with pytest.raises(RuntimeError, match="concurrent"):
+        w.commit()
+    assert store.get(_manifest_name("index/cas", 2)) == \
+        encode_manifest(racer)         # winner's manifest untouched
+
+
+# ------------------------------------------------ generation-keyed caches
+def test_superpost_cache_is_generation_keyed():
+    spc = SuperpostCache(1 << 20)
+    spc.put("b", 0, 4, b"gen1", generation=1)
+    assert spc.get("b", 0, 4, generation=1) == b"gen1"
+    assert spc.get("b", 0, 4, generation=2) is None   # never cross-gen
+    spc.put("b", 0, 4, b"gen2", generation=2)
+    assert spc.get("b", 0, 4, generation=2) == b"gen2"
+    assert spc.get("b", 0, 4, generation=1) == b"gen1"
+
+
+def test_inplace_rebuild_cannot_serve_stale_superposts(corpora):
+    """Regression: an in-place rebuild reuses the SAME blob names (and
+    often the same ranges); a shared SuperpostCache must miss across the
+    generation bump instead of serving pre-rebuild bytes."""
+    store, _d1, _d2, _c1, _c2 = corpora
+    docs_a = make_logs_like(400, seed=31)
+    docs_b = make_logs_like(400, seed=32)
+    ca = write_corpus(store, "corpus/ra", docs_a, n_blobs=2)
+    spc = SuperpostCache(8 << 20)
+    idx1 = Index.build(ca, CFG, store, "index/rebuild")
+    s1 = idx1.searcher(cache=spc)
+    s1.query_batch(["error", "info", "block"])      # warm the cache
+    assert spc.cached_bytes > 0
+
+    cb = write_corpus(store, "corpus/ra", docs_b, n_blobs=2)  # same blobs!
+    idx2 = Index.build(cb, CFG, store, "index/rebuild")
+    assert idx2.generation == idx1.generation + 1
+    cached = idx2.searcher(cache=spc).query_batch(["error", "info", "block"])
+    fresh = idx2.searcher().query_batch(["error", "info", "block"])
+    for x, y in zip(cached, fresh):
+        assert x.texts == y.texts and x.refs == y.refs
+    truth_b = _truth(docs_b)
+    assert set(cached[0].texts) == {docs_b[i] for i in truth_b["error"]}
+
+
+def test_service_result_cache_invalidated_by_commit(corpora):
+    """Regression: the SearchService result LRU is keyed by generation,
+    so a writer.commit() + refresh() re-executes instead of serving the
+    pre-commit QueryResult."""
+    store, docs1, docs2, c1, c2 = corpora
+    idx = Index.build(c1, CFG, store, "index/svc")
+    svc = SearchService(idx, cache_size=8, superpost_cache_bytes=4 << 20)
+    assert svc.generation == 1 and svc.refresh() is False
+    r1 = svc.search("error")
+    assert svc.search("error") is r1       # same-generation hit
+    assert svc.cache_hits == 1
+
+    w = idx.writer()
+    w.append(c2)
+    w.commit()
+    # between commit and refresh the service still serves (and caches
+    # under) its pinned old-generation snapshot — never a mixed state
+    assert svc.search("error") is r1
+    assert svc.cache_hits == 2
+    assert svc.refresh() is True and svc.generation == 2
+    assert isinstance(svc.searcher, MultiSegmentSearcher)
+    r2 = svc.search("error")               # miss: key carries generation
+    assert svc.cache_hits == 2
+    alldocs = docs1 + docs2
+    assert set(r2.texts) == {alldocs[i] for i in _truth(alldocs)["error"]}
+    assert len(r2.texts) > len(r1.texts)
+    assert svc.search("error") is r2       # new generation caches again
+    assert svc.cache_hits == 3
+
+
+# ------------------------------------------------------- transport protocol
+class _FlakyStore(InMemoryBlobStore):
+    """Fails the first read attempt of every distinct range."""
+
+    def __init__(self):
+        super().__init__()
+        self._seen: set = set()
+        self._flaky_lock = threading.Lock()
+        self.failures = 0
+
+    def get_range(self, req):
+        key = (req.blob, req.offset, req.length)
+        with self._flaky_lock:
+            first = key not in self._seen
+            self._seen.add(key)
+            if first:
+                self.failures += 1
+        if first:
+            raise OSError(f"transient read error for {key}")
+        return super().get_range(req)
+
+
+def test_blobstore_transport_retry_accounting():
+    store = _FlakyStore()
+    store.put("blob", bytes(range(256)))
+    reqs = [RangeRequest("blob", 0, 16), RangeRequest("blob", 16, 16),
+            RangeRequest("blob", 100, 8)]
+    transport = BlobStoreTransport(store, TransportPolicy(max_retries=2))
+    payloads, stats = transport.fetch_batch(reqs)
+    assert payloads == [bytes(range(0, 16)), bytes(range(16, 32)),
+                        bytes(range(100, 108))]
+    assert stats.n_retries == 3            # one re-issue per request
+    assert stats.n_requests == 6           # 3 GETs + 3 retries
+    assert stats.bytes_fetched == 40
+
+
+def test_blobstore_transport_exhausted_retries_raise():
+    store = _FlakyStore()
+    store.put("blob", b"x" * 64)
+    transport = BlobStoreTransport(store)      # max_retries=0
+    with pytest.raises(TransportError):
+        transport.fetch(RangeRequest("blob", 0, 8))
+
+
+def test_sim_transport_default_policy_is_passthrough(corpora):
+    """Default-policy transport == raw fetch_batch: same clock, same RNG
+    stream, same payloads — the invariant that keeps every pre-transport
+    latency test meaningful."""
+    store, *_ = corpora
+    reqs = [RangeRequest(n, 0, 64) for n in store.list("corpus/one/")]
+    raw = SimCloudStore(store, seed=17)
+    via = SimCloudStore(store, seed=17)
+    p1, s1 = raw.fetch_batch(reqs)
+    p2, s2 = SimCloudTransport(via).fetch_batch(reqs)
+    assert p1 == p2
+    assert s1.elapsed_s == s2.elapsed_s and raw.clock_s == via.clock_s
+
+
+def test_sim_transport_hedged_get_accounting(corpora):
+    """Hedged duplicate GETs: byte-identical payloads, tail latency cut,
+    hedge counters threaded into FetchStats and store totals."""
+    store, *_ = corpora
+    from repro.storage import NetworkModel
+    tail_model = NetworkModel(tail_prob=0.30, tail_scale=12.0)
+    reqs = [RangeRequest(n, 0, 128) for n in store.list("corpus/")] * 4
+
+    plain_cloud = SimCloudStore(store, model=tail_model, seed=8)
+    plain, _ = plain_cloud.fetch_batch(reqs)
+
+    cloud = SimCloudStore(store, model=tail_model, seed=8)
+    policy = TransportPolicy(hedge_after_s=2.0 * tail_model.first_byte_s)
+    payloads, stats = SimCloudTransport(cloud, policy).fetch_batch(reqs)
+    assert payloads == plain                   # same bytes, always
+    assert stats.n_hedges_issued > 0
+    assert stats.n_hedge_wins > 0
+    assert stats.n_requests == len(reqs) + stats.n_hedges_issued
+    assert cloud.totals.n_hedges_issued == stats.n_hedges_issued
+    # a straggler beaten by its duplicate cannot be slower than unhedged
+    assert stats.wait_s <= plain_cloud.totals.wait_s + 1e-12
+
+
+def test_sim_transport_deadline_retry_accounting(corpora):
+    store, *_ = corpora
+    from repro.storage import NetworkModel
+    tail_model = NetworkModel(tail_prob=0.5, tail_scale=20.0)
+    cloud = SimCloudStore(store, model=tail_model, seed=8)
+    reqs = [RangeRequest(n, 0, 64) for n in store.list("corpus/")] * 3
+    policy = TransportPolicy(deadline_s=2.0 * tail_model.first_byte_s,
+                             max_retries=2)
+    payloads, stats = SimCloudTransport(cloud, policy).fetch_batch(reqs)
+    assert all(p is not None for p in payloads)
+    assert stats.n_retries > 0
+    assert stats.n_requests == len(reqs) + stats.n_retries
+
+
+def test_searcher_accepts_transport_without_warning(corpora):
+    store, docs1, _docs2, _c1, _c2 = corpora
+    transport = as_transport(SimCloudStore(store, seed=2))
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        s = Searcher(transport, "index/bo")
+        svc = SearchService(transport, "index/bo")
+    truth = _truth(docs1)
+    assert set(s.query("error").texts) == \
+        {docs1[i] for i in truth["error"]}
+    assert set(svc.search("error").texts) == \
+        {docs1[i] for i in truth["error"]}
+
+
+def test_service_legacy_constructor_warns(corpora):
+    store, *_ = corpora
+    with pytest.warns(DeprecationWarning):
+        SearchService(SimCloudStore(store, seed=2), "index/bo")
+
+
+# ------------------------------------------------- multi-segment internals
+def test_multisegment_shares_fetch_rounds(corpora):
+    """A segmented lookup is still two shared rounds, not two per unit —
+    and opening the reader fetches every unit's header in ONE batch."""
+    store, *_ = corpora
+    cloud = SimCloudStore(store, seed=12)
+    seg = Index.open(cloud, "index/seg").searcher()
+    assert seg.init_stats.n_requests == seg.n_units   # one parallel round
+    res = seg.query(And((Term("info"), Term("block"))))
+    assert res.texts                       # non-empty: a doc round ran
+    assert res.stats.rounds == 2
+
+
+def test_index_close_and_context_manager(corpora):
+    store, docs1, *_ = corpora
+    with Index.open(store, "index/bo") as idx:       # owns its transport
+        res = idx.searcher().query("error")
+        assert set(res.texts) == {docs1[i] for i in _truth(docs1)["error"]}
+    idx.close()                                      # idempotent
+    transport = as_transport(SimCloudStore(store, seed=3))
+    svc = SearchService(Index.open(transport, "index/bo"))
+    svc.search("error")
+    svc.close()          # caller-supplied transport stays the caller's
+    assert svc.search("info").stats.n_results >= 0
+
+
+def test_multisegment_lookup_batch_shape(corpora):
+    store, *_ = corpora
+    seg = Index.open(SimCloudStore(store, seed=12),
+                     "index/seg").searcher()
+    # per-unit lookups live under a distinct name — the Searcher-shaped
+    # `lookup`/`lookup_batch` deliberately do not exist on the multi-
+    # segment reader (per-unit keys index per-unit string tables)
+    assert not hasattr(seg, "lookup") and not hasattr(seg, "lookup_batch")
+    outs, stats = seg.lookup_batch_units(["error", "info"])
+    assert len(outs) == seg.n_units
+    for unit_outs in outs:
+        assert len(unit_outs) == 2
+        assert set(unit_outs[0]) == {"error"}
+    assert stats.n_candidates > 0
+    assert isinstance(stats.lookup.n_requests, int)
+    assert np.all(np.diff(outs[0][0]["error"][0].astype(np.int64)) > 0)

@@ -40,10 +40,12 @@ def test_elastic_mesh_chooser():
     import json
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
+    # pin cpu: forced host device count still applies, and probing the
+    # container's TPU plugin (unset JAX_PLATFORMS) can hang for minutes
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
                PYTHONPATH=src)
-    env.pop("JAX_PLATFORMS", None)
     code = (
         "import json, jax\n"
         "from repro.launch.elastic import choose_mesh\n"
