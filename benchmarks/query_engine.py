@@ -17,6 +17,13 @@ clock when the burst arrived). For the serial loop that includes queueing
 behind earlier queries; for the batched engine every query completes when
 its shared round does. Results are asserted byte-identical across paths.
 
+A second 64-query **boolean-heavy** workload (NOT / phrases / nested
+trees / regex-under-AND — the composable query language of
+docs/query_language.md) runs through the same serial-vs-batched pair,
+reporting its request counts against the term-only workload's: negation
+and phrases are verification work at the doc round, so the richer
+language costs no extra lookup round.
+
 Writes BENCH_query_engine.json at the repo root so future PRs have a
 perf trajectory to regress against.
 """
@@ -29,8 +36,9 @@ import os
 import numpy as np
 
 from repro.data import make_logs_like, write_corpus
-from repro.data.tokenizer import distinct_words
-from repro.index import And, Builder, BuilderConfig, Or, Regex, Term
+from repro.data.tokenizer import distinct_words, parse_words
+from repro.index import (And, Builder, BuilderConfig, Not, Or, Phrase,
+                         Regex, Term, parse)
 from repro.serving import SearchService
 from repro.storage import (InMemoryBlobStore, NetworkModel, SimCloudStore,
                            SimCloudTransport, TransportPolicy)
@@ -83,6 +91,53 @@ def _workload(truth) -> list:
                 Regex(r"shuffle_7\d+"), Regex(r"blk_9[0-9]{2}\b")]
     assert len(queries) == N_QUERIES
     return queries
+
+
+def _boolean_workload(truth, docs) -> list:
+    """64 boolean-heavy queries as (mix label, query) pairs: NOT, phrases
+    (sloppy + strict), nested trees, regex-under-AND, parsed query text.
+    The reported mix is derived from the labels, so it cannot drift from
+    the construction."""
+    rng = np.random.default_rng(5)
+    words = sorted(truth)
+    rare = [w for w in words if len(truth[w]) <= 8]
+    mid = [w for w in words if 8 < len(truth[w]) <= 200]
+    common = sorted(words, key=lambda w: -len(truth[w]))[:12]
+    pick = lambda pool: str(rng.choice(pool))  # noqa: E731
+
+    def pair():
+        while True:
+            toks = parse_words(docs[int(rng.integers(0, len(docs)))])
+            if len(toks) >= 2:
+                break
+        i = int(rng.integers(0, len(toks) - 1))
+        return toks[i], toks[i + 1]
+
+    labeled: list = []                       # (mix label, query) pairs
+    labeled += [("and_not", And((Term(pick(mid)), Not(Term(pick(common))))))
+                for _ in range(12)]
+    labeled += [("and_not", And((Term(pick(common)), Not(Term(pick(mid))))))
+                for _ in range(8)]
+    labeled += [("phrase", Phrase(pair())) for _ in range(10)]
+    labeled += [("phrase", Phrase(pair(), slop=2)) for _ in range(6)]
+    labeled += [("phrase_under_and", And((Term(pick(common)),
+                                          Phrase(pair()))))
+                for _ in range(8)]
+    labeled += [("nested_or_not",
+                 Or((And((Term(pick(mid)), Not(Term(pick(common))))),
+                     Term(pick(rare))))) for _ in range(8)]
+    labeled += [("regex_under_and",
+                 And((Regex(r"blk_1[0-9]+"), Not(Term(pick(common))))))
+                for _ in range(6)]
+    labeled += [("parsed_text", parse(text)) for text in (
+        f"{pick(mid)} NOT {pick(common)}",
+        f'"{" ".join(pair())}" OR {pick(rare)}',
+        f"{pick(mid)} -({pick(common)} OR {pick(common)})",
+        f"{pick(common)} re:/shuffle_7\\d+/",
+        f"{pick(mid)} NOT {pick(common)}",
+        f'"{" ".join(pair())}"~1')]
+    assert len(labeled) == N_QUERIES
+    return labeled
 
 
 def _percentiles(samples_s: list[float]) -> dict:
@@ -184,6 +239,31 @@ def _identical(a, b) -> bool:
                for x, y in zip(a, b))
 
 
+def _boolean_scenario(store, truth, docs, term_only: dict) -> dict:
+    """The composable-language workload through the same serial/batched
+    pair, request counts side by side with the term-only workload."""
+    from collections import Counter
+    labeled = _boolean_workload(truth, docs)
+    queries = [q for _label, q in labeled]
+    serial_res, serial = _run_serial(store, queries)
+    batched_res, batched = _run_batched(store, queries)
+    return {
+        "workload": {
+            "n_queries": N_QUERIES,
+            "mix": dict(Counter(label for label, _q in labeled)),
+        },
+        "serial": serial,
+        "batched": batched,
+        "identical_results": _identical(serial_res, batched_res),
+        "speedup_p50": serial["p50_ms"] / batched["p50_ms"],
+        "requests_per_query": {
+            "boolean_batched": batched["n_requests"] / N_QUERIES,
+            "term_only_batched": term_only["n_requests"] / N_QUERIES,
+            "boolean_serial": serial["n_requests"] / N_QUERIES,
+        },
+    }
+
+
 def run() -> dict:
     store, _docs, truth = _fixture()
     queries = _workload(truth)
@@ -210,6 +290,7 @@ def run() -> dict:
         "request_reduction_frac":
             1.0 - batched["n_requests"] / serial["n_requests"],
         "tail_scenario": _tail_scenario(store, queries),
+        "boolean_scenario": _boolean_scenario(store, truth, _docs, batched),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2, sort_keys=True)
@@ -235,6 +316,16 @@ def bench_query_engine():
                   f"n_requests={tail[path]['n_requests']}")
     yield row("query_engine/tail_hedged_p99_speedup", tail["p99_speedup"],
               f"extra_requests={tail['extra_request_frac'] * 100:.1f}%")
+    boolean = report["boolean_scenario"]
+    yield row("query_engine/boolean_batched_p50",
+              boolean["batched"]["p50_ms"] * 1e3,
+              f"n_requests={boolean['batched']['n_requests']}")
+    yield row("query_engine/boolean_speedup_p50", boolean["speedup_p50"],
+              f"identical={boolean['identical_results']}")
+    yield row("query_engine/boolean_requests_per_query",
+              boolean["requests_per_query"]["boolean_batched"],
+              f"term_only="
+              f"{boolean['requests_per_query']['term_only_batched']:.2f}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@ sys.path.insert(0, "src")
 
 from repro import BuilderConfig, Index
 from repro.data import make_logs_like, write_corpus
-from repro.index import And, Term
+from repro.index import And, Not, Phrase, Regex, Term, parse, to_string
 from repro.storage import InMemoryBlobStore, SimCloudStore
 
 
@@ -24,8 +24,9 @@ def main() -> None:
 
     # 2. Index.build: profile -> optimize (Algorithm 1) -> compact ->
     #    persist base + manifest (generation 1)
-    index = Index.build(corpus, BuilderConfig(B=2000, F0=1.0,
-                                              hedge_layers=1),
+    index = Index.build(corpus, BuilderConfig(B=8000, F0=1.0,
+                                              hedge_layers=1,
+                                              index_ngrams=3),
                         store, "index/logs")
     report = index.report
     print(f"index: generation {index.generation}, L*={report.L} layers "
@@ -55,6 +56,19 @@ def main() -> None:
     res = searcher.query(And((Term("error"), Term("fetch"))), top_k=3)
     print(f"  'error AND fetch' top-3: {len(res.texts)} docs in "
           f"{res.stats.total_s * 1e3:.0f} ms")
+
+    # 4b. composable queries (docs/query_language.md): NOT, phrases, and
+    #     regex compose freely; one planner lowers every tree to the same
+    #     two-round pipeline, and results stay exact (content-verified)
+    for q in (And((Term("info"), Not(Term("block")))),         # AND-NOT
+              Phrase(("failed", "fetch")),                     # adjacency
+              Phrase(("task", "stage"), slop=2),               # proximity
+              And((Term("info"), Regex(r"blk_1[0-9]{3}\b"))),  # regex ∧ term
+              parse('"failed fetch" OR terminating')):         # query text
+        res = searcher.query(q)
+        print(f"  {to_string(q)!r}: {res.stats.n_results} docs "
+              f"({res.stats.n_candidates} candidates, "
+              f"{res.stats.n_false_positives} FPs filtered)")
 
     # 5. hedged read (§IV-G): straggler-proof lookup
     res = searcher.query("block", hedge=True)

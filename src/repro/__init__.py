@@ -23,6 +23,16 @@ _LAZY_EXPORTS = {
     "Builder": "repro.index",
     "BuilderConfig": "repro.index",
     "Searcher": "repro.index",
+    "And": "repro.index",
+    "Or": "repro.index",
+    "Not": "repro.index",
+    "Term": "repro.index",
+    "Phrase": "repro.index",
+    "Regex": "repro.index",
+    "parse": "repro.index",
+    "to_string": "repro.index",
+    "normalize": "repro.index",
+    "PureNegationError": "repro.index",
     "SearchService": "repro.serving",
     "StorageTransport": "repro.storage",
     "TransportPolicy": "repro.storage",

@@ -1,13 +1,19 @@
-"""Index lifecycle + build/search: Index façade, Builder, Searcher,
-segmented writer, compaction codec, baselines."""
+"""Index lifecycle + build/search: Index façade, Builder, query language,
+logical/physical planner, Searcher, segmented writer, compaction codec,
+baselines."""
 
 from .builder import Builder, BuilderConfig, BuildReport
 from .fetch_plan import coalesce_requests, slice_payloads
 from .lifecycle import Index, IndexWriter, MultiSegmentSearcher
-from .query import And, Or, Query, Regex, Term, parse, query_words
+from .planner import PhysicalPlan, PureNegationError, physical_plan
+from .query import (And, Not, Or, Phrase, Query, QuerySyntaxError, Regex,
+                    Term, normalize, parse, query_words, to_string)
 from .searcher import QueryResult, QueryStats, Searcher
 
-__all__ = ["Builder", "BuilderConfig", "BuildReport", "And", "Or", "Query",
-           "Regex", "Term", "parse", "query_words", "QueryResult",
-           "QueryStats", "Searcher", "coalesce_requests", "slice_payloads",
-           "Index", "IndexWriter", "MultiSegmentSearcher"]
+__all__ = ["Builder", "BuilderConfig", "BuildReport", "And", "Or", "Not",
+           "Phrase", "Query", "QuerySyntaxError", "Regex", "Term",
+           "normalize", "parse", "query_words", "to_string",
+           "PhysicalPlan", "PureNegationError", "physical_plan",
+           "QueryResult", "QueryStats", "Searcher", "coalesce_requests",
+           "slice_payloads", "Index", "IndexWriter",
+           "MultiSegmentSearcher"]

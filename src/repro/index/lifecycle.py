@@ -49,9 +49,10 @@ from ..storage.cache import SuperpostCache
 from ..storage.simcloud import FetchStats
 from ..storage.transport import StorageTransport, as_transport
 from .builder import Builder, BuilderConfig, BuildReport
+from .planner import make_job, plan_batch
 from .query import Query, Regex, Term
 from .searcher import (QueryResult, Searcher, _Fetcher, execute_jobs,
-                       lookup_units, make_job)
+                       lookup_units)
 
 MANIFEST_MAGIC = b"AIRM"
 MANIFEST_VERSION = 1
@@ -198,15 +199,15 @@ class MultiSegmentSearcher:
               fetch_documents: bool = True) -> QueryResult:
         q = Term(q) if isinstance(q, str) else q
         job = make_job(q, top_k=top_k, delta=delta,
-                       fetch_documents=fetch_documents)
+                       fetch_documents=fetch_documents,
+                       units=tuple(self.units))
         return execute_jobs(self.units, [job], self._fetcher,
                             hedge=hedge)[0]
 
     def query_batch(self, queries: list[Query | str],
                     top_k: int | None = None, hedge: bool = False,
                     impl: str = "sorted") -> list[QueryResult]:
-        jobs = [make_job(Term(q) if isinstance(q, str) else q,
-                         top_k=top_k) for q in queries]
+        jobs = plan_batch(queries, units=tuple(self.units), top_k=top_k)
         return execute_jobs(self.units, jobs, self._fetcher,
                             hedge=hedge, impl=impl)
 

@@ -28,6 +28,13 @@ instead of query count (docs/query_engine.md):
 `lookup`/`query` are the single-query views of the same three phases, so
 serial and batched execution are result-identical by construction.
 
+Queries arrive as trees of the composable query language (Term/And/Or/
+Not/Phrase/Regex — docs/query_language.md); the logical→physical planner
+(`index/planner.py`) lowers each tree to a lookup word set, a candidate
+algebra, and a content verifier before the phases run. Classic
+Term/And/Or and standalone-Regex shapes compile to the pre-planner jobs
+bit-for-bit.
+
 Since the lifecycle redesign (docs/index_lifecycle.md) the executor is
 **multi-unit**: the same plan/fetch/decode pipeline fans one query batch
 across several index units (a base index plus delta segments), sharing
@@ -40,10 +47,8 @@ survives as a deprecated shim over the transport adapter.
 
 from __future__ import annotations
 
-import re as _re
 import warnings
 from dataclasses import dataclass, field, replace
-from typing import Callable
 
 import numpy as np
 
@@ -51,7 +56,6 @@ from ..core.hashing import HashFamily, word_fingerprint
 from ..core.sketch import intersect_sorted
 from ..core.topk import sample_size
 from ..data.corpus import DocRef
-from ..data.tokenizer import distinct_words
 from ..storage.blobstore import RangeRequest
 from ..storage.cache import SuperpostCache
 from ..storage.simcloud import FetchStats, SimCloudStore
@@ -59,6 +63,9 @@ from ..storage.transport import (SimCloudTransport, StorageTransport,
                                  as_transport)
 from . import codec
 from .fetch_plan import coalesce_requests, slice_payloads
+from .planner import (DocContent, Job as _Job,
+                      _classic_matches as _matches, combine_planned,
+                      make_job, plan_batch, regex_prefilter)
 from .query import And, Or, Query, Regex, Term, query_words
 
 
@@ -93,23 +100,6 @@ class _LookupPlan:
     # requests that appear ONLY as §IV-G hedge layers (position >= L of
     # every word using them) — the only ones a hedged wait may abandon
     hedgeable: set[int] = field(default_factory=set)
-
-
-@dataclass
-class _Job:
-    """One query of a batch: lookup tree + round-2 acceptance filter.
-
-    Exactly one of the predicates is set: tree queries filter on the
-    document's word set (computed once per unique document in a batch),
-    regex jobs on the raw text.
-    """
-
-    lookup_q: Query
-    accept_words: Callable[[set[str]], bool] | None = None
-    accept_text: Callable[[str], bool] | None = None
-    top_k: int | None = None
-    delta: float = 1e-6
-    fetch_documents: bool = True
 
 
 @dataclass
@@ -331,7 +321,7 @@ class Searcher:
               fetch_documents: bool = True) -> QueryResult:
         q = Term(q) if isinstance(q, str) else q
         job = make_job(q, top_k=top_k, delta=delta,
-                       fetch_documents=fetch_documents)
+                       fetch_documents=fetch_documents, units=(self,))
         return self._execute_jobs([job], hedge=hedge)[0]
 
     def query_batch(self, queries: list[Query | str],
@@ -339,14 +329,17 @@ class Searcher:
                     impl: str = "sorted") -> list[QueryResult]:
         """Execute a whole batch of queries in two shared fetch rounds.
 
-        Accepts Term/And/Or trees, raw strings (single terms), and `Regex`
-        jobs. Results are identical to per-query `query`; only the
-        (simulated) latency and request count differ. With
-        `impl="bitmap"`, multi-term AND combines run through the batched
-        Pallas intersection kernel (`kernels/intersect`).
+        Accepts any query-language tree (Term/And/Or/Not/Phrase/Regex,
+        composed freely — see docs/query_language.md) plus raw strings
+        (single terms). Every query goes through the logical→physical
+        planner (`index/planner.py`); classic Term/And/Or and standalone
+        Regex shapes compile to exactly the pre-planner jobs, so their
+        requests and results stay byte-identical. Results equal per-query
+        `query`; only the (simulated) latency and request count differ.
+        With `impl="bitmap"`, candidate combines run through the batched
+        Pallas kernels (`kernels/intersect`).
         """
-        jobs = [make_job(Term(q) if isinstance(q, str) else q,
-                         top_k=top_k) for q in queries]
+        jobs = plan_batch(queries, units=(self,), top_k=top_k)
         return self._execute_jobs(jobs, hedge=hedge, impl=impl)
 
     def _execute_jobs(self, jobs: list[_Job], hedge: bool = False,
@@ -444,19 +437,6 @@ def lookup_units(units: list[Searcher], queries: list[Query | str],
     return outs_per_unit, stats
 
 
-def make_job(q: Query, top_k: int | None = None,
-             delta: float = 1e-6, fetch_documents: bool = True) -> _Job:
-    if isinstance(q, Regex):
-        lookup_q, compiled = regex_prefilter(q.pattern, q.ngram)
-        return _Job(lookup_q=lookup_q,
-                    accept_text=lambda t, c=compiled: bool(c.search(t)),
-                    top_k=top_k, delta=delta,
-                    fetch_documents=fetch_documents)
-    return _Job(lookup_q=q,
-                accept_words=lambda ws, q=q: _matches(q, ws),
-                top_k=top_k, delta=delta, fetch_documents=fetch_documents)
-
-
 def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
                  hedge: bool = False, impl: str = "sorted",
                  ) -> list[QueryResult]:
@@ -464,7 +444,8 @@ def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
     n_units = len(units)
     outs_per_unit, lstats = lookup_units(
         units, [j.lookup_q for j in jobs], fetcher, hedge=hedge)
-    combined = [_combine_jobs(jobs, outs, impl) for outs in outs_per_unit]
+    combined = [_combine_jobs(jobs, outs, impl, unit)
+                for unit, outs in zip(units, outs_per_unit)]
 
     results: list[QueryResult | None] = [None] * len(jobs)
     stats_of = [QueryStats(lookup=replace(lstats.lookup), rounds=1)
@@ -623,9 +604,10 @@ def _fetch_and_filter_units(units: list[Searcher], jobs: list[_Job],
         stats_of[j].docs.add(fstats)
         stats_of[j].rounds += 1
     # decode-once: a document wanted by several queries is utf-8
-    # decoded (and tokenized, for word filters) a single time
+    # decoded (and tokenized, for word/content filters) a single time —
+    # one DocContent serves classic word filters and planner verifiers
     texts_u: list[str | None] = [None] * len(requests)
-    words_u: list[set[str] | None] = [None] * len(requests)
+    content_u: list[DocContent | None] = [None] * len(requests)
     # a doc indexed by several units is ONE false positive for a job, as
     # it would be in a monolithic rebuild — dedupe rejections by identity
     rejected: dict[int, set[int]] = {}
@@ -644,9 +626,12 @@ def _fetch_and_filter_units(units: list[Searcher], jobs: list[_Job],
                 if job.accept_text is not None:
                     ok = job.accept_text(text)
                 else:
-                    if words_u[i] is None:
-                        words_u[i] = distinct_words(text)
-                    ok = job.accept_words(words_u[i])
+                    if content_u[i] is None:
+                        content_u[i] = DocContent(text)
+                    if job.accept_doc is not None:
+                        ok = job.accept_doc(content_u[i])
+                    else:
+                        ok = job.accept_words(content_u[i].words)
                 if ok:
                     texts_of[u][j].append(text)
                     refs_of[u][j].append(ref)
@@ -659,14 +644,26 @@ def _fetch_and_filter_units(units: list[Searcher], jobs: list[_Job],
 # ----------------------------------------------------------- combine
 def _combine_jobs(jobs: list[_Job],
                   per_word_list: list[dict],
-                  impl: str) -> list[tuple[np.ndarray, np.ndarray]]:
-    """Per-job ∪/∩ combine; `impl="bitmap"` batches every multi-term
-    AND through one `intersect_batch` Pallas call."""
+                  impl: str,
+                  unit: "Searcher",
+                  ) -> list[tuple[np.ndarray, np.ndarray]]:
+    """Per-job candidate combine for one unit.
+
+    Classic jobs run the ∪/∩ distribution (`impl="bitmap"` batches every
+    multi-term AND through one `intersect_batch` Pallas call, exactly as
+    before the planner); planner-compiled jobs evaluate their candidate
+    algebra — AND/OR plus exact-common-word ANDNOT — via
+    `planner.combine_planned` (one fused `combine_batch` Pallas call for
+    the whole planned set under `impl="bitmap"`).
+    """
     out: list[tuple[np.ndarray, np.ndarray] | None] = [None] * len(jobs)
     bitmap_jobs: list[int] = []
+    planned_jobs: list[int] = []
     for j, (job, per_word) in enumerate(zip(jobs, per_word_list)):
         q = job.lookup_q
-        if impl == "bitmap" and isinstance(q, And) \
+        if job.plan is not None:
+            planned_jobs.append(j)
+        elif impl == "bitmap" and isinstance(q, And) \
                 and all(isinstance(s, Term) for s in q.items) \
                 and len(per_word) >= 2:
             bitmap_jobs.append(j)
@@ -678,36 +675,15 @@ def _combine_jobs(jobs: list[_Job],
                       for j in bitmap_jobs]
         for j, res in zip(bitmap_jobs, _bitmap_and_batch(parts_list)):
             out[j] = res
+    if planned_jobs:
+        is_common = lambda w: word_fingerprint(w) in unit.common  # noqa: E731
+        results = combine_planned(
+            [jobs[j].plan for j in planned_jobs],
+            [per_word_list[j] for j in planned_jobs],
+            is_common, impl=impl)
+        for j, res in zip(planned_jobs, results):
+            out[j] = res
     return out  # type: ignore[return-value]
-
-
-# ------------------------------------------------------------- regex
-def regex_prefilter(pattern: str, ngram: int,
-                    ) -> tuple[Query, "_re.Pattern[str]"]:
-    """Literal runs (>= n chars) → AND of indexed n-grams (§IV-F)."""
-    from .builder import NGRAM_PREFIX
-    # extract guaranteed-literal runs: strip character classes,
-    # escapes, and quantified atoms (an atom before ?/*/{m,n} may not
-    # occur, and text around +/| is not contiguous), then split on
-    # the remaining metacharacters
-    stripped = pattern.lower()
-    stripped = _re.sub(r"\[[^\]]*\]", " ", stripped)     # [...] classes
-    stripped = _re.sub(r"\\.", " ", stripped)            # \d \b escapes
-    stripped = _re.sub(r".[*?]", " ", stripped)          # X? X* atoms
-    stripped = _re.sub(r".\{[^}]*\}", " ", stripped)     # X{m,n}
-    stripped = _re.sub(r"[()|.^$+]", " ", stripped)      # other meta
-    literals = _re.findall(r"[a-z0-9_\-./]{%d,}" % ngram, stripped)
-    grams: list[str] = []
-    for lit in literals:
-        grams.extend(lit[i:i + ngram]
-                     for i in range(len(lit) - ngram + 1))
-    if not grams:
-        raise ValueError(
-            f"pattern {pattern!r} has no literal run of >= {ngram} "
-            "chars to prefilter on (a full corpus scan would be "
-            "required — rejected, like the paper's RegEx engines)")
-    q = And(tuple(Term(NGRAM_PREFIX + g) for g in dict.fromkeys(grams)))
-    return q, _re.compile(pattern)
 
 
 def _combine(q: Query, per_word: dict[str, tuple[np.ndarray, np.ndarray]],
@@ -780,10 +756,3 @@ def _bitmap_and_batch(parts_list: list[list[tuple[np.ndarray, np.ndarray]]],
     return out
 
 
-def _matches(q: Query, words: set[str]) -> bool:
-    if isinstance(q, Term):
-        return q.word in words
-    if isinstance(q, And):
-        return all(_matches(s, words) for s in q.items)
-    assert isinstance(q, Or)
-    return any(_matches(s, words) for s in q.items)

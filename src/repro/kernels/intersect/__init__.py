@@ -1,7 +1,11 @@
-from .ops import (bitmap_to_docs, intersect, intersect_batch,
+from .ops import (OP_AND, OP_ANDNOT, OP_OR, bitmap_to_docs, combine_batch,
+                  intersect, intersect_batch, pack_programs,
                   postings_to_bitmap, postings_to_bitmap_batch)
-from .ref import intersect_batch_ref, intersect_ref, popcount
+from .ref import (combine_batch_ref, intersect_batch_ref, intersect_ref,
+                  popcount)
 
-__all__ = ["bitmap_to_docs", "intersect", "intersect_batch",
-           "postings_to_bitmap", "postings_to_bitmap_batch",
+__all__ = ["OP_AND", "OP_ANDNOT", "OP_OR", "bitmap_to_docs",
+           "combine_batch", "intersect", "intersect_batch",
+           "pack_programs", "postings_to_bitmap",
+           "postings_to_bitmap_batch", "combine_batch_ref",
            "intersect_batch_ref", "intersect_ref", "popcount"]

@@ -6,13 +6,20 @@ On TPU we tile the document axis through VMEM in (8, 128)-aligned blocks
 and fuse AND-reduce with population count in one pass, so candidate
 counting (needed by top-K sampling, Eq. 6) costs no extra HBM traffic.
 
-Two entry points:
+Three entry points:
 
   * `intersect_pallas`  — one query: bitmaps (L, W), 1-D grid over W tiles;
   * `intersect_batch_pallas` — a whole query batch: bitmaps (Q, L, W),
     2-D grid over (query, tile) so every query's AND tree runs in ONE
     `pallas_call` — the kernel-side half of the batched query engine
-    (ragged batches are padded with all-ones layers, the AND identity).
+    (ragged batches are padded with all-ones layers, the AND identity);
+  * `combine_batch_pallas` — the query-planner generalization: each
+    query carries a tiny compiled program of AND / OR / ANDNOT steps
+    over its layers (the candidate-set algebra of an arbitrary boolean
+    tree), evaluated slot-machine style per document tile. Programs are
+    padded to one static step count; padding steps re-AND the running
+    result with itself (the identity), so raggedness costs a few no-op
+    vector ops, never a second `pallas_call`.
 
 Layout: bitmaps (… , L, W) uint32 where W = n_docs/32, padded to the tile.
 Each program streams an (L, TILE) block HBM→VMEM, writes the (TILE,)
@@ -78,6 +85,67 @@ def _batch_kernel(bm_ref, out_ref, cnt_ref):
     out_ref[...] = acc[None]
     cnt_ref[...] = jnp.sum(_popcount_swar(acc),
                            dtype=jnp.uint32)[None, None]
+
+
+# opcodes of the combine program (shared with ops.compile/pack helpers)
+OP_AND, OP_OR, OP_ANDNOT = 0, 1, 2
+
+
+def _combine_kernel(bm_ref, prog_ref, out_ref, cnt_ref):
+    """Evaluate one query's combine program on one document tile.
+
+    Slot machine: slots 0..L-1 are the input layers; step s writes slot
+    L+s; the final step's slot is the result. Step operands are traced
+    scalars, so one kernel instance serves every program shape of the
+    batch — the unrolled loop is over the (static, padded) step count.
+    """
+    block = bm_ref[...]                     # (1, L, TILE) uint32
+    prog = prog_ref[...]                    # (1, S, 3) int32
+    slots = block[0]                        # (L, TILE)
+    for s in range(prog.shape[1]):          # S static — unrolled program
+        a = jnp.take(slots, prog[0, s, 1], axis=0)
+        b = jnp.take(slots, prog[0, s, 2], axis=0)
+        op = prog[0, s, 0]
+        r = jnp.where(op == OP_AND, jnp.bitwise_and(a, b),
+                      jnp.where(op == OP_OR, jnp.bitwise_or(a, b),
+                                jnp.bitwise_and(a, jnp.bitwise_not(b))))
+        slots = jnp.concatenate([slots, r[None]], axis=0)
+    acc = slots[-1]
+    out_ref[...] = acc[None]
+    cnt_ref[...] = jnp.sum(_popcount_swar(acc),
+                           dtype=jnp.uint32)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine_batch_pallas(bitmaps: jnp.ndarray, programs: jnp.ndarray,
+                         interpret: bool = True,
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """bitmaps: (Q, L, W) uint32, programs: (Q, S, 3) int32 rows of
+    (opcode, slot_a, slot_b) → (result bitmaps (Q, W), counts (Q,)).
+
+    Grid is (query, tile): program (q, i) evaluates query q's combine
+    program on its i-th document tile — a whole batch of arbitrary
+    boolean trees (AND/OR/ANDNOT) combines in one fused pass.
+    """
+    Q, L, W = bitmaps.shape
+    S = programs.shape[1]
+    pad = (-W) % TILE
+    if pad:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, 0), (0, pad)))
+    Wp = W + pad
+    n_tiles = Wp // TILE
+    out, counts = pl.pallas_call(
+        _combine_kernel,
+        grid=(Q, n_tiles),
+        in_specs=[pl.BlockSpec((1, L, TILE), lambda q, i: (q, 0, i)),
+                  pl.BlockSpec((1, S, 3), lambda q, i: (q, 0, 0))],
+        out_specs=[pl.BlockSpec((1, TILE), lambda q, i: (q, i)),
+                   pl.BlockSpec((1, 1), lambda q, i: (q, i))],
+        out_shape=[jax.ShapeDtypeStruct((Q, Wp), jnp.uint32),
+                   jax.ShapeDtypeStruct((Q, n_tiles), jnp.uint32)],
+        interpret=interpret,
+    )(bitmaps, programs)
+    return out[:, :W], jnp.sum(counts, axis=1, dtype=jnp.uint32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -5,8 +5,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from .kernel import intersect_batch_pallas, intersect_pallas
-from .ref import intersect_batch_ref, intersect_ref
+from .kernel import (OP_AND, OP_ANDNOT, OP_OR, combine_batch_pallas,
+                     intersect_batch_pallas, intersect_pallas)
+from .ref import combine_batch_ref, intersect_batch_ref, intersect_ref
 
 
 def postings_to_bitmap(postings: list[np.ndarray], n_docs: int) -> np.ndarray:
@@ -58,3 +59,41 @@ def intersect_batch(bitmaps, impl: str = "pallas", interpret: bool = True):
     if impl == "ref":
         return intersect_batch_ref(bitmaps)
     return intersect_batch_pallas(bitmaps, interpret=interpret)
+
+
+def pack_programs(programs: list[list[tuple[int, int, int]]],
+                  n_layers: int) -> np.ndarray:
+    """Ragged per-query combine programs → one (Q, S_max, 3) int32 array.
+
+    Each program row is (opcode, slot_a, slot_b); slots 0..n_layers-1
+    are the query's input layers and step s writes slot n_layers+s.
+    Shorter programs are padded with AND(result, result) — the identity
+    — so the whole batch evaluates in one fused kernel call. An empty
+    program (single-layer query) becomes AND(layer0, layer0).
+    """
+    S = max(1, max(len(p) for p in programs))
+    out = np.empty((len(programs), S, 3), dtype=np.int32)
+    for q, prog in enumerate(programs):
+        for s in range(S):
+            if s < len(prog):
+                out[q, s] = prog[s]
+            else:                 # chain the last result through: r & r
+                prev = n_layers + s - 1 if s else 0
+                out[q, s] = (OP_AND, prev, prev)
+    return out
+
+
+def combine_batch(bitmaps, programs, impl: str = "pallas",
+                  interpret: bool = True):
+    """Evaluate per-query AND/OR/ANDNOT programs over layered bitsets.
+
+    bitmaps: (Q, L, W) uint32; programs: (Q, S, 3) int32 (see
+    `pack_programs`) → (result bitmaps (Q, W), counts (Q,)).
+    impl: pallas | ref.
+    """
+    bitmaps = jnp.asarray(bitmaps, dtype=jnp.uint32)
+    if impl == "ref":
+        return combine_batch_ref(bitmaps, programs)
+    return combine_batch_pallas(bitmaps, jnp.asarray(programs,
+                                                     dtype=jnp.int32),
+                                interpret=interpret)

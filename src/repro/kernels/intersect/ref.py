@@ -35,3 +35,31 @@ def intersect_batch_ref(bitmaps: jnp.ndarray,
     for l in range(1, bitmaps.shape[1]):
         out = jnp.bitwise_and(out, bitmaps[:, l])
     return out, jnp.sum(popcount(out), axis=1, dtype=jnp.uint32)
+
+
+def combine_batch_ref(bitmaps: jnp.ndarray, programs,
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the AND/OR/ANDNOT program evaluator.
+
+    bitmaps: (Q, L, W) uint32; programs: (Q, S, 3) int rows of
+    (opcode, slot_a, slot_b) — slots 0..L-1 are the layers, step s
+    writes slot L+s, the last step's slot is the query's result.
+    Returns (result bitmaps (Q, W), per-query counts (Q,)).
+    """
+    import numpy as np
+
+    programs = np.asarray(programs)
+    outs = []
+    for q in range(bitmaps.shape[0]):
+        slots = [bitmaps[q, l] for l in range(bitmaps.shape[1])]
+        for op, a, b in programs[q]:
+            va, vb = slots[int(a)], slots[int(b)]
+            if op == 0:                                   # AND
+                slots.append(jnp.bitwise_and(va, vb))
+            elif op == 1:                                 # OR
+                slots.append(jnp.bitwise_or(va, vb))
+            else:                                         # ANDNOT
+                slots.append(jnp.bitwise_and(va, jnp.bitwise_not(vb)))
+        outs.append(slots[-1])
+    out = jnp.stack(outs)
+    return out, jnp.sum(popcount(out), axis=1, dtype=jnp.uint32)

@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..index.lifecycle import Index
-from ..index.query import Query, parse
+from ..index.query import Query, normalize, parse
 from ..index.searcher import Searcher
 from ..storage.cache import LRUCache, SuperpostCache
 from ..storage.simcloud import SimCloudStore
@@ -149,7 +149,12 @@ class SearchService:
         # keyed by the generation of the searcher actually serving — NOT
         # the Index handle's, which a shared writer may have bumped ahead
         # of refresh(); results cached between a commit and a refresh()
-        # must stay filed under the snapshot that produced them
+        # must stay filed under the snapshot that produced them.
+        # Query trees key by their NORMALIZED form, so equivalent
+        # spellings — `a AND (b AND c)` vs `a b c`, `-(x OR y)` vs
+        # `NOT x NOT y` — share one cache entry.
+        if isinstance(query, Query):
+            query = normalize(query)
         return (self.searcher.generation, query, top_k)
 
     def _cache_get(self, key):
@@ -168,7 +173,8 @@ class SearchService:
 
     # -------------------------------------------------------------- serving
     def search(self, query: Query | str, top_k: int | None = None):
-        """Serve one query (Term/And/Or tree, string, or `Regex`)."""
+        """Serve one query: any query-language tree (Term/And/Or/Not/
+        Phrase/Regex) or query text for `parse`."""
         if isinstance(query, str):
             query = parse(query)
         key = self._cache_key(query, top_k)
