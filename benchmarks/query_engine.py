@@ -159,8 +159,9 @@ def _serve_serially(cloud, svc, queries, *, queueing: bool,
     completions, results = [], []
     for q in queries:
         start = burst_start if queueing else cloud.clock_s
-        results.append(svc.search_regex(q.pattern, ngram=q.ngram)
-                       if isinstance(q, Regex) else svc.search(q))
+        # Regex is a first-class query node: `search` covers it (the old
+        # `search_regex` method survives only as a deprecated shim)
+        results.append(svc.search(q))
         completions.append(cloud.clock_s - start)
     return results, completions
 
@@ -292,8 +293,16 @@ def run() -> dict:
         "tail_scenario": _tail_scenario(store, queries),
         "boolean_scenario": _boolean_scenario(store, truth, _docs, batched),
     }
+    # merge-preserve other sections (benchmarks/serving_tier.py writes
+    # its "serving_tier" scenario into the same trajectory file)
+    try:
+        with open(OUT_PATH) as f:
+            merged = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        merged = {}
+    merged.update(report)
     with open(OUT_PATH, "w") as f:
-        json.dump(report, f, indent=2, sort_keys=True)
+        json.dump(merged, f, indent=2, sort_keys=True)
     return report
 
 

@@ -16,6 +16,11 @@ def _query_engine_bench():
     return bench_query_engine()
 
 
+def _serving_tier_bench():
+    from .serving_tier import bench_serving_tier
+    return bench_serving_tier()
+
+
 def all_benchmarks():
     from . import paper_figures as pf
     from . import perf
@@ -35,6 +40,7 @@ def all_benchmarks():
         "fig17": pf.bench_fig17_accuracy_f0,
         "regex": pf.bench_regex_ngram,
         "query_engine": _query_engine_bench,
+        "serving_tier": _serving_tier_bench,
         "kernels": perf.bench_kernel_cpu_walltime,
         "roofline": perf.bench_roofline_table,
     }

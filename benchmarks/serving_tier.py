@@ -1,0 +1,345 @@
+"""Serving-tier benchmark: scatter-gather + micro-batched load curves.
+
+Three scenarios over one sharded cluster (4 doc-hash shards, each shard
+on its own simulated VM↔storage link with an independent virtual clock):
+
+  scatter_gather — one 32-query burst executed twice on identical clock
+      seeds: concurrently (cluster wall = slowest shard) vs the serial
+      per-shard loop (wall = sum of shards). Results asserted
+      byte-identical to the unsharded index over the same corpus.
+
+  load_curves — an **open-loop Poisson** arrival process offered to the
+      micro-batching frontend model at several QPS levels × batching
+      windows. Open-loop means arrivals never slow down when the server
+      falls behind (the honest way to measure saturation); the bounded
+      queue sheds what it cannot absorb. Per-request latency is
+      (batch completion − arrival) on the virtual clock, so the curves
+      show the batching window trading a bounded added wait for
+      amortized fetch rounds — and where each configuration saturates.
+
+  hedged_replicas — the same burst served from a straggler-heavy
+      replica set (high-variance NetworkModel), with and without
+      per-shard hedged retry; fewer straggling shards on the gather
+      barrier at the cost of a few duplicate shard reads.
+
+Merged into BENCH_query_engine.json under "serving_tier" so the perf
+trajectory stays in one file. `--smoke` runs a low-QPS subset in
+seconds (the CI gate).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from collections import deque
+
+import numpy as np
+
+from repro.data import make_logs_like, write_corpus
+from repro.data.tokenizer import distinct_words
+from repro.index import (And, BuilderConfig, Index, Not, Or, Regex, Term)
+from repro.serving import ShardedIndex
+from repro.storage import (InMemoryBlobStore, NetworkModel, SimCloudStore,
+                           SimCloudTransport)
+
+from .common import row
+
+N_SHARDS = 4
+N_BURST = 32
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_query_engine.json")
+
+# straggler-heavy link for the hedged-replica scenario (§IV-G regime)
+TAIL_MODEL = NetworkModel(jitter_sigma=0.35, tail_prob=0.10,
+                          tail_scale=12.0, name="us-central1-highvar")
+
+
+def _fixture():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(2500, seed=17)
+    corpus = write_corpus(store, "corpus/st", docs, n_blobs=4)
+    cfg = BuilderConfig(B=2200, F0=1.0, index_ngrams=3)
+    mono = Index.build(corpus, cfg, store, "index/st-mono")
+    cluster = ShardedIndex.build(corpus, cfg, store, "cluster/st",
+                                 n_shards=N_SHARDS)
+    truth: dict[str, set[int]] = {}
+    for i, d in enumerate(docs):
+        for w in distinct_words(d):
+            truth.setdefault(w, set()).add(i)
+    return store, docs, truth, mono, cluster
+
+
+def _workload(truth) -> list:
+    """32 mixed queries: terms, booleans, negation, regex."""
+    rng = np.random.default_rng(11)
+    words = sorted(truth)
+    rare = [w for w in words if len(truth[w]) <= 8]
+    mid = [w for w in words if 8 < len(truth[w]) <= 200]
+    common = sorted(words, key=lambda w: -len(truth[w]))[:10]
+    pick = lambda pool: str(rng.choice(pool))  # noqa: E731
+    queries: list = []
+    queries += [Term(pick(rare)) for _ in range(10)]
+    queries += [Term(pick(common)) for _ in range(4)]
+    queries += [And((Term(pick(mid)), Term(pick(mid)))) for _ in range(6)]
+    queries += [Or((Term(pick(rare)), Term(pick(mid)))) for _ in range(6)]
+    queries += [And((Term(pick(mid)), Not(Term(pick(common)))))
+                for _ in range(4)]
+    queries += [Regex(r"blk_1[0-9]2\b"), Regex(r"node2[0-3] ")]
+    assert len(queries) == N_BURST
+    return queries
+
+
+def _sim_sources(store, seed0: int, model: NetworkModel | None = None):
+    """One factory = one replica: every shard gets its own virtual clock
+    (seeded per shard, so reruns with the same seed0 replay exactly)."""
+    return lambda s: SimCloudTransport(
+        SimCloudStore(store, model=model, seed=seed0 + s))
+
+
+def _identical(a, b) -> bool:
+    return all(x.texts == y.texts and x.refs == y.refs
+               for x, y in zip(a, b))
+
+
+# ------------------------------------------------------------- scatter-gather
+def _scatter_scenario(store, cluster, mono, queries) -> dict:
+    mono_res = mono.searcher(
+        transport=SimCloudTransport(SimCloudStore(store, seed=90))
+    ).query_batch(queries)
+
+    conc = cluster.searcher(replica_sources=[_sim_sources(store, 300)])
+    conc_res = conc.query_batch(queries)
+    conc_report = conc.last_scatter
+    conc.close()
+
+    # identical per-shard clock seeds -> the serial loop replays the very
+    # same fetches, so the comparison is purely concurrency
+    serial = cluster.searcher(replica_sources=[_sim_sources(store, 300)],
+                              concurrent=False)
+    serial_res = serial.query_batch(queries)
+    serial_report = serial.last_scatter
+    serial.close()
+
+    return {
+        "n_queries": len(queries), "n_shards": cluster.n_shards,
+        "concurrent_wall_ms": conc_report.wall_s * 1e3,
+        "serial_wall_ms": serial_report.wall_s * 1e3,
+        "speedup": serial_report.wall_s / conc_report.wall_s,
+        "shard_elapsed_ms": [e * 1e3
+                             for e in conc_report.shard_elapsed_s],
+        "identical_to_unsharded": _identical(mono_res, conc_res)
+        and _identical(mono_res, serial_res),
+    }
+
+
+# ------------------------------------------------------------- hedged replicas
+def _hedged_scenario(store, cluster, queries, rounds: int) -> dict:
+    def run(hedge_after_s):
+        sources = [_sim_sources(store, 500, TAIL_MODEL),
+                   _sim_sources(store, 700, TAIL_MODEL)]
+        cs = cluster.searcher(replica_sources=sources,
+                              hedge_after_s=hedge_after_s)
+        walls, hedges, wins, results = [], 0, 0, None
+        for _ in range(rounds):
+            results = cs.query_batch(queries)
+            walls.append(cs.last_scatter.wall_s)
+            hedges += cs.last_scatter.n_hedges_issued
+            wins += cs.last_scatter.n_hedge_wins
+        cs.close()
+        arr = np.asarray(walls)
+        return results, {
+            "mean_wall_ms": float(arr.mean() * 1e3),
+            "max_wall_ms": float(arr.max() * 1e3),
+            "n_hedges_issued": hedges, "n_hedge_wins": wins,
+        }
+
+    plain_res, plain = run(None)
+    threshold = 4.0 * TAIL_MODEL.first_byte_s
+    hedged_res, hedged = run(threshold)
+    return {
+        "network": f"{TAIL_MODEL.name}: tail_prob={TAIL_MODEL.tail_prob},"
+                   f" tail_scale={TAIL_MODEL.tail_scale}",
+        "hedge_after_ms": threshold * 1e3, "rounds": rounds,
+        "unhedged": plain, "hedged": hedged,
+        "max_wall_speedup": plain["max_wall_ms"] / hedged["max_wall_ms"],
+        "identical_results": _identical(plain_res, hedged_res),
+    }
+
+
+# ---------------------------------------------------------------- load curves
+def simulate_open_loop(searcher, pool: list, offered_qps: float,
+                       window_s: float, max_batch: int, max_queue: int,
+                       n_requests: int, seed: int = 0,
+                       arrivals: np.ndarray | None = None) -> dict:
+    """Open-loop Poisson arrivals into a micro-batching single server.
+
+    Arrivals are independent of completions (offered load, not achieved
+    load). A batch opens at its first waiter, closes after `window_s` or
+    at `max_batch`, then runs as ONE shared `query_batch` round whose
+    service time is the cluster's simulated scatter wall. Requests
+    arriving with `max_queue` already waiting are shed (that is the
+    frontend's `Overloaded` path). Latency = completion − arrival.
+
+    This is a virtual-time MODEL of `serving/frontend.py` — the real
+    `Frontend` sleeps on wall-clock `Condition.wait`, which a virtual
+    clock cannot drive — so admission (shed at `max_queue`), batch
+    formation (window / `max_batch`), and dispatch must stay in
+    lockstep with `Frontend.submit`/`_loop`/`_take`.
+    tests/test_serving_cluster.py pins the two together on a burst;
+    change the policy in both places or that test fails. `arrivals`
+    overrides the Poisson schedule (how the pin injects its burst).
+    """
+    rng = np.random.default_rng(seed)
+    if arrivals is None:
+        arrivals = np.cumsum(rng.exponential(1.0 / offered_qps,
+                                             size=n_requests))
+    order = rng.integers(0, len(pool), size=n_requests)
+    pending: deque[int] = deque()
+    next_i = 0
+    t_free = 0.0
+    latencies: list[float] = []
+    shed = 0
+    batch_sizes: list[int] = []
+
+    def admit_one() -> None:
+        nonlocal next_i, shed
+        if len(pending) >= max_queue:
+            shed += 1                # typed Overloaded at the frontend
+        else:
+            pending.append(next_i)
+        next_i += 1
+
+    def admit(until: float) -> None:
+        while next_i < n_requests and arrivals[next_i] <= until:
+            admit_one()
+
+    while next_i < n_requests or pending:
+        if not pending:
+            admit(arrivals[next_i])   # jump idle time to the next arrival
+            continue
+        open_t = max(arrivals[pending[0]], t_free)
+        if len(pending) >= max_batch:
+            # backlog already fills the batch: the Frontend's loop takes
+            # it immediately (no window wait), so arrivals during the
+            # would-be window happen during *service*, against a queue
+            # the dispatched batch has left
+            dispatch_t = open_t
+        else:
+            # window arrivals join ONE at a time; the window closes
+            # early the instant the batch fills (Frontend._loop breaks
+            # at max_batch and _take pops the queue right there), so
+            # later arrivals see the popped queue, not the batch
+            close_t = open_t + window_s
+            dispatch_t = close_t
+            while next_i < n_requests and arrivals[next_i] <= close_t:
+                t_arr = float(arrivals[next_i])
+                admit_one()
+                if len(pending) >= max_batch:
+                    dispatch_t = max(open_t, t_arr)
+                    break
+        batch = [pending.popleft()
+                 for _ in range(min(max_batch, len(pending)))]
+        searcher.query_batch([pool[order[i]] for i in batch])
+        service_s = searcher.last_scatter.wall_s
+        done_t = dispatch_t + service_s
+        batch_sizes.append(len(batch))
+        latencies.extend(done_t - arrivals[i] for i in batch)
+        t_free = done_t
+        admit(done_t)
+
+    arr = np.asarray(latencies) if latencies else np.zeros(1)
+    horizon = max(float(arrivals[-1]), t_free)
+    return {
+        "offered_qps": offered_qps, "window_ms": window_s * 1e3,
+        "n_requests": n_requests, "n_served": len(latencies),
+        "n_shed": shed, "shed_frac": shed / n_requests,
+        "achieved_qps": len(latencies) / horizon,
+        "p50_ms": float(np.percentile(arr, 50) * 1e3),
+        "p99_ms": float(np.percentile(arr, 99) * 1e3),
+        "mean_batch_size": float(np.mean(batch_sizes))
+        if batch_sizes else 0.0,
+    }
+
+
+def _load_scenario(store, cluster, pool, offered: list, windows: list,
+                   n_requests: int) -> dict:
+    curves = []
+    for w_i, window_s in enumerate(windows):
+        points = []
+        for q_i, qps in enumerate(offered):
+            cs = cluster.searcher(
+                replica_sources=[_sim_sources(
+                    store, 1000 + 37 * (w_i * len(offered) + q_i))])
+            points.append(simulate_open_loop(
+                cs, pool, qps, window_s, max_batch=16, max_queue=64,
+                n_requests=n_requests, seed=q_i))
+            cs.close()
+        curves.append({"window_ms": window_s * 1e3, "points": points})
+    return {"max_batch": 16, "max_queue": 64,
+            "n_requests_per_point": n_requests, "curves": curves}
+
+
+# ------------------------------------------------------------------- plumbing
+def run(smoke: bool = False) -> dict:
+    store, _docs, truth, mono, cluster = _fixture()
+    queries = _workload(truth)
+    if smoke:
+        offered, windows, n_requests, rounds = [30.0], \
+            [0.0, 0.01, 0.04], 48, 3
+    else:
+        offered, windows, n_requests, rounds = [15.0, 45.0, 120.0], \
+            [0.0, 0.01, 0.04], 200, 10
+
+    scenario = {
+        "scatter_gather": _scatter_scenario(store, cluster, mono, queries),
+        "load_curves": _load_scenario(store, cluster, queries, offered,
+                                      windows, n_requests),
+        "hedged_replicas": _hedged_scenario(store, cluster, queries,
+                                            rounds),
+        "smoke": smoke,
+    }
+    try:
+        with open(OUT_PATH) as f:
+            report = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        report = {}
+    report["serving_tier"] = scenario
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+    return scenario
+
+
+def bench_serving_tier():
+    """CSV view for benchmarks.run; merges into BENCH_query_engine.json."""
+    scenario = run()
+    sg = scenario["scatter_gather"]
+    yield row("serving_tier/scatter_concurrent_wall",
+              sg["concurrent_wall_ms"] * 1e3,
+              f"identical={sg['identical_to_unsharded']}")
+    yield row("serving_tier/scatter_serial_wall",
+              sg["serial_wall_ms"] * 1e3,
+              f"speedup={sg['speedup']:.2f}x")
+    for curve in scenario["load_curves"]["curves"]:
+        for pt in curve["points"]:
+            yield row(
+                f"serving_tier/p99_w{curve['window_ms']:.0f}ms"
+                f"_q{pt['offered_qps']:.0f}",
+                pt["p99_ms"] * 1e3,
+                f"shed={pt['shed_frac'] * 100:.1f}%"
+                f";batch={pt['mean_batch_size']:.1f}")
+    hr = scenario["hedged_replicas"]
+    yield row("serving_tier/hedged_max_wall", hr["hedged"]["max_wall_ms"]
+              * 1e3, f"speedup={hr['max_wall_speedup']:.2f}x")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="low-QPS subset for CI (<2 min)")
+    args = ap.parse_args()
+    print(json.dumps(run(smoke=args.smoke), indent=2, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

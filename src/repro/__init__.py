@@ -34,6 +34,12 @@ _LAZY_EXPORTS = {
     "normalize": "repro.index",
     "PureNegationError": "repro.index",
     "SearchService": "repro.serving",
+    "ShardedIndex": "repro.serving",
+    "ClusterSearcher": "repro.serving",
+    "Frontend": "repro.serving",
+    "FrontendConfig": "repro.serving",
+    "Overloaded": "repro.serving",
+    "DeadlineExceeded": "repro.serving",
     "StorageTransport": "repro.storage",
     "TransportPolicy": "repro.storage",
     "SimCloudTransport": "repro.storage",

@@ -63,6 +63,33 @@ def _manifest_name(prefix: str, generation: int) -> str:
     return f"{prefix}/manifest-{generation:08d}.airm"
 
 
+def latest_generation(blobs, prefix: str, stem: str = "manifest") -> int:
+    """Current committed generation under `prefix`: highest-numbered
+    `{stem}-<gen>` blob (0 when none exist). Shared by index manifests and
+    the serving tier's cluster manifests (serving/cluster.py)."""
+    names = blobs.list(f"{prefix}/{stem}-")
+    if not names:
+        return 0
+    # zero-padded generations sort lexicographically
+    tail = max(names).rsplit(f"{stem}-", 1)[1]
+    return int(tail.split(".")[0])
+
+
+def publish_generation(blobs, name: str, payload: bytes,
+                       generation: int, prefix: str) -> None:
+    """Publish one generation blob with compare-and-swap semantics.
+
+    `put_if_absent` is the linearization point: of two writers racing to
+    publish the same generation number, exactly one creates the blob —
+    the loser gets the same "concurrent writer" error the pre-publish
+    generation check raises, never a silent overwrite.
+    """
+    if not blobs.put_if_absent(name, payload):
+        raise RuntimeError(
+            f"concurrent writer already published generation "
+            f"{generation} of {prefix!r}; refresh and retry")
+
+
 def _pack_refs(refs: list[DocRef]) -> dict:
     """Compact corpus map: blob-name string table + per-doc triples.
 
@@ -101,28 +128,13 @@ def decode_manifest(data: bytes) -> dict:
 
 
 def _latest_generation(blobs, prefix: str) -> int:
-    """Current committed generation: highest-numbered manifest blob."""
-    names = blobs.list(f"{prefix}/manifest-")
-    if not names:
-        return 0
-    # zero-padded generations sort lexicographically
-    tail = max(names).rsplit("manifest-", 1)[1]
-    return int(tail.split(".")[0])
+    return latest_generation(blobs, prefix, stem="manifest")
 
 
 def _publish(blobs, prefix: str, manifest: dict) -> None:
-    """Publish a manifest generation with compare-and-swap semantics.
-
-    `put_if_absent` is the linearization point: of two writers racing to
-    publish the same generation number, exactly one creates the blob —
-    the loser gets the same "concurrent writer" error the pre-publish
-    generation check raises, never a silent overwrite.
-    """
-    name = _manifest_name(prefix, int(manifest["generation"]))
-    if not blobs.put_if_absent(name, encode_manifest(manifest)):
-        raise RuntimeError(
-            f"concurrent writer already published generation "
-            f"{manifest['generation']} of {prefix!r}; refresh and retry")
+    generation = int(manifest["generation"])
+    publish_generation(blobs, _manifest_name(prefix, generation),
+                       encode_manifest(manifest), generation, prefix)
 
 
 # ===================================================================== reader
@@ -348,6 +360,7 @@ class Index:
     # -- sessions ---------------------------------------------------------
     def searcher(self, cache: SuperpostCache | None = None,
                  coalesce_gap: int | None = 4096,
+                 transport: StorageTransport | None = None,
                  ) -> Searcher | MultiSegmentSearcher:
         """Open a read session pinned to this generation.
 
@@ -356,15 +369,20 @@ class Index:
         keyed to this generation in the optional shared `cache`. Returns
         a plain `Searcher` when there are no segments — byte-identical
         to the classic engine — and a `MultiSegmentSearcher` otherwise.
+        `transport` overrides the handle's own data plane — how the
+        serving tier (serving/cluster.py) reads one shard through several
+        replica transports (different VMs / simulated clocks) while the
+        handle keeps owning the control plane.
         """
         gen = self.generation
+        data_plane = self.transport if transport is None else transport
         if not self._manifest["segments"]:
-            return Searcher(self.transport, self.base_prefix, cache=cache,
+            return Searcher(data_plane, self.base_prefix, cache=cache,
                             coalesce_gap=coalesce_gap, generation=gen)
         prefixes = [self.base_prefix] + self.segment_prefixes
-        headers, init_stats = self.transport.fetch_batch(
+        headers, init_stats = data_plane.fetch_batch(
             [RangeRequest(f"{p}/header.airp") for p in prefixes])
-        units = [Searcher(self.transport, p, cache=cache,
+        units = [Searcher(data_plane, p, cache=cache,
                           coalesce_gap=coalesce_gap, generation=gen,
                           header=h)
                  for p, h in zip(prefixes, headers)]
@@ -374,6 +392,32 @@ class Index:
     def writer(self) -> "IndexWriter":
         """Open a write session (stage segments, then commit/merge)."""
         return IndexWriter(self)
+
+
+def open_many(transport: StorageTransport,
+              prefixes: list[str]) -> list[Index]:
+    """Open several index prefixes with ONE batched manifest fetch.
+
+    The serving tier (serving/cluster.py) boots N shards at once; N
+    sequential `Index.open` calls would pay N dependent first-byte
+    rounds on a medium where one parallel batch costs one. LISTs stay
+    per-prefix (control plane, not latency-modelled); the manifest range
+    reads ride a single `fetch_batch`. Legacy header-only prefixes fall
+    back to the single-open path. Handles never own the transport.
+    """
+    gens = [latest_generation(transport.blobs, p) for p in prefixes]
+    where = [i for i, g in enumerate(gens) if g > 0]
+    out: list[Index | None] = [None] * len(prefixes)
+    if where:
+        payloads, _stats = transport.fetch_batch(
+            [RangeRequest(_manifest_name(prefixes[i], gens[i]))
+             for i in where])
+        for i, data in zip(where, payloads):
+            out[i] = Index(transport, prefixes[i], decode_manifest(data))
+    for i, g in enumerate(gens):
+        if g == 0:
+            out[i] = Index.open(transport, prefixes[i])
+    return out  # type: ignore[return-value]
 
 
 # ===================================================================== writer

@@ -1,6 +1,17 @@
-"""Serving: batched keyword search (the paper's app) + RAG decoding."""
+"""Serving: batched keyword search (the paper's app), the sharded
+scatter-gather tier + admission-controlled frontend, and RAG decoding."""
 
+from .cluster import (ClusterSearcher, ScatterReport, ShardedIndex,
+                      partition_corpus, shard_of_ref)
+from .frontend import (DeadlineExceeded, Frontend, FrontendConfig,
+                       FrontendStats, Overloaded)
 from .rag import RAGPipeline, RAGResult
 from .search_service import LatencyStats, SearchService
 
-__all__ = ["RAGPipeline", "RAGResult", "LatencyStats", "SearchService"]
+__all__ = [
+    "RAGPipeline", "RAGResult", "LatencyStats", "SearchService",
+    "ShardedIndex", "ClusterSearcher", "ScatterReport",
+    "partition_corpus", "shard_of_ref",
+    "Frontend", "FrontendConfig", "FrontendStats",
+    "Overloaded", "DeadlineExceeded",
+]

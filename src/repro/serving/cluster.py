@@ -1,0 +1,652 @@
+"""Sharded serving tier: scatter-gather over per-shard stateless indexes.
+
+The paper's premise (§III-A) is that stateless compute scales
+independently of cloud storage; this module is the scaling unit on the
+compute side. A corpus is partitioned into N **doc-hash shards**, each a
+completely normal `Index` (own manifest, own generations, own writer)
+under `prefix/shard-XXXX`; a tiny **cluster manifest** records membership
+and the per-shard generations at publish time, CAS-published exactly like
+index manifests (`cluster-<gen>.airc`, highest wins).
+
+`ClusterSearcher` scatter-gathers a query batch across every shard:
+
+  * per-shard fetch rounds are **concurrently driven** — each shard's
+    two-round `query_batch` runs on its own thread over its own
+    `StorageTransport` workers, so cluster wall-clock is the slowest
+    shard, not the sum (IoU Sketch makes this unusually cheap: every
+    shard costs the same bounded two rounds, so the scatter is balanced
+    by construction);
+  * each shard may have several **replicas** (independent transports over
+    the same bytes — e.g. different VMs or simulated regions); the
+    searcher picks the replica with the fewest in-flight requests and,
+    past `hedge_after_s`, retries a straggling shard on the next-best
+    replica, first responder wins;
+  * per-shard results are merged — top-K truncated after the union, doc
+    hits unioned and restored to monolithic (blob, offset) order — so a
+    sharded cluster answers **byte-identically** to the unsharded index
+    over the same corpus (shards partition documents, verification makes
+    each shard exact, and the union of disjoint exact sets is exact).
+
+Simulated transports (`SimCloudTransport`) carry their own virtual
+clocks; when every shard drives a distinct clock the scatter is measured
+as true overlap (`wall_s` = max over shards) while shards that share one
+virtual clock are driven sequentially to keep the simulation
+deterministic. Real transports (`BlobStoreTransport`) always run
+genuinely concurrent threads.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import asdict, dataclass, field
+
+import msgpack
+
+from ..data.corpus import Corpus, DocRef
+from ..index.builder import BuilderConfig
+from ..index.lifecycle import (Index, MultiSegmentSearcher,
+                               latest_generation, open_many,
+                               publish_generation)
+from ..index.query import Query, Regex
+from ..index.searcher import (QueryResult, QueryStats, Searcher,
+                              _merge_results)
+from ..storage.blobstore import RangeRequest
+from ..storage.cache import SuperpostCache
+from ..storage.simcloud import FetchStats
+from ..storage.transport import (SimCloudTransport, StorageTransport,
+                                 as_transport)
+
+CLUSTER_MAGIC = b"AIRC"
+CLUSTER_VERSION = 1
+
+
+# ---------------------------------------------------------------- partitioning
+def shard_of_ref(ref: DocRef, n_shards: int) -> int:
+    """Stable doc-hash shard assignment from the document's storage
+    identity (blob, offset, length) — process- and seed-independent, so
+    appends route to the same shard the original build chose."""
+    ident = f"{ref.blob}:{ref.offset}:{ref.length}".encode()
+    digest = hashlib.blake2b(ident, digest_size=8).digest()
+    return int.from_bytes(digest, "big") % n_shards
+
+
+def partition_corpus(corpus: Corpus, n_shards: int) -> list[Corpus]:
+    """Split a corpus into `n_shards` doc-hash sub-corpora (views over
+    the same blobs — no bytes are copied)."""
+    refs: list[list[DocRef]] = [[] for _ in range(n_shards)]
+    texts: list[list[str]] | None = \
+        [[] for _ in range(n_shards)] if corpus.texts is not None else None
+    for i, ref in enumerate(corpus.refs):
+        s = shard_of_ref(ref, n_shards)
+        refs[s].append(ref)
+        if texts is not None:
+            texts[s].append(corpus.texts[i])
+    return [Corpus(store=corpus.store, refs=refs[s],
+                   texts=texts[s] if texts is not None else None)
+            for s in range(n_shards)]
+
+
+# ------------------------------------------------------- cluster manifest codec
+def _cluster_manifest_name(prefix: str, generation: int) -> str:
+    return f"{prefix}/cluster-{generation:08d}.airc"
+
+
+def encode_cluster_manifest(manifest: dict) -> bytes:
+    return CLUSTER_MAGIC + bytes([CLUSTER_VERSION]) + \
+        msgpack.packb(manifest, use_bin_type=True)
+
+
+def decode_cluster_manifest(data: bytes) -> dict:
+    if data[:4] != CLUSTER_MAGIC:
+        raise ValueError("not an Airphant cluster manifest")
+    if data[4] != CLUSTER_VERSION:
+        raise ValueError(
+            f"cluster manifest version {data[4]} != supported "
+            f"{CLUSTER_VERSION}")
+    return msgpack.unpackb(data[5:], raw=False, strict_map_key=False)
+
+
+def _open_member_shards(transport: StorageTransport,
+                        manifest: dict) -> list[Index | None]:
+    """Open every member shard with ONE batched manifest fetch
+    (`index.lifecycle.open_many`), keeping empty slots as None."""
+    live = [s["prefix"] for s in manifest["shards"]
+            if s["prefix"] is not None]
+    opened = iter(open_many(transport, live))
+    return [None if s["prefix"] is None else next(opened)
+            for s in manifest["shards"]]
+
+
+# ===================================================================== handle
+class ShardedIndex:
+    """Handle on a sharded cluster: N shard `Index` handles + membership.
+
+    `build` partitions and builds every shard, then CAS-publishes the
+    cluster manifest; `open` resolves the newest cluster manifest and
+    opens each member shard at its **current** generation (shards commit
+    independently — the cluster manifest records membership, not a
+    snapshot). `searcher()` vends a `ClusterSearcher`.
+    """
+
+    def __init__(self, transport: StorageTransport, prefix: str,
+                 manifest: dict, shards: list[Index | None],
+                 owns_transport: bool = False) -> None:
+        self.transport = transport
+        self.prefix = prefix
+        self._manifest = manifest
+        self.shards = shards                 # None for empty shard slots
+        self._owns_transport = owns_transport
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def manifest(self) -> dict:
+        return self._manifest
+
+    @property
+    def generation(self) -> int:
+        return int(self._manifest["generation"])
+
+    @property
+    def n_shards(self) -> int:
+        return int(self._manifest["n_shards"])
+
+    @property
+    def shard_prefixes(self) -> list[str | None]:
+        return [s["prefix"] for s in self._manifest["shards"]]
+
+    @property
+    def n_docs(self) -> int:
+        return sum(int(s["n_docs"]) for s in self._manifest["shards"])
+
+    @property
+    def config(self) -> BuilderConfig | None:
+        cfg = self._manifest.get("config")
+        return BuilderConfig(**cfg) if cfg is not None else None
+
+    @property
+    def reader_generation(self) -> tuple:
+        """What a freshly opened `ClusterSearcher` pins: the cluster
+        generation plus every shard's own generation (shards commit
+        independently of the cluster manifest). Generation-keyed caches
+        over a cluster key on this tuple."""
+        return (self.generation,
+                *(0 if idx is None else idx.generation
+                  for idx in self.shards))
+
+    def shard(self, i: int) -> Index:
+        """The i-th shard's `Index` handle (writers go through this —
+        shard commits are shard-local and need no cluster republish)."""
+        idx = self.shards[i]
+        if idx is None:
+            raise IndexError(f"shard {i} of {self.prefix!r} is empty")
+        return idx
+
+    def __repr__(self) -> str:
+        return (f"ShardedIndex(prefix={self.prefix!r}, "
+                f"generation={self.generation}, n_shards={self.n_shards})")
+
+    def close(self) -> None:
+        if self._owns_transport:
+            self.transport.close()
+
+    def __enter__(self) -> "ShardedIndex":
+        return self
+
+    def __exit__(self, *_exc) -> None:
+        self.close()
+
+    # -- lifecycle --------------------------------------------------------
+    @classmethod
+    def build(cls, corpus: Corpus, config: BuilderConfig | None,
+              store, prefix: str, n_shards: int) -> "ShardedIndex":
+        """Partition `corpus` into `n_shards` doc-hash shards, build each
+        as a normal `Index` under `prefix/shard-XXXX`, and CAS-publish the
+        cluster manifest. A shard the hash leaves empty is recorded as an
+        empty slot (no index is built for it)."""
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        owns = not isinstance(store, StorageTransport)
+        transport = as_transport(store)
+        cfg = config or BuilderConfig()
+        parts = partition_corpus(corpus, n_shards)
+        shards: list[Index | None] = []
+        entries: list[dict] = []
+        for s, part in enumerate(parts):
+            if not part.refs:
+                shards.append(None)
+                entries.append({"prefix": None, "generation": 0,
+                                "n_docs": 0})
+                continue
+            shard_prefix = f"{prefix}/shard-{s:04d}"
+            idx = Index.build(part, cfg, transport, shard_prefix)
+            shards.append(idx)
+            entries.append({"prefix": shard_prefix,
+                            "generation": idx.generation,
+                            "n_docs": part.n_docs})
+        generation = latest_generation(transport.blobs, prefix,
+                                       stem="cluster") + 1
+        manifest = {"generation": generation, "n_shards": n_shards,
+                    "shards": entries, "config": asdict(cfg)}
+        publish_generation(
+            transport.blobs, _cluster_manifest_name(prefix, generation),
+            encode_cluster_manifest(manifest), generation, prefix)
+        return cls(transport, prefix, manifest, shards,
+                   owns_transport=owns)
+
+    @classmethod
+    def open(cls, store, prefix: str) -> "ShardedIndex":
+        owns = not isinstance(store, StorageTransport)
+        transport = as_transport(store)
+        generation = latest_generation(transport.blobs, prefix,
+                                       stem="cluster")
+        if generation == 0:
+            raise FileNotFoundError(
+                f"no cluster manifest under {prefix!r}")
+        data = transport.blobs.get(
+            _cluster_manifest_name(prefix, generation))
+        manifest = decode_cluster_manifest(data)
+        return cls(transport, prefix, manifest,
+                   _open_member_shards(transport, manifest),
+                   owns_transport=owns)
+
+    def refresh(self) -> "ShardedIndex":
+        """Re-resolve cluster membership AND every shard's generation
+        (each shard commits independently of the cluster manifest)."""
+        generation = latest_generation(self.transport.blobs, self.prefix,
+                                       stem="cluster")
+        if generation != self.generation:
+            data = self.transport.blobs.get(
+                _cluster_manifest_name(self.prefix, generation))
+            self._manifest = decode_cluster_manifest(data)
+            self.shards = _open_member_shards(self.transport,
+                                              self._manifest)
+        else:
+            # usually 0-1 shards have moved; Index.refresh only fetches
+            # a manifest when its generation actually changed
+            for idx in self.shards:
+                if idx is not None:
+                    idx.refresh()
+        return self
+
+    def partition(self, corpus: Corpus) -> list[Corpus]:
+        """Route new documents with the cluster's own shard function."""
+        return partition_corpus(corpus, self.n_shards)
+
+    # -- sessions ---------------------------------------------------------
+    def searcher(self, cache: SuperpostCache | None = None,
+                 coalesce_gap: int | None = 4096,
+                 replica_sources: list | None = None,
+                 hedge_after_s: float | None = None,
+                 concurrent: bool = True) -> "ClusterSearcher":
+        """Open a scatter-gather read session over all non-empty shards.
+
+        `replica_sources` names the data plane(s): each entry serves one
+        replica per shard and is either a transport/store shared by every
+        shard or a callable `shard_index -> transport/store` (what the
+        simulator needs — each shard gets its own virtual clock). The
+        default (`None`) is one replica over the handle's own transport.
+        `hedge_after_s` enables per-shard hedged retry on a straggling
+        replica; `concurrent=False` forces the serial per-shard loop
+        (the comparison baseline).
+        """
+        live = [(s, idx) for s, idx in enumerate(self.shards)
+                if idx is not None]
+        if not live:
+            raise ValueError(
+                f"cluster {self.prefix!r} has no non-empty shards to "
+                "serve (built from an empty corpus?)")
+        owned: list[StorageTransport] = []
+        transports: list[list[StorageTransport]] = []
+        for s, _idx in live:
+            row: list[StorageTransport] = []
+            for src in (replica_sources or [self.transport]):
+                # a factory mints a fresh source per shard, and a bare
+                # store becomes a fresh transport in as_transport —
+                # either way the session caused the transport to exist,
+                # so the session must close it (worker pools); a
+                # transport instance the caller handed in stays theirs
+                made = src(s) if callable(src) else src
+                transport = as_transport(made)
+                if callable(src) or not isinstance(made,
+                                                   StorageTransport):
+                    owned.append(transport)
+                row.append(transport)
+            transports.append(row)
+
+        # ONE batched header round per distinct transport: every unit
+        # header (base + delta segments) of every shard a transport
+        # serves rides one fetch_batch — booting a 16-shard cluster
+        # costs one parallel round, never a per-shard chain (the same
+        # boot discipline Index.searcher applies within one index)
+        unit_prefixes = [[idx.base_prefix] + idx.segment_prefixes
+                         for _s, idx in live]
+        groups: dict[int, tuple] = {}
+        for si, trow in enumerate(transports):
+            for ri, t in enumerate(trow):
+                _t, reqs, slots = groups.setdefault(id(t), (t, [], []))
+                for uj, p in enumerate(unit_prefixes[si]):
+                    reqs.append(RangeRequest(f"{p}/header.airp"))
+                    slots.append((si, ri, uj))
+        headers: dict[tuple[int, int, int], bytes] = {}
+        boot_stats = FetchStats()
+        for t, reqs, slots in groups.values():
+            payloads, fstats = t.fetch_batch(reqs)
+            boot_stats.add(fstats)
+            for slot, h in zip(slots, payloads):
+                headers[slot] = h
+
+        shard_replicas: list[list[_Replica]] = []
+        for si, (_s, idx) in enumerate(live):
+            replicas = []
+            for ri, t in enumerate(transports[si]):
+                units = [Searcher(t, p, cache=cache,
+                                  coalesce_gap=coalesce_gap,
+                                  generation=idx.generation,
+                                  header=headers[(si, ri, uj)])
+                         for uj, p in enumerate(unit_prefixes[si])]
+                reader = units[0] if len(units) == 1 else \
+                    MultiSegmentSearcher(units, units[0]._fetcher,
+                                         init_stats=FetchStats())
+                replicas.append(_Replica(reader=reader, transport=t))
+            shard_replicas.append(replicas)
+        return ClusterSearcher(shard_replicas,
+                               hedge_after_s=hedge_after_s,
+                               concurrent=concurrent,
+                               generation=self.reader_generation,
+                               owned_transports=owned,
+                               init_stats=boot_stats)
+
+
+# ================================================================ scatter-gather
+@dataclass
+class _Replica:
+    """One replica serving one shard: a reader plus its transport and a
+    least-in-flight load gauge (queries currently executing on it)."""
+
+    reader: Searcher | MultiSegmentSearcher
+    transport: StorageTransport
+    in_flight: int = 0
+
+    @property
+    def sim_clock(self):
+        """The replica's virtual clock owner, when simulated."""
+        t = self.transport
+        return t.cloud if isinstance(t, SimCloudTransport) else None
+
+
+@dataclass
+class ScatterReport:
+    """Accounting for one scatter-gather round (benchmarks read this)."""
+
+    shard_elapsed_s: list[float] = field(default_factory=list)
+    replica_of: list[int] = field(default_factory=list)
+    wall_s: float = 0.0              # concurrent: max; serial: sum
+    serial_wall_s: float = 0.0       # sum either way (the loop baseline)
+    concurrent: bool = True
+    n_hedges_issued: int = 0
+    n_hedge_wins: int = 0
+
+
+class ClusterSearcher:
+    """Scatter one query batch across shards, gather + merge the results.
+
+    Mirrors the `Searcher` query surface (`query`, `query_batch`,
+    `regex_query`). Results are byte-identical to the unsharded index
+    over the same corpus; `last_scatter` reports per-shard wall clocks
+    for the round that produced them.
+    """
+
+    def __init__(self, shard_replicas: list[list[_Replica]],
+                 hedge_after_s: float | None = None,
+                 concurrent: bool = True,
+                 generation: tuple = (),
+                 owned_transports: list[StorageTransport] | None = None,
+                 init_stats: FetchStats | None = None) -> None:
+        assert shard_replicas, "need at least one non-empty shard"
+        self.shard_replicas = shard_replicas
+        self.hedge_after_s = hedge_after_s
+        self.concurrent = concurrent
+        # generation pin for result caches (matches reader_generation of
+        # the ShardedIndex that opened this session)
+        self.generation = generation
+        self._owned_transports = owned_transports or []
+        self.last_scatter = ScatterReport()
+        self._lock = threading.Lock()
+        self._pool: ThreadPoolExecutor | None = None
+        # boot cost: the batched header round(s), plus whatever any
+        # reader fetched on its own (zero when the session pre-fetched)
+        self.init_stats = init_stats or FetchStats()
+        for replicas in shard_replicas:
+            for r in replicas:
+                self.init_stats.add(r.reader.init_stats)
+
+    # -- plumbing ---------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_replicas)
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.shard_replicas[0])
+
+    def close(self) -> None:
+        """Shut the scatter pool and every replica transport this
+        session caused to exist (factory-minted or store-wrapped) —
+        long-lived servers reopen sessions on refresh, and unclosed
+        replica pools would accumulate threads. Idempotent."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+        for t in self._owned_transports:
+            t.close()
+        self._owned_transports = []
+
+    def __enter__(self) -> "ClusterSearcher":
+        return self
+
+    def __exit__(self, *_exc) -> None:
+        self.close()
+
+    def _executor(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            # 3x shards: on the real-transport hedge path every scatter
+            # leg occupies a worker AND submits its primary to the pool,
+            # so a correlated straggle across all shards needs leg +
+            # primary + backup workers simultaneously — 2x would queue
+            # the backups behind the very stragglers they must race
+            self._pool = ThreadPoolExecutor(
+                max_workers=3 * self.n_shards,
+                thread_name_prefix="scatter")
+        return self._pool
+
+    def _pick_replica(self, replicas: list[_Replica],
+                      exclude: int | None = None) -> int:
+        """Least-in-flight replica choice, ties to the lowest index.
+
+        Load is the replica's executing shard queries plus its
+        transport's own outstanding range-GETs (`in_flight` gauge,
+        storage/transport.py) — a transport shared with other readers
+        counts their traffic too."""
+        with self._lock:
+            best, best_load = -1, None
+            for i, r in enumerate(replicas):
+                if i == exclude:
+                    continue
+                load = r.in_flight + r.transport.in_flight
+                if best_load is None or load < best_load:
+                    best, best_load = i, load
+            replicas[best].in_flight += 1
+            return best
+
+    def _release(self, replica: _Replica) -> None:
+        with self._lock:
+            replica.in_flight -= 1
+
+    # -- one shard --------------------------------------------------------
+    def _run_on(self, replica: _Replica, queries, top_k, hedge, impl,
+                ) -> tuple[list[QueryResult], float]:
+        """Execute the batch on one replica; returns (results, elapsed).
+
+        Elapsed is the replica's virtual-clock delta when simulated, real
+        wall time otherwise."""
+        clock = replica.sim_clock
+        t0 = clock.clock_s if clock is not None else time.perf_counter()
+        try:
+            out = replica.reader.query_batch(queries, top_k=top_k,
+                                             hedge=hedge, impl=impl)
+        finally:
+            self._release(replica)
+        t1 = clock.clock_s if clock is not None else time.perf_counter()
+        return out, t1 - t0
+
+    def _query_shard(self, replicas: list[_Replica], queries, top_k,
+                     hedge, impl) -> tuple[list[QueryResult], float, int,
+                                           int, int]:
+        """One shard's scatter leg: pick replica, run, hedge a straggler.
+
+        Returns (results, effective_elapsed, replica_idx, hedges, wins).
+        """
+        primary_i = self._pick_replica(replicas)
+        primary = replicas[primary_i]
+        threshold = self.hedge_after_s
+
+        if threshold is not None and len(replicas) > 1 \
+                and primary.sim_clock is None:
+            # real transports: race the primary against a duplicate
+            # issued once the threshold passes, first responder wins
+            t0 = time.perf_counter()
+            fut = self._executor().submit(self._run_on, primary, queries,
+                                          top_k, hedge, impl)
+            done, _ = wait([fut], timeout=threshold)
+            if done:
+                out, _elapsed = fut.result()
+                return (out, time.perf_counter() - t0, primary_i, 0, 0)
+            backup_i = self._pick_replica(replicas, exclude=primary_i)
+            bfut = self._executor().submit(
+                self._run_on, replicas[backup_i], queries, top_k, hedge,
+                impl)
+            done, _ = wait([fut, bfut], return_when=FIRST_COMPLETED)
+            winner = fut if fut in done else bfut
+            loser = bfut if winner is fut else fut
+            loser.add_done_callback(lambda f: f.exception())
+            out, _elapsed = winner.result()
+            return (out, time.perf_counter() - t0,
+                    backup_i if winner is bfut else primary_i, 1,
+                    1 if winner is bfut else 0)
+
+        out, elapsed = self._run_on(primary, queries, top_k, hedge, impl)
+        if threshold is not None and len(replicas) > 1 \
+                and elapsed > threshold:
+            # simulated transports: the duplicate is issued AT the
+            # threshold on the backup's own clock; the faster completion
+            # wins (same math as transport-level hedging)
+            backup_i = self._pick_replica(replicas, exclude=primary_i)
+            bout, belapsed = self._run_on(replicas[backup_i], queries,
+                                          top_k, hedge, impl)
+            if threshold + belapsed < elapsed:
+                return (bout, threshold + belapsed, backup_i, 1, 1)
+            return (out, elapsed, primary_i, 1, 0)
+        return (out, elapsed, primary_i, 0, 0)
+
+    # -- queries ----------------------------------------------------------
+    def query_batch(self, queries: list[Query | str],
+                    top_k: int | None = None, hedge: bool = False,
+                    impl: str = "sorted") -> list[QueryResult]:
+        """Scatter the batch to every shard, gather, merge per query.
+
+        Shards with distinct (or no) virtual clocks run concurrently —
+        the round costs the slowest shard; shards sharing one simulated
+        clock fall back to a deterministic sequential drive.
+        """
+        concurrent = self.concurrent and self._independent_clocks()
+        if concurrent and self.n_shards > 1:
+            futs = [self._executor().submit(
+                self._query_shard, replicas, queries, top_k, hedge, impl)
+                for replicas in self.shard_replicas]
+            legs = [f.result() for f in futs]
+        else:
+            legs = [self._query_shard(replicas, queries, top_k, hedge,
+                                      impl)
+                    for replicas in self.shard_replicas]
+
+        report = ScatterReport(
+            shard_elapsed_s=[leg[1] for leg in legs],
+            replica_of=[leg[2] for leg in legs],
+            serial_wall_s=sum(leg[1] for leg in legs),
+            concurrent=concurrent,
+            n_hedges_issued=sum(leg[3] for leg in legs),
+            n_hedge_wins=sum(leg[4] for leg in legs))
+        report.wall_s = max(report.shard_elapsed_s) if concurrent \
+            else report.serial_wall_s
+        self.last_scatter = report
+        return [self._merge(j, [leg[0] for leg in legs], top_k, report)
+                for j in range(len(queries))]
+
+    def query(self, q: Query | str, top_k: int | None = None,
+              hedge: bool = False) -> QueryResult:
+        return self.query_batch([q], top_k=top_k, hedge=hedge)[0]
+
+    def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
+        return self.query(Regex(pattern, ngram))
+
+    # -- merge ------------------------------------------------------------
+    def _independent_clocks(self) -> bool:
+        """True when no two shards share a simulated virtual clock (each
+        leg's latency is then independent and threads stay deterministic;
+        real transports have no shared clock at all)."""
+        seen: set[int] = set()
+        for replicas in self.shard_replicas:
+            clocks = {id(r.sim_clock) for r in replicas
+                      if r.sim_clock is not None}
+            if clocks & seen:
+                return False
+            seen |= clocks
+        return True
+
+    def _merge(self, j: int, per_shard: list[list[QueryResult]],
+               top_k: int | None, report: ScatterReport) -> QueryResult:
+        """Union shard j-results for query `j` into one QueryResult.
+
+        Shards hold disjoint document sets and each is exact after
+        verification, so the union is exact; non-top-K results are
+        restored to the monolithic (blob, offset) order, making the
+        merged set byte-identical to the unsharded index. Latency stats
+        model the scatter: elapsed fields take the max over shards when
+        concurrent (the gather barrier) and the sum when serial; count
+        fields always sum.
+        """
+        shard_results = [res[j] for res in per_shard]
+        refs, texts = _merge_results(
+            [r.refs for r in shard_results],
+            [r.texts for r in shard_results],
+            already_merged=len(shard_results) == 1,
+            sort=top_k is None)
+        if top_k is not None:
+            refs, texts = refs[:top_k], texts[:top_k]
+        stats = QueryStats(
+            lookup=_merge_fetch([r.stats.lookup for r in shard_results],
+                                report.concurrent),
+            docs=_merge_fetch([r.stats.docs for r in shard_results],
+                              report.concurrent),
+            n_candidates=sum(r.stats.n_candidates for r in shard_results),
+            n_false_positives=sum(r.stats.n_false_positives
+                                  for r in shard_results),
+            n_results=len(refs),
+            rounds=max(r.stats.rounds for r in shard_results))
+        return QueryResult(refs=refs, texts=texts, stats=stats)
+
+
+def _merge_fetch(parts: list[FetchStats], concurrent: bool) -> FetchStats:
+    """Scatter-gather FetchStats: time overlaps (max) when concurrent,
+    chains (sum) when serial; request/byte counters always add."""
+    out = FetchStats()
+    for p in parts:
+        out.add(p)
+    if concurrent and parts:
+        out.elapsed_s = max(p.elapsed_s for p in parts)
+        out.wait_s = max(p.wait_s for p in parts)
+        out.download_s = max(p.download_s for p in parts)
+    return out

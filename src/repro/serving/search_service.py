@@ -32,16 +32,28 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..index.lifecycle import Index
-from ..index.query import Query, normalize, parse
+from ..index.query import Query, Regex, normalize, parse
 from ..index.searcher import Searcher
 from ..storage.cache import LRUCache, SuperpostCache
 from ..storage.simcloud import SimCloudStore
 from ..storage.transport import SimCloudTransport
+from .cluster import ShardedIndex
 
 
 @dataclass
 class LatencyStats:
+    """Service-level latency accounting.
+
+    One entry of `samples_s` is one **engine round**: a serial query, or
+    a whole shared-round batch (recorded ONCE, tagged with its size in
+    `batch_sizes`). Recording the batch's wall clock per member query —
+    N copies of the same number — used to inflate mean/p50/p99 N-fold
+    against serial runs of the same workload; a batch is one service
+    event, so it is one sample.
+    """
+
     samples_s: list = field(default_factory=list)
+    batch_sizes: list = field(default_factory=list)   # ∥ samples_s
     wait_s: list = field(default_factory=list)
     download_s: list = field(default_factory=list)
     false_positives: int = 0
@@ -51,23 +63,46 @@ class LatencyStats:
 
     def observe(self, stats) -> None:
         self.samples_s.append(stats.total_s)
+        self.batch_sizes.append(1)
         self.wait_s.append(stats.lookup.wait_s + stats.docs.wait_s)
         self.download_s.append(stats.lookup.download_s
                                + stats.docs.download_s)
         self.false_positives += stats.n_false_positives
         self.results += stats.n_results
 
+    def observe_batch(self, stats_list) -> None:
+        """Record one shared-round batch as ONE sample.
+
+        Members share their fetch rounds, so the batch completes when its
+        slowest member does — that wall clock (and its wait/download
+        split) is the sample; false positives and results still sum over
+        members."""
+        if not stats_list:
+            return
+        self.samples_s.append(max(s.total_s for s in stats_list))
+        self.batch_sizes.append(len(stats_list))
+        self.wait_s.append(max(s.lookup.wait_s + s.docs.wait_s
+                               for s in stats_list))
+        self.download_s.append(max(s.lookup.download_s + s.docs.download_s
+                                   for s in stats_list))
+        for s in stats_list:
+            self.false_positives += s.n_false_positives
+            self.results += s.n_results
+
     def summary(self) -> dict:
         arr = np.asarray(self.samples_s)
+        n_queries = int(sum(self.batch_sizes))
         return {
             "n": len(arr),
+            "n_queries": n_queries,
+            "mean_batch_size": n_queries / len(arr) if len(arr) else 0.0,
             "mean_ms": float(arr.mean() * 1e3) if len(arr) else 0.0,
             "p50_ms": float(np.percentile(arr, 50) * 1e3) if len(arr) else 0.0,
             "p99_ms": float(np.percentile(arr, 99) * 1e3) if len(arr) else 0.0,
             "wait_ms": float(np.mean(self.wait_s) * 1e3) if len(arr) else 0.0,
             "download_ms": float(np.mean(self.download_s) * 1e3)
             if len(arr) else 0.0,
-            "avg_false_positives": self.false_positives / max(len(arr), 1),
+            "avg_false_positives": self.false_positives / max(n_queries, 1),
             "cache_hit_rate": self.cache_hits / self.cache_lookups
             if self.cache_lookups else 0.0,
         }
@@ -91,7 +126,7 @@ class SearchService:
         self._cache: LRUCache | None = \
             LRUCache(cache_size) if cache_size else None
 
-        if isinstance(source, Index):
+        if isinstance(source, (Index, ShardedIndex)):
             self._index = source
         else:
             if index_prefix is None:
@@ -111,26 +146,37 @@ class SearchService:
         self._open_searcher()
 
     def _open_searcher(self) -> None:
+        old = getattr(self, "searcher", None)
+        if old is not None and hasattr(old, "close"):
+            old.close()          # a ClusterSearcher owns a thread pool
         self.searcher = self._index.searcher(
             cache=self.superpost_cache, coalesce_gap=self.coalesce_gap)
 
     # ------------------------------------------------------------ lifecycle
     @property
-    def index(self) -> Index:
+    def index(self) -> Index | ShardedIndex:
         return self._index
 
     @property
-    def generation(self) -> int:
+    def generation(self):
         return self._index.generation
+
+    def _reader_pin(self):
+        """The generation value a freshly opened searcher would pin —
+        an int for an `Index`, the (cluster, *shards) tuple for a
+        `ShardedIndex` (shards commit independently)."""
+        idx = self._index
+        return idx.reader_generation \
+            if isinstance(idx, ShardedIndex) else idx.generation
 
     def refresh(self) -> bool:
         """Pick up the index's current generation (after a writer's
         commit/merge). Returns True when a newer generation was opened.
         Cache entries of the old generation become unreachable (keys are
         generation-qualified) and age out of the LRUs."""
-        before = self._index.generation
+        before = self._reader_pin()
         self._index.refresh()
-        if self._index.generation == before \
+        if self._reader_pin() == before \
                 and self.searcher.generation == before:
             return False
         self._open_searcher()
@@ -142,6 +188,8 @@ class SearchService:
 
     def close(self) -> None:
         """Release the index handle's transport (worker pools)."""
+        if hasattr(self.searcher, "close"):
+            self.searcher.close()
         self._index.close()
 
     # ------------------------------------------------------------ internals
@@ -186,38 +234,54 @@ class SearchService:
         self._cache_put(key, result)
         return result
 
-    def search_regex(self, pattern: str, ngram: int = 3):
-        result = self.searcher.regex_query(pattern, ngram=ngram)
-        self.stats.observe(result.stats)
-        return result
+    def search_regex(self, pattern: str, ngram: int = 3,
+                     top_k: int | None = None):
+        """Deprecated: regex is a first-class query node — use
+        `search(Regex(pattern, ngram))`. This shim routes through the
+        same planner path, so regex queries now share the result cache,
+        the cache-hit counters, and `top_k` like every other query."""
+        warnings.warn(
+            "search_regex is deprecated: use search(Regex(pattern, "
+            "ngram))", DeprecationWarning, stacklevel=2)
+        return self.search(Regex(pattern, ngram), top_k=top_k)
 
     def search_batch(self, queries, top_k: int | None = None,
                      batched: bool = True, impl: str = "sorted"):
         """Serve a batch of queries (Query trees, strings, or `Regex`).
 
         `batched=True` plans and fetches the whole batch together — two
-        shared rounds of range reads for all N queries. `batched=False`
-        is the serial per-query loop, kept for comparison benchmarks.
-        Results are identical either way; only latency and request count
-        differ.
+        shared rounds of range reads for all N queries; duplicate
+        queries (same normalized cache key) are planned/fetched ONCE and
+        the single result fans back out to every occurrence.
+        `batched=False` is the serial per-query loop, kept for
+        comparison benchmarks. Results are identical either way; only
+        latency and request count differ.
         """
         if not batched:
             return [self.search(q, top_k=top_k) for q in queries]
         qs = [parse(q) if isinstance(q, str) else q for q in queries]
         results: list = [None] * len(qs)
-        miss: list[int] = []
+        to_fetch: list = []                      # deduplicated cold queries
+        pos_of: dict = {}                        # cache key -> to_fetch idx
+        assign: list[tuple[int, int]] = []       # (result slot, to_fetch idx)
         for i, q in enumerate(qs):
-            hit = self._cache_get(self._cache_key(q, top_k))
+            key = self._cache_key(q, top_k)
+            hit = self._cache_get(key)
             if hit is not None:
                 results[i] = hit
-            else:
-                miss.append(i)
-        if miss:
+                continue
+            pos = pos_of.get(key)
+            if pos is None:
+                pos = pos_of[key] = len(to_fetch)
+                to_fetch.append(q)
+            assign.append((i, pos))
+        if to_fetch:
             batch = self.searcher.query_batch(
-                [qs[i] for i in miss], top_k=top_k, hedge=self.hedge,
-                impl=impl)
-            for i, res in zip(miss, batch):
-                results[i] = res
-                self.stats.observe(res.stats)
-                self._cache_put(self._cache_key(qs[i], top_k), res)
+                to_fetch, top_k=top_k, hedge=self.hedge, impl=impl)
+            # the whole batch shares its fetch rounds: ONE latency sample
+            self.stats.observe_batch([res.stats for res in batch])
+            for key, pos in pos_of.items():
+                self._cache_put(key, batch[pos])
+            for i, pos in assign:
+                results[i] = batch[pos]
         return results

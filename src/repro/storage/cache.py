@@ -10,13 +10,20 @@ Two users:
     FIFO dict.
 
 Both are deliberately synchronous and in-process: a Searcher is FaaS-style
-per-worker state (paper §III-A), so its cache is too.
+per-worker state (paper §III-A), so its cache is too. `SuperpostCache`
+additionally takes a lock per get/put: the serving tier
+(serving/cluster.py) shares ONE superpost cache across shard readers it
+drives on concurrent threads, and an unsynchronized OrderedDict corrupts
+under that. The plain `LRUCache` stays lock-free — single-caller state.
 """
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Callable, Hashable
+
+_MISSING = object()          # sentinel: a stored None is a real entry
 
 
 class LRUCache:
@@ -61,8 +68,8 @@ class LRUCache:
 
     def put(self, key: Hashable, value) -> None:
         w = self.weigh(value)
-        old = self._data.pop(key, None)
-        if old is not None:
+        old = self._data.pop(key, _MISSING)
+        if old is not _MISSING:
             self.weight -= self.weigh(old)
         if w > self.max_weight:
             return              # never admit — and never keep a stale entry
@@ -95,6 +102,7 @@ class SuperpostCache:
     def __init__(self, max_bytes: int = 32 << 20) -> None:
         self._lru = LRUCache(max_bytes, weigh=len)
         self.bytes_saved = 0
+        self._lock = threading.Lock()
 
     # -- stats ------------------------------------------------------------
     @property
@@ -123,14 +131,18 @@ class SuperpostCache:
 
     def get(self, blob: str, offset: int, length: int,
             generation: int = 0) -> bytes | None:
-        payload = self._lru.get(self._key(blob, offset, length, generation))
-        if payload is not None:
-            self.bytes_saved += len(payload)
-        return payload
+        with self._lock:
+            payload = self._lru.get(
+                self._key(blob, offset, length, generation))
+            if payload is not None:
+                self.bytes_saved += len(payload)
+            return payload
 
     def put(self, blob: str, offset: int, length: int, payload: bytes,
             generation: int = 0) -> None:
-        self._lru.put(self._key(blob, offset, length, generation), payload)
+        with self._lock:
+            self._lru.put(self._key(blob, offset, length, generation),
+                          payload)
 
     def summary(self) -> dict:
         return {

@@ -33,6 +33,7 @@ legacy `Searcher(cloud, prefix)` constructors keep working.
 
 from __future__ import annotations
 
+import threading
 import time
 from abc import ABC, abstractmethod
 from concurrent.futures import ThreadPoolExecutor
@@ -154,6 +155,15 @@ class StorageTransport(ABC):
 
     blobs: BlobStore
     policy: TransportPolicy
+
+    @property
+    def in_flight(self) -> int:
+        """Outstanding range-GETs on this transport right now — the load
+        signal least-in-flight replica selection reads
+        (serving/cluster.py). Adapters with real concurrency maintain
+        it; synchronous adapters (the simulator resolves a batch before
+        `submit` returns) are always 0."""
+        return 0
 
     @abstractmethod
     def submit(self, requests: list[RangeRequest], *,
@@ -299,6 +309,12 @@ class BlobStoreTransport(StorageTransport):
         self.policy = policy or DEFAULT_POLICY
         self._max_workers = max_workers
         self._pool: ThreadPoolExecutor | None = None
+        self._in_flight = 0
+        self._gauge_lock = threading.Lock()
+
+    @property
+    def in_flight(self) -> int:
+        return self._in_flight
 
     def _executor(self) -> ThreadPoolExecutor:
         if self._pool is None:
@@ -315,6 +331,10 @@ class BlobStoreTransport(StorageTransport):
         if self._pool is not None:
             self._pool.shutdown(wait=False)
             self._pool = None
+
+    def _dec_in_flight(self, _fut) -> None:
+        with self._gauge_lock:
+            self._in_flight -= 1
 
     def _get_with_retry(self, req: RangeRequest,
                         pol: TransportPolicy) -> tuple[bytes, int]:
@@ -340,8 +360,15 @@ class BlobStoreTransport(StorageTransport):
         pol = policy or self.policy
         t0 = time.perf_counter()
         futures = [FetchFuture(r) for r in requests]
+        # gauge counts from SUBMISSION, not execution start: requests
+        # queued behind a saturated worker pool are load too, and the
+        # least-in-flight replica picker must see them
+        with self._gauge_lock:
+            self._in_flight += len(requests)
         raw = [self._executor().submit(self._get_with_retry, r, pol)
                for r in requests]
+        for f in raw:
+            f.add_done_callback(self._dec_in_flight)
         timeout = None
         if pol.deadline_s is not None:
             timeout = pol.deadline_s * (1 + max(0, pol.max_retries))

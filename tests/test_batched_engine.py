@@ -324,3 +324,74 @@ def test_intersect_sorted_matches_sets(seed):
         expect &= set(l.tolist())
     assert set(got.tolist()) == expect
     assert (np.diff(got.astype(np.int64)) > 0).all()  # sorted unique
+
+
+# ------------------------------------------ serving-path bugfix regressions
+def test_batched_latency_not_overcounted_vs_serial(engine):
+    """A shared-round batch is ONE service event: recording its wall
+    clock once per member used to make batched mean/p50/p99 incomparable
+    with serial runs of the same workload."""
+    store, _docs, _truth = engine
+    serial_cloud = SimCloudStore(store, seed=31)
+    serial_svc = SearchService(serial_cloud, "index/be")
+    serial_svc.search_batch(MIXED, batched=False)
+    serial = serial_svc.stats.summary()
+
+    batched_cloud = SimCloudStore(store, seed=31)
+    batched_svc = SearchService(batched_cloud, "index/be")
+    t0 = batched_cloud.clock_s
+    batched_svc.search_batch(MIXED)
+    wall = batched_cloud.clock_s - t0
+    batched = batched_svc.stats.summary()
+
+    # both summaries account every query...
+    assert serial["n_queries"] == batched["n_queries"] == len(MIXED)
+    assert serial["n"] == len(MIXED) and batched["n"] == 1
+    assert batched["mean_batch_size"] == len(MIXED)
+    # ...but the batch contributes its wall clock ONCE, so the recorded
+    # time equals the clock advance instead of ~N times it
+    assert sum(batched_svc.stats.samples_s) == pytest.approx(wall)
+    assert sum(batched_svc.stats.samples_s) < \
+        sum(serial_svc.stats.samples_s)
+    # and the sampled latencies stay comparable with serial samples
+    assert batched["p99_ms"] < serial["p99_ms"] * len(MIXED)
+
+
+def test_search_batch_dedupes_duplicate_queries(engine):
+    """Duplicate queries in ONE cold batch (same normalized cache key)
+    must be planned/fetched once, the result fanned back out."""
+    store, _docs, _truth = engine
+    once_cloud = SimCloudStore(store, seed=33)
+    once = SearchService(once_cloud, "index/be")
+    once.search_batch(["error"])
+
+    dup_cloud = SimCloudStore(store, seed=33)
+    dup = SearchService(dup_cloud, "index/be")
+    # same key under normalization: a duplicate string AND a reordered
+    # equivalent tree of it
+    res = dup.search_batch(["error", Term("error"), "error"])
+    assert dup_cloud.totals.n_requests == once_cloud.totals.n_requests
+    assert res[0] is res[1] is res[2]
+    assert dup.stats.summary()["n_queries"] == 1
+
+    eq_cloud = SimCloudStore(store, seed=34)
+    eq = SearchService(eq_cloud, "index/be")
+    tree = And((Term("error"), Term("block")))
+    nested = And((Term("error"), And((Term("block"), Term("error")))))
+    out = eq.search_batch([tree, nested])   # normalize flattens + dedupes
+    assert out[0] is out[1]
+
+
+def test_search_regex_shim_routes_through_cache_and_topk(engine):
+    store, _docs, _truth = engine
+    svc = SearchService(SimCloudStore(store, seed=35), "index/be",
+                        cache_size=8)
+    with pytest.warns(DeprecationWarning, match="search_regex"):
+        r1 = svc.search_regex(r"blk_4[0-9]1\b")
+    # the shim is the planner path: cached, counted, equal to search()
+    r2 = svc.search(Regex(r"blk_4[0-9]1\b"))
+    assert svc.cache_hits == 1 and svc.stats.cache_lookups == 2
+    assert r1.texts == r2.texts and r1.refs == r2.refs
+    with pytest.warns(DeprecationWarning):
+        limited = svc.search_regex(r"blk_4[0-9]1\b", top_k=1)
+    assert len(limited.texts) <= 1

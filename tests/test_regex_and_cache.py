@@ -62,3 +62,81 @@ def test_query_cache(ngram_index):
     for i in range(20):
         svc.search(f"node{i}")
     assert len(svc._cache) <= 8
+
+
+# ----------------------------------------------------- property: coalescing
+from _hypothesis_compat import given, settings, st  # noqa: E402
+
+from repro.index import coalesce_requests, slice_payloads  # noqa: E402
+from repro.storage import LRUCache, RangeRequest  # noqa: E402
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**32))
+def test_coalesce_property_reconstructs_exact_payloads(seed):
+    """Overlapping / fully-contained / duplicate ranges, any gap: slicing
+    the merged reads must reconstruct every original payload bytewise."""
+    rng = np.random.default_rng(seed)
+    blobs = {f"b{i}": rng.integers(0, 256, size=int(rng.integers(64, 256)),
+                                   dtype=np.uint8).tobytes()
+             for i in range(int(rng.integers(1, 4)))}
+    names = sorted(blobs)
+    reqs = []
+    for _ in range(int(rng.integers(1, 24))):
+        name = names[int(rng.integers(0, len(names)))]
+        size = len(blobs[name])
+        off = int(rng.integers(0, size))
+        length = int(rng.integers(0, size - off))
+        reqs.append(RangeRequest(name, off, length))
+    # force the interesting shapes: exact duplicates and containment
+    if len(reqs) >= 2:
+        reqs.append(reqs[0])                             # duplicate
+        r = reqs[1]
+        if r.length >= 2:
+            reqs.append(RangeRequest(r.blob, r.offset + 1,
+                                     r.length - 1))      # fully contained
+    gap = int(rng.integers(0, 64))
+
+    merged, slices = coalesce_requests(reqs, gap=gap)
+    assert len(slices) == len(reqs)
+    merged_payloads = [blobs[m.blob][m.offset:m.offset + m.length]
+                      for m in merged]
+    got = slice_payloads(reqs, merged_payloads, slices)
+    for req, payload in zip(reqs, got):
+        assert payload == blobs[req.blob][req.offset:req.offset + req.length]
+    # merging never splits: each original maps inside ONE merged range
+    for req, (j, start) in zip(reqs, slices):
+        m = merged[j]
+        assert m.blob == req.blob
+        assert m.offset + start == req.offset
+        assert start + req.length <= m.length
+
+
+# ------------------------------------------------------ property: LRU weight
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**32))
+def test_lru_put_overwrite_weight_invariant(seed):
+    """After ANY op sequence — including overwrites that change an
+    entry's weight and stored-None values — `weight == Σ weigh(v)` over
+    live entries, and never above the bound."""
+    rng = np.random.default_rng(seed)
+    weigh = lambda v: len(v) if v is not None else 1  # noqa: E731
+    cache = LRUCache(max_weight=24, weigh=weigh)
+    keys = [f"k{i}" for i in range(6)]
+    for _ in range(120):
+        op = rng.random()
+        key = keys[int(rng.integers(0, len(keys)))]
+        if op < 0.6:
+            # None sometimes: a stored None is a real entry and its
+            # overwrite must still release the old weight
+            value = None if rng.random() < 0.2 else \
+                bytes(int(rng.integers(0, 30)))
+            cache.put(key, value)
+        elif op < 0.9:
+            cache.get(key)
+        else:
+            cache.clear()
+        assert cache.weight == sum(weigh(v)
+                                   for v in cache._data.values())
+        assert cache.weight <= cache.max_weight
+        assert len(cache) <= cache.max_weight  # weigh >= ... entries bound

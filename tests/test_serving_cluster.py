@@ -1,0 +1,390 @@
+"""Sharded serving tier: scatter-gather cluster + admission frontend.
+
+Load-bearing acceptance criteria: (1) a `ClusterSearcher` over doc-hash
+shards answers byte-identically to the unsharded index on the same
+corpus; (2) concurrent scatter-gather beats the serial per-shard loop on
+simulated wall-clock; (3) the frontend's load-shed path is typed and
+deterministic under the bounded queue.
+"""
+
+import time
+
+import pytest
+
+from repro.data import make_logs_like, write_corpus
+from repro.data.corpus import Corpus
+from repro.index import (And, BuilderConfig, Index, Not, Or, Phrase,
+                         Regex, Term)
+from repro.serving import (ClusterSearcher, DeadlineExceeded, Frontend,
+                           FrontendConfig, Overloaded, SearchService,
+                           ShardedIndex, partition_corpus, shard_of_ref)
+from repro.serving.cluster import decode_cluster_manifest
+from repro.storage import (InMemoryBlobStore, NetworkModel, SimCloudStore,
+                           SimCloudTransport)
+
+CFG = BuilderConfig(B=1800, F0=1.0, index_ngrams=3)
+N_SHARDS = 4
+
+MIXED = [
+    "error", "info",
+    And((Term("info"), Term("block"))),
+    Or((Term("warn"), Term("node7"))),
+    And((Term("info"), Not(Term("block")))),
+    Or((And((Term("info"), Term("block"))), Term("node9"))),
+    Phrase(("for", "block")),
+    Regex(r"blk_1[0-9]2\b"),
+]
+
+
+@pytest.fixture(scope="module")
+def cluster_fixture():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(1100, seed=13)
+    corpus = write_corpus(store, "corpus/sc", docs, n_blobs=4)
+    mono = Index.build(corpus, CFG, store, "index/sc-mono")
+    cluster = ShardedIndex.build(corpus, CFG, store, "cluster/sc",
+                                 n_shards=N_SHARDS)
+    return store, docs, corpus, mono, cluster
+
+
+def _sim_sources(store, seed0, model=None):
+    return lambda s: SimCloudTransport(
+        SimCloudStore(store, model=model, seed=seed0 + s))
+
+
+def _identical(a, b):
+    return all(x.texts == y.texts and x.refs == y.refs
+               for x, y in zip(a, b))
+
+
+# -------------------------------------------------------------- partitioning
+def test_partition_disjoint_complete_and_stable(cluster_fixture):
+    _store, _docs, corpus, _mono, cluster = cluster_fixture
+    parts = partition_corpus(corpus, N_SHARDS)
+    assert sum(p.n_docs for p in parts) == corpus.n_docs
+    seen = set()
+    for s, part in enumerate(parts):
+        for ref in part.refs:
+            assert ref not in seen
+            seen.add(ref)
+            # the shard function is stable: re-routing agrees
+            assert shard_of_ref(ref, N_SHARDS) == s
+    # the handle routes with the same function it was built with
+    assert [p.refs for p in cluster.partition(corpus)] == \
+        [p.refs for p in parts]
+
+
+def test_cluster_manifest_records_membership(cluster_fixture):
+    store, docs, _corpus, _mono, cluster = cluster_fixture
+    raw = store.get("cluster/sc/cluster-00000001.airc")
+    m = decode_cluster_manifest(raw)
+    assert m["generation"] == 1 and m["n_shards"] == N_SHARDS
+    assert sum(s["n_docs"] for s in m["shards"]) == len(docs)
+    assert cluster.n_docs == len(docs)
+    assert cluster.config == CFG
+    assert cluster.reader_generation == (1,) + tuple(
+        s["generation"] for s in m["shards"])
+
+
+# -------------------------------------------------------------- byte-identity
+def test_cluster_byte_identical_to_unsharded(cluster_fixture):
+    store, _docs, _corpus, mono, cluster = cluster_fixture
+    expect = mono.searcher().query_batch(MIXED)
+    cs = cluster.searcher()
+    got = cs.query_batch(MIXED)
+    assert _identical(expect, got)
+    cs.close()
+    # reopened from the store, over simulated transports, still identical
+    reopened = ShardedIndex.open(store, "cluster/sc")
+    cs2 = reopened.searcher(replica_sources=[_sim_sources(store, 40)])
+    assert _identical(expect, cs2.query_batch(MIXED))
+    cs2.close()
+    reopened.close()
+
+
+def test_cluster_topk_exact_subset(cluster_fixture):
+    _store, docs, _corpus, mono, cluster = cluster_fixture
+    full = mono.searcher().query("info")
+    cs = cluster.searcher()
+    res = cs.query("info", top_k=10)
+    assert len(res.texts) == 10
+    # every sampled hit is a true hit (shards stay exact under top-K)
+    assert set(res.refs) <= set(full.refs)
+    cs.close()
+
+
+def test_empty_shard_slots_are_skipped():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(12, seed=3)
+    corpus = write_corpus(store, "corpus/tiny", docs, n_blobs=1)
+    cluster = ShardedIndex.build(corpus, BuilderConfig(B=900, F0=1.0),
+                                 store, "cluster/tiny", n_shards=16)
+    empties = [i for i, idx in enumerate(cluster.shards) if idx is None]
+    assert empties, "16 shards over 12 docs must leave empty slots"
+    with pytest.raises(IndexError):
+        cluster.shard(empties[0])
+    mono = Index.build(corpus, BuilderConfig(B=900, F0=1.0), store,
+                       "index/tiny")
+    cs = cluster.searcher()
+    assert _identical(mono.searcher().query_batch(["error", "info"]),
+                      cs.query_batch(["error", "info"]))
+    cs.close()
+
+
+# ---------------------------------------------------------- concurrent scatter
+def test_concurrent_scatter_beats_serial_loop(cluster_fixture):
+    store, _docs, _corpus, mono, cluster = cluster_fixture
+    sim_mono = mono.searcher(
+        transport=SimCloudTransport(SimCloudStore(store, seed=90)))
+    expect = sim_mono.query_batch(MIXED)
+
+    conc = cluster.searcher(replica_sources=[_sim_sources(store, 70)])
+    conc_res = conc.query_batch(MIXED)
+    conc_report = conc.last_scatter
+    conc.close()
+
+    serial = cluster.searcher(replica_sources=[_sim_sources(store, 70)],
+                              concurrent=False)
+    serial_res = serial.query_batch(MIXED)
+    serial_report = serial.last_scatter
+    serial.close()
+
+    assert _identical(expect, conc_res)
+    assert _identical(expect, serial_res)
+    # identical per-shard clock seeds: the comparison is pure concurrency
+    assert conc_report.shard_elapsed_s == serial_report.shard_elapsed_s
+    assert conc_report.wall_s == max(conc_report.shard_elapsed_s)
+    assert serial_report.wall_s == sum(serial_report.shard_elapsed_s)
+    assert conc_report.wall_s < serial_report.wall_s
+    # per-query stats model the gather barrier, not the serial chain
+    assert conc_res[0].stats.total_s <= serial_res[0].stats.total_s
+
+
+def test_shared_sim_clock_falls_back_to_sequential(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    shared = SimCloudTransport(SimCloudStore(store, seed=5))
+    cs = cluster.searcher(replica_sources=[shared])
+    cs.query_batch(["error"])
+    # one clock for every shard -> deterministic sequential drive
+    assert not cs.last_scatter.concurrent
+    assert cs.last_scatter.wall_s == sum(cs.last_scatter.shard_elapsed_s)
+    cs.close()
+
+
+# ------------------------------------------------------------------- replicas
+def test_least_in_flight_replica_choice(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    cs = cluster.searcher(replica_sources=[_sim_sources(store, 70),
+                                           _sim_sources(store, 170)])
+    assert cs.n_replicas == 2
+    cs.query_batch(["error"])
+    # idle cluster: ties break to the lowest replica index
+    assert cs.last_scatter.replica_of == [0] * cs.n_shards
+    # a busy replica 0 diverts its shard to replica 1
+    cs.shard_replicas[0][0].in_flight += 3
+    cs.query_batch(["error"])
+    assert cs.last_scatter.replica_of[0] == 1
+    assert all(r == 0 for r in cs.last_scatter.replica_of[1:])
+    cs.shard_replicas[0][0].in_flight -= 3
+    cs.close()
+
+
+def test_hedged_retry_beats_straggling_replica(cluster_fixture):
+    store, _docs, _corpus, mono, cluster = cluster_fixture
+    expect = mono.searcher().query_batch(MIXED)
+    # replica 0 is a cross-continent straggler, replica 1 is close
+    slow = NetworkModel().scaled(40.0, "far-away")
+    cs = cluster.searcher(
+        replica_sources=[_sim_sources(store, 70, slow),
+                         _sim_sources(store, 170)],
+        hedge_after_s=0.25)
+    res = cs.query_batch(MIXED)
+    report = cs.last_scatter
+    assert _identical(expect, res)
+    # every shard's primary (replica 0) straggled past the threshold
+    assert report.n_hedges_issued == cs.n_shards
+    assert report.n_hedge_wins == cs.n_shards
+    assert report.replica_of == [1] * cs.n_shards
+    # effective shard time is threshold + backup, far under the straggler
+    assert all(e < 0.25 + 2.0 for e in report.shard_elapsed_s)
+    cs.close()
+
+
+# ------------------------------------------------- lifecycle over the cluster
+def test_cluster_service_cache_refresh_and_append(cluster_fixture):
+    store, docs, _corpus, _mono, cluster = cluster_fixture
+    reopened = ShardedIndex.open(store, "cluster/sc")
+    svc = SearchService(reopened, cache_size=16)
+    r1 = svc.search("error")
+    r2 = svc.search("error")
+    assert svc.cache_hits == 1 and r1.texts == r2.texts
+    assert svc.refresh() is False          # nothing committed: no reopen
+
+    # append one unmistakable doc through ONE shard's own writer
+    new_docs = ["zzznewdoc error sentinel"]
+    new_corpus = write_corpus(store, "corpus/sc-extra", new_docs,
+                              n_blobs=1)
+    routed = reopened.partition(new_corpus)
+    target = next(s for s, part in enumerate(routed) if part.refs)
+    w = reopened.shard(target).writer()
+    w.append(routed[target])
+    w.commit()
+
+    assert svc.refresh() is True           # shard generation moved
+    hits = svc.search("zzznewdoc")
+    assert hits.texts == new_docs
+    # the result cache was generation-keyed: pre-commit entry unreachable
+    r3 = svc.search("error")
+    assert "zzznewdoc error sentinel" in r3.texts
+    svc.close()
+
+
+# ------------------------------------------------------------------- frontend
+def test_frontend_sheds_deterministically_when_full(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    svc = SearchService(ShardedIndex.open(store, "cluster/sc"))
+    fe = Frontend(svc, FrontendConfig(max_queue=2, max_batch=8))
+    f1 = fe.submit("error")
+    f2 = fe.submit("info")
+    with pytest.raises(Overloaded) as exc:
+        fe.submit("block")
+    assert exc.value.depth == 2 and exc.value.limit == 2
+    assert fe.stats.n_shed == 1 and fe.stats.n_admitted == 2
+    # draining restores admission — shedding is purely queue-depth
+    assert fe.run_once() == 2
+    assert f1.result().texts and f2.result() is not None
+    fe.submit("block")
+    assert fe.depth == 1
+    svc.close()
+
+
+def test_frontend_microbatches_one_shared_round(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    svc = SearchService(ShardedIndex.open(store, "cluster/sc"),
+                        cache_size=8)
+    fe = Frontend(svc, FrontendConfig(max_queue=16, max_batch=16))
+    futs = [fe.submit(q) for q in ("error", "info", "warn", "error")]
+    assert fe.run_once() == 4
+    # one micro-batch -> ONE shared engine round ("error" deduped inside)
+    assert fe.stats.batch_sizes == [4]
+    assert svc.stats.batch_sizes == [3]
+    direct = svc.search("warn")
+    assert futs[2].result().texts == direct.texts
+    assert futs[0].result().texts == futs[3].result().texts
+    svc.close()
+
+
+def test_frontend_deadline_expires_queued_requests(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    now = [0.0]
+    svc = SearchService(ShardedIndex.open(store, "cluster/sc"))
+    fe = Frontend(svc, FrontendConfig(max_queue=8, max_batch=8),
+                  clock=lambda: now[0])
+    doomed = fe.submit("error", timeout_s=1.0)
+    fine = fe.submit("info", timeout_s=60.0)
+    now[0] = 5.0                         # deadline passes while queued
+    assert fe.run_once() == 2
+    with pytest.raises(DeadlineExceeded):
+        doomed.result()
+    assert fine.result().texts is not None
+    assert fe.stats.n_expired == 1
+    assert svc.stats.batch_sizes == [1]  # no fetch spent on the dead one
+    svc.close()
+
+
+def test_frontend_threaded_end_to_end(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    svc = SearchService(ShardedIndex.open(store, "cluster/sc"),
+                        cache_size=16)
+    expect = {q: svc.search(q).texts for q in ("error", "info", "warn")}
+    with Frontend(svc, FrontendConfig(max_queue=32, max_batch=8,
+                                      batch_window_s=0.01)).start() as fe:
+        futs = {q: fe.submit(q) for q in ("error", "info", "warn")}
+        for q, f in futs.items():
+            assert f.result(timeout=30.0).texts == expect[q]
+        # the loop keeps serving later arrivals too
+        assert fe.search("block", timeout_s=30.0).texts == \
+            svc.search("block").texts
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError):
+        fe.submit("error")               # closed frontends refuse work
+    assert time.monotonic() - t0 < 5.0
+    svc.close()
+
+
+def test_frontend_rejects_unbatchable_backend():
+    with pytest.raises(TypeError):
+        Frontend(object())
+
+
+def test_open_loop_model_matches_frontend_policy(cluster_fixture):
+    """benchmarks/serving_tier.simulate_open_loop is a virtual-time model
+    of the Frontend's admission + batching policy; on the same burst the
+    two must make identical decisions (shed count, batch sizes)."""
+    import numpy as np
+
+    from benchmarks.serving_tier import simulate_open_loop
+
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    n, max_queue, max_batch = 11, 6, 4
+    cs = cluster.searcher(replica_sources=[_sim_sources(store, 900)])
+    sim = simulate_open_loop(cs, ["error"], offered_qps=1.0,
+                             window_s=0.0, max_batch=max_batch,
+                             max_queue=max_queue, n_requests=n,
+                             arrivals=np.zeros(n))
+    cs.close()
+
+    svc = SearchService(ShardedIndex.open(store, "cluster/sc"))
+    fe = Frontend(svc, FrontendConfig(max_queue=max_queue,
+                                      max_batch=max_batch))
+    shed = 0
+    for _ in range(n):                     # the same all-at-once burst
+        try:
+            fe.submit("error")
+        except Overloaded:
+            shed += 1
+    while fe.depth:
+        fe.run_once()
+    assert sim["n_shed"] == shed == n - max_queue
+    assert sim["n_served"] == fe.stats.summary()["n_served"] == max_queue
+    sim_batches = [max_batch] * (max_queue // max_batch)
+    if max_queue % max_batch:
+        sim_batches.append(max_queue % max_batch)
+    assert fe.stats.batch_sizes == sim_batches
+    assert sim["mean_batch_size"] == pytest.approx(
+        sum(sim_batches) / len(sim_batches))
+    svc.close()
+
+
+def test_frontend_survives_cancelled_future(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    svc = SearchService(ShardedIndex.open(store, "cluster/sc"))
+    fe = Frontend(svc, FrontendConfig(max_queue=8, max_batch=8))
+    gone = fe.submit("error")
+    kept = fe.submit("info")
+    assert gone.cancel()                 # caller gave up while queued
+    fe.run_once()                        # must not kill the batch path
+    assert kept.result().texts is not None
+    assert gone.cancelled()
+    # the cancelled request never reached the engine
+    assert svc.stats.batch_sizes == [1]
+    svc.close()
+
+
+def test_cluster_searcher_closes_owned_replica_transports(cluster_fixture):
+    store, _docs, _corpus, _mono, cluster = cluster_fixture
+    # a factory returning a BARE store: the session must wrap AND close
+    made = []
+
+    def factory(_s):
+        made.append(store)
+        return store
+    cs = cluster.searcher(replica_sources=[factory])
+    owned = list(cs._owned_transports)
+    assert len(owned) == cs.n_shards
+    cs.query_batch(["error"])            # spin the replica worker pools
+    assert any(t._pool is not None for t in owned)
+    cs.close()
+    assert all(t._pool is None for t in owned)
+    assert cs._owned_transports == []    # idempotent
+    cs.close()
