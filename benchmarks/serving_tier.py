@@ -22,6 +22,13 @@ on its own simulated VM↔storage link with an independent virtual clock):
       per-shard hedged retry; fewer straggling shards on the gather
       barrier at the cost of a few duplicate shard reads.
 
+  reshard_gc — online membership change under a serving session:
+      reshard N→M while a pre-cutover searcher keeps answering
+      (byte-identity checked before/during/after the swap), then a
+      garbage-collection sweep of the superseded generation (dry-run
+      orphan count must equal what the real run deletes; bytes
+      reclaimed reported).
+
 Merged into BENCH_query_engine.json under "serving_tier" so the perf
 trajectory stays in one file. `--smoke` runs a low-QPS subset in
 seconds (the CI gate).
@@ -280,6 +287,68 @@ def _load_scenario(store, cluster, pool, offered: list, windows: list,
             "n_requests_per_point": n_requests, "curves": curves}
 
 
+# ----------------------------------------------------------------- reshard+GC
+def _reshard_gc_scenario(store, queries, m: int = 8) -> dict:
+    """Reshard a dedicated copy of the cluster under a live session, then
+    GC the superseded generation. Uses its own prefix so the other
+    scenarios keep reading a stable cluster."""
+    import time as _time
+
+    from repro.index.lifecycle import blobs_of as _blobs
+    from repro.serving import collect_cluster_garbage
+    from repro.storage import InMemoryBlobStore as _Mem
+
+    corpus_store = store
+    # rebuild a private copy from the shared corpus blobs
+    base = ShardedIndex.open(corpus_store, "cluster/st")
+    refs = [r for idx in base.shards if idx is not None
+            for r in idx.corpus_refs()]
+    base.close()
+    from repro.data.corpus import Corpus as _Corpus
+    docs_corpus = _Corpus(store=_blobs(corpus_store), refs=refs)
+    work = _Mem()
+    # corpus blobs must be readable from the work store too
+    for ref_blob in sorted({r.blob for r in refs}):
+        work.put(ref_blob, _blobs(corpus_store).get(ref_blob))
+    cfg = base.config
+    cluster = ShardedIndex.build(docs_corpus, cfg, work, "cluster/rg",
+                                 n_shards=N_SHARDS)
+
+    session = cluster.searcher()
+    before = session.query_batch(queries)
+    t0 = _time.perf_counter()
+    cluster.reshard(m)
+    reshard_s = _time.perf_counter() - t0
+    during = session.query_batch(queries)     # old generation still serves
+    session.close()
+    after_sess = cluster.searcher()
+    after = after_sess.query_batch(queries)
+    after_sess.close()
+
+    n_blobs_before = len(work.list("cluster/rg/"))
+    dry = collect_cluster_garbage(work, "cluster/rg", keep=1,
+                                  grace_s=0.0, dry_run=True)
+    real = collect_cluster_garbage(work, "cluster/rg", keep=1,
+                                   grace_s=0.0)
+    post = ShardedIndex.open(work, "cluster/rg")
+    post_sess = post.searcher()
+    post_gc = post_sess.query_batch(queries)
+    post_sess.close()
+    post.close()
+    cluster.close()
+    return {
+        "n_shards_before": N_SHARDS, "n_shards_after": m,
+        "reshard_s": reshard_s,
+        "identical_across_cutover": _identical(before, during)
+        and _identical(before, after) and _identical(before, post_gc),
+        "n_blobs_before_gc": n_blobs_before,
+        "gc_dry_run_orphans": len(dry.unreachable),
+        "gc_deleted": len(real.deleted),
+        "gc_dry_equals_real": dry.unreachable == real.deleted,
+        "gc_bytes_reclaimed": real.bytes_reclaimed,
+    }
+
+
 # ------------------------------------------------------------------- plumbing
 def run(smoke: bool = False) -> dict:
     store, _docs, truth, mono, cluster = _fixture()
@@ -297,6 +366,8 @@ def run(smoke: bool = False) -> dict:
                                       windows, n_requests),
         "hedged_replicas": _hedged_scenario(store, cluster, queries,
                                             rounds),
+        "reshard_gc": _reshard_gc_scenario(store, queries,
+                                           m=8 if not smoke else 6),
         "smoke": smoke,
     }
     try:
@@ -331,6 +402,12 @@ def bench_serving_tier():
     hr = scenario["hedged_replicas"]
     yield row("serving_tier/hedged_max_wall", hr["hedged"]["max_wall_ms"]
               * 1e3, f"speedup={hr['max_wall_speedup']:.2f}x")
+    rg = scenario["reshard_gc"]
+    yield row("serving_tier/reshard_wall", rg["reshard_s"] * 1e6,
+              f"identical={rg['identical_across_cutover']}")
+    yield row("serving_tier/gc_bytes_reclaimed", rg["gc_bytes_reclaimed"],
+              f"deleted={rg['gc_deleted']}"
+              f";dry==real={rg['gc_dry_equals_real']}")
 
 
 def main() -> None:

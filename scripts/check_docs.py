@@ -1,0 +1,145 @@
+"""Markdown link checker for README.md and docs/ (the docs CI gate).
+
+Checks every internal markdown link in the repo's documentation:
+
+  * relative file targets must exist (``[x](docs/foo.md)``,
+    ``[x](../PAPER.md)``);
+  * anchor fragments must match a real heading in the target file,
+    using GitHub's slug rules (``[x](foo.md#some-heading)``, ``#frag``
+    within the same file);
+  * external links (http/https/mailto) are NOT fetched — this gate is
+    fast, offline, and deterministic.
+
+Fenced code blocks are stripped before scanning, so example code can
+mention ``[x](y)`` freely. Exit status is non-zero when any link is
+broken; the report lists ``file:line`` for each.
+
+    python scripts/check_docs.py            # checks README.md + docs/
+    python scripts/check_docs.py FILES...   # or an explicit file set
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code/links, lower,
+    drop punctuation except hyphens/underscores, spaces to hyphens."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)  # [t](u) -> t
+    text = re.sub(r"[*_`]", "", text)
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def strip_fences(lines: list[str]) -> list[str]:
+    """Blank out fenced code blocks, keeping line numbers stable."""
+    out: list[str] = []
+    in_fence = False
+    for line in lines:
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else line)
+    return out
+
+
+def heading_slugs(path: str) -> set[str]:
+    with open(path, encoding="utf-8") as f:
+        lines = strip_fences(f.read().splitlines())
+    slugs: set[str] = set()
+    counts: dict[str, int] = {}
+    for line in lines:
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        base = github_slug(m.group(2))
+        n = counts.get(base, 0)
+        counts[base] = n + 1
+        slugs.add(base if n == 0 else f"{base}-{n}")
+    return slugs
+
+
+def check_file(path: str, repo_root: str,
+               slug_cache: dict[str, set[str]]) -> list[str]:
+    errors: list[str] = []
+    with open(path, encoding="utf-8") as f:
+        lines = strip_fences(f.read().splitlines())
+    for lineno, line in enumerate(lines, start=1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            if target == "":
+                dest = path                      # same-file anchor
+            else:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), target))
+                abs_dest = os.path.abspath(dest)
+                if abs_dest != repo_root and \
+                        not abs_dest.startswith(repo_root + os.sep):
+                    errors.append(f"{path}:{lineno}: link escapes repo: "
+                                  f"{m.group(1)}")
+                    continue
+                if not os.path.exists(dest):
+                    errors.append(f"{path}:{lineno}: broken link target: "
+                                  f"{m.group(1)}")
+                    continue
+            if frag is not None:
+                if not dest.endswith(".md"):
+                    continue                     # anchors only in markdown
+                if dest not in slug_cache:
+                    slug_cache[dest] = heading_slugs(dest)
+                if github_slug(frag) not in slug_cache[dest]:
+                    errors.append(f"{path}:{lineno}: broken anchor "
+                                  f"#{frag} in {dest}")
+    return errors
+
+
+def default_files(repo_root: str) -> list[str]:
+    files = [os.path.join(repo_root, "README.md")]
+    files += sorted(glob.glob(os.path.join(repo_root, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def run(files: list[str] | None = None,
+        repo_root: str | None = None) -> list[str]:
+    root = os.path.abspath(repo_root or
+                           os.path.join(os.path.dirname(__file__), ".."))
+    targets = files if files else default_files(root)
+    slug_cache: dict[str, set[str]] = {}
+    errors: list[str] = []
+    for path in targets:
+        errors += check_file(path, root, slug_cache)
+    return errors
+
+
+def main() -> int:
+    files = sys.argv[1:] or None
+    errors = run(files)
+    if errors:
+        print(f"{len(errors)} broken doc link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    checked = files or default_files(
+        os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+    print(f"docs OK: {len(checked)} file(s), no broken internal links")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

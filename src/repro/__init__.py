@@ -33,9 +33,14 @@ _LAZY_EXPORTS = {
     "to_string": "repro.index",
     "normalize": "repro.index",
     "PureNegationError": "repro.index",
+    "GramlessIndexError": "repro.index",
+    "GCReport": "repro.index",
+    "collect_garbage": "repro.index",
     "SearchService": "repro.serving",
     "ShardedIndex": "repro.serving",
     "ClusterSearcher": "repro.serving",
+    "ClusterConflict": "repro.serving",
+    "collect_cluster_garbage": "repro.serving",
     "Frontend": "repro.serving",
     "FrontendConfig": "repro.serving",
     "Overloaded": "repro.serving",

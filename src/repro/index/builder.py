@@ -226,6 +226,10 @@ class Builder:
                 "doc_size_hist": np.bincount(profile.doc_sizes).tolist(),
                 "expected_fp": report.expected_fp, "F0": cfg.F0,
                 "sigma_x": report.sigma_x,
+                # readers use this to reject gramful regex queries against
+                # an index with no n-gram postings (planner.py) instead of
+                # silently returning zero candidates
+                "index_ngrams": int(cfg.index_ngrams),
             },
         }
         hdr = codec.encode_header(header)

@@ -38,8 +38,9 @@ corpus (enforced by tests/test_index_lifecycle.py).
 
 from __future__ import annotations
 
+import time
 import uuid
-from dataclasses import asdict, replace
+from dataclasses import asdict, dataclass, field, replace
 
 import msgpack
 
@@ -224,7 +225,9 @@ class MultiSegmentSearcher:
                             hedge=hedge, impl=impl)
 
     def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
-        return execute_jobs(self.units, [make_job(Regex(pattern, ngram))],
+        return execute_jobs(self.units,
+                            [make_job(Regex(pattern, ngram),
+                                      units=tuple(self.units))],
                             self._fetcher)[0]
 
 
@@ -272,6 +275,19 @@ class Index:
     def config(self) -> BuilderConfig | None:
         cfg = self._manifest.get("config")
         return BuilderConfig(**cfg) if cfg is not None else None
+
+    def corpus_refs(self) -> list[DocRef]:
+        """Every document ref this generation indexes (base + segments,
+        in ingest order) — the manifest-recorded corpus map that `merge`
+        re-profiles and the serving tier's `reshard` repartitions."""
+        if self._manifest["base"]["corpus"] is None:
+            raise ValueError(
+                f"legacy index {self.prefix!r} has no corpus map; rebuild "
+                "with Index.build(...) to enable merge/reshard")
+        refs = _unpack_refs(self._manifest["base"]["corpus"])
+        for seg in self._manifest["segments"]:
+            refs += _unpack_refs(seg["corpus"])
+        return refs
 
     def __repr__(self) -> str:
         return (f"Index(prefix={self.prefix!r}, "
@@ -324,16 +340,20 @@ class Index:
                    owns_transport=owns)
 
     @classmethod
-    def open(cls, store, prefix: str) -> "Index":
+    def open(cls, store, prefix: str,
+             generation: int | None = None) -> "Index":
         """Open the current generation of the index at `prefix`.
 
         One LIST resolves the newest manifest; one range read fetches it.
         A prefix holding only a legacy `header.airp` (built before the
-        lifecycle existed) opens read-only as generation 0.
+        lifecycle existed) opens read-only as generation 0. Passing
+        `generation` pins an older, still-uncollected generation instead
+        (time-travel reads; `collect_garbage` keeps the latest K).
         """
         owns = not isinstance(store, StorageTransport)
         transport = as_transport(store)
-        generation = _latest_generation(transport.blobs, prefix)
+        if generation is None:
+            generation = _latest_generation(transport.blobs, prefix)
         if generation == 0:
             if not transport.blobs.exists(f"{prefix}/header.airp"):
                 raise FileNotFoundError(
@@ -524,11 +544,7 @@ class IndexWriter:
             raise RuntimeError(
                 "commit() or abort() staged segments before merge()")
         idx = self._index
-        if idx.manifest["base"]["corpus"] is None:
-            raise ValueError("legacy index has no corpus map to merge")
-        refs = _unpack_refs(idx.manifest["base"]["corpus"])
-        for seg in idx.manifest["segments"]:
-            refs += _unpack_refs(seg["corpus"])
+        refs = idx.corpus_refs()
         generation = self._check_not_raced()
         corpus = Corpus(store=idx.transport.blobs, refs=refs)
         new_base = f"{idx.prefix}/base-{generation:08d}"
@@ -543,3 +559,147 @@ class IndexWriter:
         idx._manifest = manifest
         self._base_generation = generation
         return idx
+
+
+# ============================================================ garbage collection
+@dataclass
+class GCReport:
+    """What one `collect_garbage` sweep saw and did.
+
+    `unreachable` is the full orphan set (what a dry run reports);
+    `deleted` is the subset actually removed (empty on dry runs),
+    `kept_grace` the subset spared because it is younger than the grace
+    window. `bytes_reclaimed` measures `deleted` (or, on a dry run, what
+    a real run would reclaim right now).
+    """
+
+    prefix: str
+    keep: int
+    n_candidates: int = 0
+    n_reachable: int = 0
+    unreachable: list[str] = field(default_factory=list)
+    kept_grace: list[str] = field(default_factory=list)
+    deleted: list[str] = field(default_factory=list)
+    bytes_reclaimed: int = 0
+    dry_run: bool = False
+
+
+def blobs_of(source):
+    """The control-plane `BlobStore` behind any store-ish handle a caller
+    holds (transport, simulated cloud, or the store itself)."""
+    if isinstance(source, StorageTransport):
+        return source.blobs
+    backing = getattr(source, "backing", None)   # SimCloudStore
+    if backing is not None:
+        return backing
+    return source
+
+
+def unit_blob_names(all_names: list[str], unit_prefix: str) -> set[str]:
+    """The blobs one index unit (a base or a delta segment) is made of:
+    its header plus its superpost blocks. Matching on names — rather than
+    listing `unit_prefix/` wholesale — keeps a base living at the index
+    root (the legacy layout) from claiming segment/manifest blobs that
+    merely share the prefix."""
+    return {n for n in all_names
+            if n == f"{unit_prefix}/header.airp"
+            or n.startswith(f"{unit_prefix}/superposts-")}
+
+
+def manifest_reachable(manifest: dict, all_names: list[str]) -> set[str]:
+    """Blobs one decoded index manifest keeps alive: every unit's header
+    and blocks, plus the corpus blobs its document refs point into (so a
+    corpus written under the index prefix is never collected)."""
+    out: set[str] = set()
+    entries = [manifest["base"]] + list(manifest["segments"])
+    for entry in entries:
+        out |= unit_blob_names(all_names, entry["prefix"])
+        packed = entry.get("corpus")
+        if packed is not None:
+            out.update(packed["blobs"])
+    return out
+
+
+def reachable_blobs(blobs, prefix: str, keep: int = 2,
+                    all_names: list[str] | None = None) -> set[str]:
+    """The blob set reachable from the latest `keep` manifests of the
+    index at `prefix` (manifests included). A legacy header-only prefix
+    (no manifests) reports everything reachable — there is no manifest
+    history to walk, so nothing is provably garbage. `all_names` skips
+    the LIST when the caller already holds one covering the prefix (how
+    cluster GC walks N shard prefixes on a single cluster-level LIST)."""
+    if all_names is None:
+        all_names = blobs.list(f"{prefix}/")
+    else:
+        all_names = [n for n in all_names if n.startswith(f"{prefix}/")]
+    manifests = sorted(n for n in all_names
+                       if n.startswith(f"{prefix}/manifest-")
+                       and n.endswith(".airm"))
+    if not manifests:
+        return set(all_names)
+    kept = manifests[-max(1, int(keep)):]
+    out: set[str] = set(kept)
+    for name in kept:
+        manifest = decode_manifest(blobs.get(name))
+        out |= manifest_reachable(manifest, all_names)
+    return out
+
+
+DEFAULT_GRACE_S = 600.0
+
+
+def collect_garbage(source, prefix: str, keep: int = 2,
+                    grace_s: float = DEFAULT_GRACE_S,
+                    dry_run: bool = False,
+                    now: float | None = None,
+                    reachable: set[str] | None = None) -> GCReport:
+    """Delete blobs under `prefix` unreachable from the latest `keep`
+    manifest generations.
+
+    Old generations accumulate by design — `merge()` writes a fresh
+    `base-<gen>` and never overwrites live blobs, the serving tier's
+    `reshard` builds whole new shard sets (serving/cluster.py) — so an
+    index that is written to forever leaks storage without this sweep.
+    Reachability is computed from the manifests (`reachable_blobs`);
+    everything else under the prefix is garbage, EXCEPT blobs younger
+    than `grace_s` (by `BlobStore.mtime`), which are spared until the
+    next sweep. The grace window is the ONLY thing protecting two kinds
+    of in-flight work, so it defaults ON (`DEFAULT_GRACE_S`, 10 min):
+    a reader that just resolved a manifest and is about to range-read
+    the blobs it points at, and a membership change's staging blobs
+    (serving/cluster.py `_stage_prefix`) written but not yet published —
+    deleting those would let the change CAS-publish a manifest pointing
+    at nothing. Set `grace_s=0.0` only when no writer or reader can be
+    in flight (tests, offline compaction). `dry_run=True` reports the
+    orphan set without deleting. `reachable` overrides the root set
+    (how cluster-level GC folds shard reachability in); `now` pins the
+    clock for deterministic tests.
+
+    Works on any store handle: a `BlobStore`, `SimCloudStore`, or
+    `StorageTransport` (GC is control-plane — LIST/DELETE — so no
+    latency model mediates it).
+    """
+    blobs = blobs_of(source)
+    candidates = blobs.list(f"{prefix}/")
+    live = reachable if reachable is not None else \
+        reachable_blobs(blobs, prefix, keep)
+    orphans = sorted(n for n in candidates if n not in live)
+    t_now = time.time() if now is None else now
+    report = GCReport(prefix=prefix, keep=int(keep),
+                      n_candidates=len(candidates),
+                      n_reachable=len(candidates) - len(orphans),
+                      unreachable=orphans, dry_run=dry_run)
+    for name in orphans:
+        try:
+            if grace_s > 0.0 and t_now - blobs.mtime(name) < grace_s:
+                report.kept_grace.append(name)
+                continue
+            size = blobs.size(name)
+        except (KeyError, FileNotFoundError, OSError):
+            continue    # vanished since the LIST (concurrent sweep or
+            #             a conflicted change's abort): already collected
+        report.bytes_reclaimed += size
+        if not dry_run:
+            blobs.delete(name)
+            report.deleted.append(name)
+    return report

@@ -63,6 +63,53 @@ class PureNegationError(ValueError):
     literal run) — answering it would require scanning the corpus."""
 
 
+class GramlessIndexError(ValueError):
+    """A regex with literal n-gram runs was planned against an index
+    unit that holds no matching n-gram postings — either the index was
+    built without `BuilderConfig(index_ngrams=...)`, or with a different
+    n than the query's `Regex(..., ngram=n)`.
+
+    Without this guard the lookup hashes never-inserted n-gram terms
+    into the sketch and (almost always) intersects down to zero
+    candidates: the query *silently* misses documents the regex truly
+    matches. Units whose header predates the `index_ngrams` field are
+    treated as unknown and not rejected."""
+
+
+def _check_regex_units(tree: Query, units: tuple) -> None:
+    """Reject gramful regexes against known-gramless/mismatched units."""
+    if not units:
+        return
+
+    def walk(node: Query) -> None:
+        if isinstance(node, Regex):
+            if not regex_grams(node.pattern, node.ngram):
+                return               # gramless pattern: handled elsewhere
+            for u in units:
+                n = getattr(u, "ngram_n", None)
+                if n is None:        # legacy header: unknown, stay lax
+                    continue
+                if n == 0:
+                    raise GramlessIndexError(
+                        f"regex {node.pattern!r} needs {node.ngram}-gram "
+                        f"postings but index unit {u.prefix!r} was built "
+                        "without index_ngrams; rebuild with "
+                        f"BuilderConfig(index_ngrams={node.ngram})")
+                if n != node.ngram:
+                    raise GramlessIndexError(
+                        f"regex {node.pattern!r} uses ngram={node.ngram} "
+                        f"but index unit {u.prefix!r} was built with "
+                        f"index_ngrams={n}; query with Regex(pattern, "
+                        f"ngram={n})")
+        elif isinstance(node, (And, Or)):
+            for sub in node.items:
+                walk(sub)
+        elif isinstance(node, Not):
+            walk(node.item)
+
+    walk(tree)
+
+
 # ------------------------------------------------------------------ document
 class DocContent:
     """Lazy per-document views for verification: raw text, the token
@@ -307,12 +354,14 @@ def make_job(q: Query, top_k: int | None = None,
     byte-identical. Everything else goes through the physical planner.
     """
     if isinstance(q, Regex):
+        _check_regex_units(q, units)
         lookup_q, compiled = regex_prefilter(q.pattern, q.ngram)
         return Job(lookup_q=lookup_q,
                    accept_text=lambda t, c=compiled: bool(c.search(t)),
                    top_k=top_k, delta=delta,
                    fetch_documents=fetch_documents)
     tree = normalize(q)
+    _check_regex_units(tree, units)
     if _is_classic(tree):
         return Job(lookup_q=tree,
                    accept_words=lambda ws, q=tree: _classic_matches(q, ws),
@@ -527,6 +576,6 @@ def combine_planned(plans: list[PhysicalPlan],
     return out  # type: ignore[return-value]
 
 
-__all__ = ["PureNegationError", "PhysicalPlan", "Job", "DocContent",
-           "make_job", "plan_batch", "physical_plan", "matches",
-           "regex_prefilter", "combine_planned"]
+__all__ = ["PureNegationError", "GramlessIndexError", "PhysicalPlan",
+           "Job", "DocContent", "make_job", "plan_batch", "physical_plan",
+           "matches", "regex_prefilter", "combine_planned"]

@@ -211,6 +211,13 @@ class Searcher:
             int(fp): p for fp, p in zip(hdr["common_fps"], common_ptrs)}
         self.profile = hdr["profile"]
         self.F0 = float(self.profile.get("F0", 1.0))
+        # n-gram size the index was built with: 0 = no n-gram postings,
+        # None = unknown (header predates the field). The planner raises
+        # GramlessIndexError when a gramful regex hits a known-gramless
+        # or mismatched-n unit.
+        raw_ngrams = self.profile.get("index_ngrams")
+        self.ngram_n: int | None = \
+            None if raw_ngrams is None else int(raw_ngrams)
 
     # fetch knobs live in ONE place — the _Fetcher every round goes
     # through — so post-construction mutation keeps taking effect
@@ -355,7 +362,8 @@ class Searcher:
         then matched against the real regex — superpost false positives
         never affect correctness.
         """
-        return self._execute_jobs([make_job(Regex(pattern, ngram))])[0]
+        return self._execute_jobs(
+            [make_job(Regex(pattern, ngram), units=(self,))])[0]
 
     # ----------------------------------------------------------------- utils
     def _refs(self, keys: np.ndarray, lengths: np.ndarray) -> list[DocRef]:

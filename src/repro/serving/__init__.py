@@ -1,8 +1,10 @@
 """Serving: batched keyword search (the paper's app), the sharded
 scatter-gather tier + admission-controlled frontend, and RAG decoding."""
 
-from .cluster import (ClusterSearcher, ScatterReport, ShardedIndex,
-                      partition_corpus, shard_of_ref)
+from .cluster import (ClusterConflict, ClusterSearcher, ScatterReport,
+                      ShardedIndex, collect_cluster_garbage,
+                      partition_by_slots, partition_corpus, shard_of_ref,
+                      slot_of_ref)
 from .frontend import (DeadlineExceeded, Frontend, FrontendConfig,
                        FrontendStats, Overloaded)
 from .rag import RAGPipeline, RAGResult
@@ -10,8 +12,9 @@ from .search_service import LatencyStats, SearchService
 
 __all__ = [
     "RAGPipeline", "RAGResult", "LatencyStats", "SearchService",
-    "ShardedIndex", "ClusterSearcher", "ScatterReport",
-    "partition_corpus", "shard_of_ref",
+    "ShardedIndex", "ClusterSearcher", "ScatterReport", "ClusterConflict",
+    "partition_corpus", "partition_by_slots", "shard_of_ref",
+    "slot_of_ref", "collect_cluster_garbage",
     "Frontend", "FrontendConfig", "FrontendStats",
     "Overloaded", "DeadlineExceeded",
 ]

@@ -33,6 +33,14 @@ as true overlap (`wall_s` = max over shards) while shards that share one
 virtual clock are driven sequentially to keep the simulation
 deterministic. Real transports (`BlobStoreTransport`) always run
 genuinely concurrent threads.
+
+Membership is **fluid** (docs/serving_cluster.md "Resharding & GC"):
+documents route doc-hash → slot → physical shard, and
+`reshard`/`split`/`merge_shards` publish a new slot map as the next
+cluster generation while live readers keep serving the old one until
+`refresh()` swaps — the cutover is a manifest CAS, never a blob
+mutation. Superseded generations are reclaimed by
+`collect_cluster_garbage` (latest-K reachability + grace window).
 """
 
 from __future__ import annotations
@@ -40,6 +48,7 @@ from __future__ import annotations
 import hashlib
 import threading
 import time
+import uuid
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import asdict, dataclass, field
 
@@ -47,9 +56,11 @@ import msgpack
 
 from ..data.corpus import Corpus, DocRef
 from ..index.builder import BuilderConfig
-from ..index.lifecycle import (Index, MultiSegmentSearcher,
-                               latest_generation, open_many,
-                               publish_generation)
+from ..index.lifecycle import (DEFAULT_GRACE_S, GCReport, Index,
+                               MultiSegmentSearcher, blobs_of,
+                               collect_garbage, latest_generation,
+                               open_many, publish_generation,
+                               reachable_blobs)
 from ..index.query import Query, Regex
 from ..index.searcher import (QueryResult, QueryStats, Searcher,
                               _merge_results)
@@ -63,30 +74,54 @@ CLUSTER_MAGIC = b"AIRC"
 CLUSTER_VERSION = 1
 
 
+class ClusterConflict(RuntimeError):
+    """A cluster membership change (reshard/split/merge_shards) lost a
+    race: another publisher claimed the next cluster generation, or a
+    shard writer committed while the new shards were being built from
+    the old corpus snapshot. The staged blobs have been deleted;
+    `refresh()` the handle and retry."""
+
+
 # ---------------------------------------------------------------- partitioning
-def shard_of_ref(ref: DocRef, n_shards: int) -> int:
-    """Stable doc-hash shard assignment from the document's storage
+def slot_of_ref(ref: DocRef, n_slots: int) -> int:
+    """Stable doc-hash slot assignment from the document's storage
     identity (blob, offset, length) — process- and seed-independent, so
-    appends route to the same shard the original build chose."""
+    appends route to the same slot the original build chose."""
     ident = f"{ref.blob}:{ref.offset}:{ref.length}".encode()
     digest = hashlib.blake2b(ident, digest_size=8).digest()
-    return int.from_bytes(digest, "big") % n_shards
+    return int.from_bytes(digest, "big") % n_slots
 
 
-def partition_corpus(corpus: Corpus, n_shards: int) -> list[Corpus]:
-    """Split a corpus into `n_shards` doc-hash sub-corpora (views over
-    the same blobs — no bytes are copied)."""
+# a cluster built with n_slots == n_shards routes slot i to shard i, so
+# the classic name is the same function — kept as the public alias every
+# existing caller and test uses
+shard_of_ref = slot_of_ref
+
+
+def partition_by_slots(corpus: Corpus, n_slots: int,
+                       shard_of_slot: list[int],
+                       n_shards: int) -> list[Corpus]:
+    """Split a corpus into `n_shards` sub-corpora through the slot map
+    (doc → hash slot → physical shard). Views over the same blobs — no
+    bytes are copied."""
     refs: list[list[DocRef]] = [[] for _ in range(n_shards)]
     texts: list[list[str]] | None = \
         [[] for _ in range(n_shards)] if corpus.texts is not None else None
     for i, ref in enumerate(corpus.refs):
-        s = shard_of_ref(ref, n_shards)
+        s = shard_of_slot[slot_of_ref(ref, n_slots)]
         refs[s].append(ref)
         if texts is not None:
             texts[s].append(corpus.texts[i])
     return [Corpus(store=corpus.store, refs=refs[s],
                    texts=texts[s] if texts is not None else None)
             for s in range(n_shards)]
+
+
+def partition_corpus(corpus: Corpus, n_shards: int) -> list[Corpus]:
+    """Split a corpus into `n_shards` doc-hash sub-corpora (the identity
+    slot map: slot i → shard i, what `build` uses)."""
+    return partition_by_slots(corpus, n_shards, list(range(n_shards)),
+                              n_shards)
 
 
 # ------------------------------------------------------- cluster manifest codec
@@ -106,7 +141,33 @@ def decode_cluster_manifest(data: bytes) -> dict:
         raise ValueError(
             f"cluster manifest version {data[4]} != supported "
             f"{CLUSTER_VERSION}")
-    return msgpack.unpackb(data[5:], raw=False, strict_map_key=False)
+    return _normalize_cluster_manifest(
+        msgpack.unpackb(data[5:], raw=False, strict_map_key=False))
+
+
+def _normalize_cluster_manifest(manifest: dict) -> dict:
+    """Fill in slot routing for pre-resharding manifests: a cluster that
+    never resharded has the identity map (slot i → shard i, one slot per
+    shard), which is exactly what `build` used to imply."""
+    manifest.setdefault("n_slots", int(manifest["n_shards"]))
+    for i, entry in enumerate(manifest["shards"]):
+        entry.setdefault("slots", [i])
+    return manifest
+
+
+def _shard_of_slot(manifest: dict) -> list[int]:
+    """Invert the per-shard slot lists into one slot → shard array."""
+    out = [-1] * int(manifest["n_slots"])
+    for s, entry in enumerate(manifest["shards"]):
+        for slot in entry["slots"]:
+            out[int(slot)] = s
+    if any(s < 0 for s in out):
+        # a hole would silently route documents to refs[-1] — refuse the
+        # manifest outright rather than misroute
+        missing = [i for i, s in enumerate(out) if s < 0]
+        raise ValueError(
+            f"cluster manifest slot map leaves slots {missing} unassigned")
+    return out
 
 
 def _open_member_shards(transport: StorageTransport,
@@ -152,6 +213,14 @@ class ShardedIndex:
     @property
     def n_shards(self) -> int:
         return int(self._manifest["n_shards"])
+
+    @property
+    def n_slots(self) -> int:
+        """Hash-slot count (the routing modulus). Fixed for the life of
+        the cluster by `build(n_slots=...)` unless a full `reshard`
+        replaces it; `split`/`merge_shards` only move slots between
+        physical shards."""
+        return int(self._manifest["n_slots"])
 
     @property
     def shard_prefixes(self) -> list[str | None]:
@@ -201,35 +270,55 @@ class ShardedIndex:
     # -- lifecycle --------------------------------------------------------
     @classmethod
     def build(cls, corpus: Corpus, config: BuilderConfig | None,
-              store, prefix: str, n_shards: int) -> "ShardedIndex":
+              store, prefix: str, n_shards: int,
+              n_slots: int | None = None) -> "ShardedIndex":
         """Partition `corpus` into `n_shards` doc-hash shards, build each
         as a normal `Index` under `prefix/shard-XXXX`, and CAS-publish the
         cluster manifest. A shard the hash leaves empty is recorded as an
-        empty slot (no index is built for it)."""
+        empty slot (no index is built for it).
+
+        `n_slots` over-provisions the routing modulus beyond the physical
+        shard count (contiguous slot ranges per shard) so later targeted
+        `split()` calls can move slots without rebuilding the world; the
+        default (`n_slots == n_shards`, the identity map) routes exactly
+        like the pre-resharding tier.
+        """
         if n_shards < 1:
             raise ValueError("need at least one shard")
+        n_slots = n_shards if n_slots is None else int(n_slots)
+        if n_slots < n_shards:
+            raise ValueError(
+                f"n_slots={n_slots} must be >= n_shards={n_shards}")
         owns = not isinstance(store, StorageTransport)
         transport = as_transport(store)
         cfg = config or BuilderConfig()
-        parts = partition_corpus(corpus, n_shards)
+        # shard i serves the contiguous slot range [i*S/N, (i+1)*S/N)
+        slots_of = [list(range(s * n_slots // n_shards,
+                               (s + 1) * n_slots // n_shards))
+                    for s in range(n_shards)]
+        shard_of_slot = [s for s in range(n_shards) for _ in slots_of[s]]
+        parts = partition_by_slots(corpus, n_slots, shard_of_slot,
+                                   n_shards)
         shards: list[Index | None] = []
         entries: list[dict] = []
         for s, part in enumerate(parts):
             if not part.refs:
                 shards.append(None)
                 entries.append({"prefix": None, "generation": 0,
-                                "n_docs": 0})
+                                "n_docs": 0, "slots": slots_of[s]})
                 continue
             shard_prefix = f"{prefix}/shard-{s:04d}"
             idx = Index.build(part, cfg, transport, shard_prefix)
             shards.append(idx)
             entries.append({"prefix": shard_prefix,
                             "generation": idx.generation,
-                            "n_docs": part.n_docs})
+                            "n_docs": part.n_docs,
+                            "slots": slots_of[s]})
         generation = latest_generation(transport.blobs, prefix,
                                        stem="cluster") + 1
         manifest = {"generation": generation, "n_shards": n_shards,
-                    "shards": entries, "config": asdict(cfg)}
+                    "n_slots": n_slots, "shards": entries,
+                    "config": asdict(cfg)}
         publish_generation(
             transport.blobs, _cluster_manifest_name(prefix, generation),
             encode_cluster_manifest(manifest), generation, prefix)
@@ -237,11 +326,15 @@ class ShardedIndex:
                    owns_transport=owns)
 
     @classmethod
-    def open(cls, store, prefix: str) -> "ShardedIndex":
+    def open(cls, store, prefix: str,
+             generation: int | None = None) -> "ShardedIndex":
+        """Open the newest cluster generation (or a pinned older one
+        that `collect_garbage` has not yet collected)."""
         owns = not isinstance(store, StorageTransport)
         transport = as_transport(store)
-        generation = latest_generation(transport.blobs, prefix,
-                                       stem="cluster")
+        if generation is None:
+            generation = latest_generation(transport.blobs, prefix,
+                                           stem="cluster")
         if generation == 0:
             raise FileNotFoundError(
                 f"no cluster manifest under {prefix!r}")
@@ -271,9 +364,364 @@ class ShardedIndex:
                     idx.refresh()
         return self
 
+    def _slot_map(self) -> list[int]:
+        """Slot → shard array for the CURRENT manifest, computed once
+        per manifest swap (per-document routing must not rebuild an
+        O(n_slots) array per call)."""
+        cached = getattr(self, "_slot_cache", None)
+        if cached is None or cached[0] is not self._manifest:
+            self._slot_cache = (self._manifest,
+                                _shard_of_slot(self._manifest))
+        return self._slot_cache[1]
+
     def partition(self, corpus: Corpus) -> list[Corpus]:
-        """Route new documents with the cluster's own shard function."""
-        return partition_corpus(corpus, self.n_shards)
+        """Route new documents with the cluster's own slot map (one
+        sub-corpus per physical shard, in shard order)."""
+        return partition_by_slots(corpus, self.n_slots,
+                                  self._slot_map(), self.n_shards)
+
+    def route_ref(self, ref: DocRef) -> int:
+        """The physical shard index serving `ref` in this generation."""
+        return self._slot_map()[slot_of_ref(ref, self.n_slots)]
+
+    # -- membership changes (online resharding) ---------------------------
+    def _require_config(self) -> BuilderConfig:
+        cfg = self.config
+        if cfg is None:
+            raise ValueError(
+                f"cluster {self.prefix!r} has no recorded BuilderConfig; "
+                "membership changes need it to rebuild shards")
+        return cfg
+
+    def _gathered_refs(self, shard_ids: list[int]) -> list[DocRef]:
+        """Manifest-recorded corpus refs of the given shards, in shard
+        then ingest order — the snapshot membership changes rebuild."""
+        refs: list[DocRef] = []
+        for s in shard_ids:
+            idx = self.shards[s]
+            if idx is not None:
+                refs += idx.corpus_refs()
+        return refs
+
+    def _snapshot_sources(self, shard_ids: list[int],
+                          ) -> list[tuple[str, int]]:
+        return [(self.shards[s].prefix, self.shards[s].generation)
+                for s in shard_ids if self.shards[s] is not None]
+
+    def _stage_prefix(self, generation: int) -> str:
+        """Fresh blob namespace for one membership-change attempt. The
+        uuid token keeps two racing attempts at the same generation from
+        building over each other's blobs; a loser's staging area is
+        deleted on the typed failure. NOTE: until publication these
+        blobs are unreachable from every manifest, so only the GC grace
+        window (`collect_garbage(grace_s=...)`, on by default) protects
+        an in-flight change from a concurrent sweep — keep membership
+        changes shorter than the grace window, or don't run GC with
+        `grace_s=0.0` while one may be in flight."""
+        return f"{self.prefix}/gen-{generation:08d}-{uuid.uuid4().hex[:8]}"
+
+    def _abort_staged(self, stage: str) -> None:
+        blobs = self.transport.blobs
+        for name in blobs.list(stage + "/"):
+            blobs.delete(name)
+
+    def _build_parts(self, parts: list[Corpus], slots_of: list[list[int]],
+                     stage: str, cfg: BuilderConfig,
+                     ) -> tuple[list[Index | None], list[dict]]:
+        """Build one new physical shard per part under the staging
+        prefix; hash-empty parts become empty manifest slots."""
+        shards: list[Index | None] = []
+        entries: list[dict] = []
+        try:
+            for s, part in enumerate(parts):
+                if not part.refs:
+                    shards.append(None)
+                    entries.append({"prefix": None, "generation": 0,
+                                    "n_docs": 0, "slots": slots_of[s]})
+                    continue
+                shard_prefix = f"{stage}/shard-{s:04d}"
+                idx = Index.build(part, cfg, self.transport, shard_prefix)
+                shards.append(idx)
+                entries.append({"prefix": shard_prefix,
+                                "generation": idx.generation,
+                                "n_docs": part.n_docs,
+                                "slots": slots_of[s]})
+        except BaseException:
+            self._abort_staged(stage)
+            raise
+        return shards, entries
+
+    def _carried_entry(self, s: int) -> dict:
+        """Re-record an untouched shard for the next manifest (generation
+        refreshed to the handle's current one — shard commits stay
+        shard-local either way, `open` resolves the newest)."""
+        entry = dict(self._manifest["shards"][s])
+        idx = self.shards[s]
+        entry["generation"] = idx.generation if idx is not None else 0
+        return entry
+
+    def _publish_membership(self, generation: int, entries: list[dict],
+                            n_slots: int, stage: str,
+                            sources: list[tuple[str, int]]) -> dict:
+        """CAS-publish the next cluster generation, or clean up and fail
+        typed. Two races are checked: (1) a shard writer committed to a
+        source shard after its corpus was snapshotted — the new shards
+        would silently drop that commit's documents; (2) another
+        publisher claimed this cluster generation. Either way the staged
+        blobs are deleted and `ClusterConflict` tells the caller to
+        `refresh()` and retry. A commit can still slip between this
+        recheck and the CAS; `_reapply_raced_commits` runs after a
+        successful publish to close that window."""
+        blobs = self.transport.blobs
+        for sprefix, gen in sources:
+            if latest_generation(blobs, sprefix) != gen:
+                self._abort_staged(stage)
+                raise ClusterConflict(
+                    f"shard {sprefix!r} committed a new generation while "
+                    f"the new shard set was being built from generation "
+                    f"{gen}; refresh() and retry")
+        if latest_generation(blobs, self.prefix,
+                             stem="cluster") != generation - 1:
+            self._abort_staged(stage)
+            raise ClusterConflict(
+                f"cluster {self.prefix!r} moved past generation "
+                f"{generation - 1} during the membership change; "
+                "refresh() and retry")
+        manifest = {"generation": generation, "n_shards": len(entries),
+                    "n_slots": n_slots, "shards": entries,
+                    "config": self._manifest.get("config")}
+        try:
+            publish_generation(
+                blobs, _cluster_manifest_name(self.prefix, generation),
+                encode_cluster_manifest(manifest), generation, self.prefix)
+        except RuntimeError as exc:
+            self._abort_staged(stage)
+            raise ClusterConflict(str(exc)) from exc
+        return manifest
+
+    def reshard(self, n_shards: int,
+                n_slots: int | None = None) -> "ShardedIndex":
+        """Repartition the whole corpus into a new `n_shards`-shard set
+        and CAS-publish it as the next cluster generation.
+
+        The corpus is re-read from the manifest-recorded document refs of
+        every live shard (no side channel), rebuilt under a fresh staging
+        namespace, and published atomically — live readers keep serving
+        the old generation's blobs until their `refresh()` swaps, and
+        results stay byte-identical to the unsharded index before,
+        during, and after the cutover (shards partition documents and
+        each shard is exact). Old-generation shards become garbage once
+        they age out of the latest-K window (`collect_garbage`). Raises
+        `ClusterConflict` (staged blobs cleaned up) when a shard commit
+        or another publisher races the change.
+
+        `n_slots` defaults to keeping the cluster's current modulus
+        (grown to `n_shards` if needed) so an over-provisioned cluster
+        stays splittable across reshards; pass it explicitly to change
+        the routing resolution.
+        """
+        if n_shards < 1:
+            raise ValueError("need at least one shard")
+        n_slots = max(n_shards, self.n_slots) if n_slots is None \
+            else int(n_slots)
+        if n_slots < n_shards:
+            raise ValueError(
+                f"n_slots={n_slots} must be >= n_shards={n_shards}")
+        cfg = self._require_config()
+        all_ids = list(range(self.n_shards))
+        sources = self._snapshot_sources(all_ids)
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)
+        slots_of = [list(range(s * n_slots // n_shards,
+                               (s + 1) * n_slots // n_shards))
+                    for s in range(n_shards)]
+        shard_of_slot = [s for s in range(n_shards) for _ in slots_of[s]]
+        corpus = Corpus(store=self.transport.blobs,
+                        refs=self._gathered_refs(all_ids))
+        parts = partition_by_slots(corpus, n_slots, shard_of_slot,
+                                   n_shards)
+        shards, entries = self._build_parts(parts, slots_of, stage, cfg)
+        manifest = self._publish_membership(generation, entries, n_slots,
+                                            stage, sources)
+        self._manifest = manifest
+        self.shards = shards
+        self._reapply_raced_commits(sources, corpus.refs)
+        return self
+
+    def split(self, shard_i: int) -> "ShardedIndex":
+        """Split one physical shard's hash slots across two new shards
+        (targeted reshard: only this shard's documents are rebuilt).
+
+        Needs the shard to serve >= 2 slots — build the cluster with
+        `n_slots > n_shards` to keep splits available; a single-slot
+        shard can only grow via a full `reshard`.
+        """
+        entry = self._manifest["shards"][shard_i]
+        slots = [int(x) for x in entry["slots"]]
+        if len(slots) < 2:
+            raise ValueError(
+                f"shard {shard_i} of {self.prefix!r} serves a single "
+                "hash slot and cannot be split; build with n_slots > "
+                "n_shards or use reshard()")
+        cfg = self._require_config()
+        sources = self._snapshot_sources([shard_i])
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)
+        halves = [slots[:len(slots) // 2], slots[len(slots) // 2:]]
+        refs = self._gathered_refs([shard_i])
+        first = set(halves[0])
+        part_refs: list[list[DocRef]] = [[], []]
+        for r in refs:
+            k = 0 if slot_of_ref(r, self.n_slots) in first else 1
+            part_refs[k].append(r)
+        parts = [Corpus(store=self.transport.blobs, refs=pr)
+                 for pr in part_refs]
+        new_shards, new_entries = self._build_parts(parts, halves, stage,
+                                                    cfg)
+        entries = [self._carried_entry(s) for s in range(self.n_shards)]
+        entries[shard_i:shard_i + 1] = new_entries
+        shards = list(self.shards)
+        shards[shard_i:shard_i + 1] = new_shards
+        manifest = self._publish_membership(generation, entries,
+                                            self.n_slots, stage, sources)
+        self._manifest = manifest
+        self.shards = shards
+        self._reapply_raced_commits(sources, refs)
+        return self
+
+    def merge_shards(self, a: int, b: int) -> "ShardedIndex":
+        """Merge two physical shards into one serving both slot sets
+        (targeted reshard: only these shards' documents are rebuilt).
+        The merged shard takes the lower position; the slot count — and
+        therefore document routing — is unchanged."""
+        if a == b:
+            raise ValueError("cannot merge a shard with itself")
+        a, b = sorted((a, b))
+        ea = self._manifest["shards"][a]
+        eb = self._manifest["shards"][b]
+        cfg = self._require_config()
+        sources = self._snapshot_sources([a, b])
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)
+        slots = sorted(int(x) for x in
+                       list(ea["slots"]) + list(eb["slots"]))
+        refs = self._gathered_refs([a, b])
+        part = Corpus(store=self.transport.blobs, refs=refs)
+        new_shards, new_entries = self._build_parts([part], [slots],
+                                                    stage, cfg)
+        entries = [self._carried_entry(s) for s in range(self.n_shards)]
+        shards = list(self.shards)
+        entries[a:a + 1] = new_entries
+        shards[a:a + 1] = new_shards
+        del entries[b], shards[b]
+        manifest = self._publish_membership(generation, entries,
+                                            self.n_slots, stage, sources)
+        self._manifest = manifest
+        self.shards = shards
+        self._reapply_raced_commits(sources, refs)
+        return self
+
+    def append(self, corpus: Corpus) -> "ShardedIndex":
+        """Route and commit new documents into the current generation:
+        each live target shard takes a shard-local delta commit (no
+        cluster republish needed); documents routed to an empty slot
+        materialize its shard via a follow-up cluster generation (same
+        CAS protocol as the other membership changes).
+
+        Safe to retry after a `ClusterConflict`: empty slots are
+        materialized FIRST (nothing is committed if that CAS loses),
+        and delta commits skip documents a target shard's corpus map
+        already records — re-appending the same refs is a no-op, never
+        a duplicate."""
+        if latest_generation(self.transport.blobs, self.prefix,
+                             stem="cluster") != self.generation:
+            # a stale handle would commit into a superseded generation's
+            # shard set — invisible to current readers and doomed to GC
+            raise ClusterConflict(
+                f"cluster {self.prefix!r} moved past generation "
+                f"{self.generation}; refresh() and retry append")
+        parts = self.partition(corpus)
+        empties = [s for s, part in enumerate(parts)
+                   if part.refs and self.shards[s] is None]
+        if empties:
+            cfg = self._require_config()
+            generation = self.generation + 1
+            stage = self._stage_prefix(generation)
+            slots_of = [list(self._manifest["shards"][s]["slots"])
+                        for s in empties]
+            new_shards, new_entries = self._build_parts(
+                [parts[s] for s in empties], slots_of, stage, cfg)
+            entries = [self._carried_entry(s)
+                       for s in range(self.n_shards)]
+            shards = list(self.shards)
+            for s, sh, e in zip(empties, new_shards, new_entries):
+                entries[s], shards[s] = e, sh
+            manifest = self._publish_membership(
+                generation, entries, self.n_slots, stage, sources=[])
+            self._manifest = manifest
+            self.shards = shards
+        for s, part in enumerate(parts):
+            if not part.refs or s in empties:
+                continue
+            idx = self.shards[s]
+            idx.refresh()                # follow foreign commits first
+            have = set(idx.corpus_refs())
+            fresh = [i for i, r in enumerate(part.refs) if r not in have]
+            if not fresh:
+                continue                 # retry after a partial append
+            delta = Corpus(store=part.store,
+                           refs=[part.refs[i] for i in fresh],
+                           texts=[part.texts[i] for i in fresh]
+                           if part.texts is not None else None)
+            w = idx.writer()
+            w.append(delta)
+            w.commit()
+        return self
+
+    def _reapply_raced_commits(self, sources: list[tuple[str, int]],
+                               snapshot_refs: list[DocRef]) -> None:
+        """Close the recheck→CAS window of `_publish_membership`: a
+        commit landing on a source shard between the pre-publish recheck
+        and the CAS is absent from the just-published shard set (which
+        was built from the snapshot). Nothing is lost — the old shard's
+        manifest still records the committed documents — so diff each
+        moved source against the snapshot and `append` the missing
+        documents through the new generation's routing, iterating until
+        the sources are quiescent."""
+        blobs = self.transport.blobs
+        snapshot = set(snapshot_refs)
+        pending = list(sources)
+        for _attempt in range(8):
+            moved: list[tuple[str, int]] = []
+            missing: list[DocRef] = []
+            for sprefix, gen in pending:
+                current = latest_generation(blobs, sprefix)
+                if current == gen:
+                    continue
+                idx = Index.open(self.transport, sprefix)
+                missing += [r for r in idx.corpus_refs()
+                            if r not in snapshot]
+                moved.append((sprefix, current))
+            if not moved:
+                return
+            snapshot.update(missing)
+            pending = moved
+            if missing:
+                self.append(Corpus(store=blobs, refs=missing))
+        raise ClusterConflict(
+            f"source shards of {self.prefix!r} kept committing while "
+            "their raced writes were being re-applied; refresh() and "
+            "reshard again")
+
+    # -- garbage collection ------------------------------------------------
+    def collect_garbage(self, keep: int = 2,
+                        grace_s: float = DEFAULT_GRACE_S,
+                        dry_run: bool = False,
+                        now: float | None = None) -> GCReport:
+        """Sweep this cluster's prefix: see `collect_cluster_garbage`."""
+        return collect_cluster_garbage(self.transport, self.prefix,
+                                       keep=keep, grace_s=grace_s,
+                                       dry_run=dry_run, now=now)
 
     # -- sessions ---------------------------------------------------------
     def searcher(self, cache: SuperpostCache | None = None,
@@ -650,3 +1098,53 @@ def _merge_fetch(parts: list[FetchStats], concurrent: bool) -> FetchStats:
         out.wait_s = max(p.wait_s for p in parts)
         out.download_s = max(p.download_s for p in parts)
     return out
+
+
+# ============================================================ garbage collection
+def cluster_reachable_blobs(blobs, prefix: str, keep: int = 2) -> set[str]:
+    """Blobs reachable from the latest `keep` cluster generations: the
+    kept `cluster-<gen>.airc` manifests themselves, plus — for every
+    shard prefix any of them references — that shard's own latest-`keep`
+    reachable set (`index.lifecycle.reachable_blobs`: shard manifests,
+    unit headers, superpost blocks, corpus blobs). Everything else under
+    the prefix is garbage: old-generation shard sets a `reshard` replaced,
+    orphaned staging areas of conflicted membership changes, pre-merge
+    segment blobs beyond the shard's own history window."""
+    all_names = blobs.list(f"{prefix}/")
+    manifests = sorted(n for n in all_names
+                       if n.startswith(f"{prefix}/cluster-")
+                       and n.endswith(".airc"))
+    if not manifests:
+        return set(all_names)
+    kept = manifests[-max(1, int(keep)):]
+    out: set[str] = set(kept)
+    shard_prefixes: set[str] = set()
+    for name in kept:
+        manifest = decode_cluster_manifest(blobs.get(name))
+        for entry in manifest["shards"]:
+            if entry["prefix"] is not None:
+                shard_prefixes.add(entry["prefix"])
+    for sp in sorted(shard_prefixes):
+        # shard prefixes nest under the cluster prefix: reuse the one
+        # cluster-level LIST instead of re-listing per shard
+        out |= reachable_blobs(blobs, sp, keep=keep,
+                               all_names=all_names)
+    return out
+
+
+def collect_cluster_garbage(source, prefix: str, keep: int = 2,
+                            grace_s: float = DEFAULT_GRACE_S,
+                            dry_run: bool = False,
+                            now: float | None = None) -> GCReport:
+    """Delete blobs under a cluster prefix unreachable from the latest
+    `keep` cluster + shard manifest generations.
+
+    The reachability walk (`cluster_reachable_blobs`) and the sweep
+    semantics — grace window by `BlobStore.mtime`, `dry_run` reporting,
+    `GCReport` accounting — are shared with single-index GC
+    (`index.lifecycle.collect_garbage`); only the root set differs.
+    Accepts a `BlobStore`, `SimCloudStore`, or `StorageTransport`."""
+    blobs = blobs_of(source)
+    return collect_garbage(
+        blobs, prefix, keep=keep, grace_s=grace_s, dry_run=dry_run,
+        now=now, reachable=cluster_reachable_blobs(blobs, prefix, keep))

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from abc import ABC, abstractmethod
 from dataclasses import dataclass
 
@@ -70,6 +71,18 @@ class BlobStore(ABC):
         self.put(name, data)
         return True
 
+    def mtime(self, name: str) -> float:
+        """Last-modified time of `name` as a POSIX timestamp.
+
+        Garbage collection (`index.lifecycle.collect_garbage`) uses this
+        for its grace window: an unreachable blob younger than the window
+        is kept for the next sweep, so a reader that resolved a manifest
+        moments ago can still range-read the blobs it points at. Stores
+        that cannot answer return 0.0 ("unknown age" = old enough to
+        collect); both built-in stores answer truthfully.
+        """
+        return 0.0
+
     def total_bytes(self, prefix: str = "") -> int:
         return sum(self.size(n) for n in self.list(prefix))
 
@@ -79,17 +92,20 @@ class InMemoryBlobStore(BlobStore):
 
     def __init__(self) -> None:
         self._blobs: dict[str, bytes] = {}
+        self._mtimes: dict[str, float] = {}
         self._lock = threading.Lock()
 
     def put(self, name: str, data: bytes) -> None:
         with self._lock:
             self._blobs[name] = bytes(data)
+            self._mtimes[name] = time.time()
 
     def put_if_absent(self, name: str, data: bytes) -> bool:
         with self._lock:
             if name in self._blobs:
                 return False
             self._blobs[name] = bytes(data)
+            self._mtimes[name] = time.time()
             return True
 
     def get_range(self, req: RangeRequest) -> bytes:
@@ -116,9 +132,14 @@ class InMemoryBlobStore(BlobStore):
         with self._lock:
             return name in self._blobs
 
+    def mtime(self, name: str) -> float:
+        with self._lock:
+            return self._mtimes[name]
+
     def delete(self, name: str) -> None:
         with self._lock:
             self._blobs.pop(name, None)
+            self._mtimes.pop(name, None)
 
 
 class LocalBlobStore(BlobStore):
@@ -187,6 +208,9 @@ class LocalBlobStore(BlobStore):
 
     def exists(self, name: str) -> bool:
         return os.path.isfile(self._path(name))
+
+    def mtime(self, name: str) -> float:
+        return os.path.getmtime(self._path(name))
 
     def delete(self, name: str) -> None:
         try:

@@ -1,0 +1,40 @@
+"""Documentation stays navigable: the README and every doc under docs/
+exist, their internal links and anchors resolve (scripts/check_docs.py,
+the same checker the docs CI job runs), and the README's verify command
+matches the ROADMAP's tier-1 command."""
+
+import os
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+import check_docs  # noqa: E402
+
+
+def test_readme_and_docs_exist():
+    assert os.path.exists(os.path.join(REPO, "README.md"))
+    expected = {"architecture.md", "index_lifecycle.md",
+                "query_engine.md", "query_language.md",
+                "serving_cluster.md"}
+    have = set(os.listdir(os.path.join(REPO, "docs")))
+    assert expected <= have, expected - have
+
+
+def test_internal_links_resolve():
+    errors = check_docs.run(repo_root=REPO)
+    assert errors == [], "\n".join(errors)
+
+
+def test_readme_carries_the_tier1_command():
+    with open(os.path.join(REPO, "README.md"), encoding="utf-8") as f:
+        readme = f.read()
+    assert "PYTHONPATH=src python -m pytest -x -q" in readme
+
+
+def test_slug_rules_match_github():
+    # the anchors other docs rely on (architecture.md cross-links)
+    assert check_docs.github_slug("Resharding & GC") == "resharding--gc"
+    assert check_docs.github_slug("The StorageTransport protocol") == \
+        "the-storagetransport-protocol"
+    assert check_docs.github_slug("`code` and *emph*") == "code-and-emph"

@@ -24,7 +24,10 @@ from repro.storage import (BlobStoreTransport, InMemoryBlobStore,
                            SuperpostCache, TransportError, TransportPolicy,
                            as_transport)
 
-CFG = BuilderConfig(B=1200, F0=1.0, hedge_layers=1)
+# index_ngrams: the MIXED workload includes a Regex, and the planner now
+# rejects gramful regexes against gramless indexes (GramlessIndexError)
+# instead of silently missing — so the fixture must actually index grams
+CFG = BuilderConfig(B=1200, F0=1.0, hedge_layers=1, index_ngrams=3)
 
 MIXED = [
     "error", "info", "block",

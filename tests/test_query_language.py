@@ -203,6 +203,39 @@ def test_gramless_regex():
     assert job.plan.lookup_words == ["a"]
 
 
+def test_gramful_regex_on_gramless_index_raises_typed():
+    """ROADMAP known-wart regression: a regex with literal n-gram runs
+    against an index built WITHOUT index_ngrams used to silently return
+    misses (the never-inserted gram terms hash to unrelated bins and
+    intersect to nothing); the planner now raises a typed error."""
+    from repro.index import GramlessIndexError
+
+    store = InMemoryBlobStore()
+    docs = make_logs_like(150, seed=4)
+    corpus = write_corpus(store, "corpus/gl", docs, n_blobs=1)
+    plain = Index.build(corpus, BuilderConfig(B=900, F0=1.0), store,
+                        "index/gl")
+    searcher = plain.searcher()
+    for call in (lambda: searcher.query(Regex(r"blk_1[0-9]2")),
+                 lambda: searcher.query_batch([Regex(r"blk_1[0-9]2")]),
+                 lambda: searcher.query(
+                     And((Term("error"), Regex(r"blk_1[0-9]2")))),
+                 lambda: searcher.regex_query(r"blk_1[0-9]2")):
+        with pytest.raises(GramlessIndexError, match="index_ngrams"):
+            call()
+    # a mismatched gram size is the same silent miss — also typed
+    grammed = Index.build(corpus, BuilderConfig(B=900, F0=1.0,
+                                                index_ngrams=4),
+                          store, "index/gl4")
+    with pytest.raises(GramlessIndexError, match="ngram=4"):
+        grammed.searcher().query(Regex(r"blk_1[0-9]2", ngram=3))
+    # the matching size works, and gramless-pattern rejection is intact
+    res = grammed.searcher().query(Regex(r"blk_1[0-9]2", ngram=4))
+    assert all("blk_1" in t for t in res.texts)
+    with pytest.raises(ValueError):
+        grammed.searcher().query(Regex("[0-9]+", ngram=4))
+
+
 def test_lookup_set_skips_unbounded_or_branch():
     # Or(b, NOT c) bounds nothing — its words need no superpost fetches
     q = And((Term("a"), Or((Term("b"), Not(Term("c"))))))

@@ -1,0 +1,525 @@
+"""Online resharding + blob garbage collection (serving/cluster.py,
+index/lifecycle.py).
+
+Load-bearing acceptance criteria: (1) queries served continuously across
+`reshard(N→M)` are byte-identical to the unsharded index before, during
+(old generation), and after (new generation) the cutover; (2) membership
+changes that race a shard commit or another publisher fail typed
+(`ClusterConflict`) with their staging blobs cleaned up, and retry after
+`refresh()` succeeds; (3) `collect_garbage` dry-run lists exactly the
+unreachable blobs, a real run deletes only those, and nothing reachable
+from the latest K generations is ever deleted (property-tested over
+random commit/merge/reshard histories, on both sim and disk stores).
+"""
+
+import time
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.data import make_logs_like, write_corpus
+from repro.data.corpus import Corpus
+from repro.index import (BuilderConfig, GCReport, Index, Regex,
+                         collect_garbage, reachable_blobs)
+from repro.serving import (ClusterConflict, SearchService, ShardedIndex,
+                           collect_cluster_garbage)
+from repro.serving.cluster import (_cluster_manifest_name,
+                                   cluster_reachable_blobs,
+                                   encode_cluster_manifest, slot_of_ref)
+from repro.storage import InMemoryBlobStore, LocalBlobStore
+
+CFG = BuilderConfig(B=1200, F0=1.0, index_ngrams=3)
+
+QUERIES = ["error", "info", "warn", Regex(r"blk_1[0-9]2\b")]
+
+
+def _flat(results):
+    return [(r.refs, r.texts) for r in results]
+
+
+def _fixture(store, n_docs=700, n_shards=4, n_slots=None,
+             prefix="cluster/rs", seed=13):
+    docs = make_logs_like(n_docs, seed=seed)
+    corpus = write_corpus(store, f"corpus/{prefix.split('/')[-1]}", docs,
+                          n_blobs=3)
+    mono = Index.build(corpus, CFG, store, f"index/{prefix.split('/')[-1]}")
+    cluster = ShardedIndex.build(corpus, CFG, store, prefix,
+                                 n_shards=n_shards, n_slots=n_slots)
+    expect = _flat(mono.searcher().query_batch(QUERIES))
+    return corpus, cluster, expect
+
+
+# ------------------------------------------------------------------ cutover
+@pytest.mark.parametrize("m", [2, 7])      # N=4 -> both M<N and M>N
+def test_reshard_cutover_serves_continuously_byte_identical(m):
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store)
+
+    old_session = cluster.searcher()
+    assert _flat(old_session.query_batch(QUERIES)) == expect  # before
+
+    cluster.reshard(m)
+    assert cluster.n_shards == m and cluster.generation == 2
+    # during: the pre-cutover session keeps serving the old generation's
+    # blobs (nothing was mutated or deleted) and stays byte-identical
+    assert _flat(old_session.query_batch(QUERIES)) == expect
+    old_session.close()
+
+    # after: a fresh session over the new generation
+    new_session = cluster.searcher()
+    assert _flat(new_session.query_batch(QUERIES)) == expect
+    assert new_session.n_shards == len(
+        [s for s in cluster.shards if s is not None])
+    new_session.close()
+
+    # a reader that opened before the reshard follows it via refresh()
+    stale = ShardedIndex.open(store, "cluster/rs", generation=1)
+    assert stale.generation == 1
+    stale.refresh()
+    assert stale.generation == 2 and stale.n_shards == m
+
+
+def test_search_service_refresh_follows_reshard():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store)
+    svc = SearchService(ShardedIndex.open(store, "cluster/rs"),
+                        cache_size=8)
+    assert _flat([svc.search(q) for q in QUERIES]) == expect
+    cluster.reshard(6)
+    # not yet refreshed: old generation still serves, still identical
+    assert _flat([svc.search(q) for q in QUERIES]) == expect
+    assert svc.refresh() is True
+    assert svc.index.n_shards == 6
+    assert _flat([svc.search(q) for q in QUERIES]) == expect
+    svc.close()
+
+
+def test_reshard_cluster_with_empty_shards():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(12, seed=3)
+    corpus = write_corpus(store, "corpus/tiny-rs", docs, n_blobs=1)
+    mono = Index.build(corpus, CFG, store, "index/tiny-rs")
+    cluster = ShardedIndex.build(corpus, CFG, store, "cluster/tiny-rs",
+                                 n_shards=16)
+    assert any(s is None for s in cluster.shards)
+    expect = _flat(mono.searcher().query_batch(["error", "info"]))
+
+    cluster.reshard(3)                    # shrink away the empty slots
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(["error", "info"])) == expect
+    cs.close()
+
+    cluster.reshard(24)                   # grow back past the doc count
+    assert any(s is None for s in cluster.shards)
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(["error", "info"])) == expect
+    cs.close()
+
+
+# ------------------------------------------------------------ split / merge
+def test_split_and_merge_shards_stay_byte_identical():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, n_shards=4, n_slots=8,
+                                        prefix="cluster/sm")
+    assert cluster.n_slots == 8
+
+    cluster.split(1)
+    assert cluster.n_shards == 5 and cluster.n_slots == 8
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+    cluster.merge_shards(0, 3)
+    assert cluster.n_shards == 4 and cluster.n_slots == 8
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+    # the slot map always covers every slot exactly once
+    covered = sorted(s for e in cluster.manifest["shards"]
+                     for s in e["slots"])
+    assert covered == list(range(8))
+
+
+def test_reshard_preserves_slot_overprovisioning():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, n_shards=4, n_slots=12,
+                                        prefix="cluster/sp")
+    cluster.reshard(6)                    # default: keep the 12 slots
+    assert cluster.n_shards == 6 and cluster.n_slots == 12
+    cluster.split(0)                      # still splittable
+    assert cluster.n_shards == 7
+    cluster.reshard(3, n_slots=3)         # explicit override shrinks it
+    assert cluster.n_slots == 3
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+
+def test_split_single_slot_shard_raises():
+    store = InMemoryBlobStore()
+    _corpus, cluster, _expect = _fixture(store, prefix="cluster/ss")
+    with pytest.raises(ValueError, match="single hash slot"):
+        cluster.split(0)
+
+
+def test_routing_follows_membership_changes():
+    store = InMemoryBlobStore()
+    corpus, cluster, _expect = _fixture(store, n_shards=4, n_slots=8,
+                                        prefix="cluster/rt")
+    cluster.split(2)
+    cluster.merge_shards(0, 1)
+    parts = cluster.partition(corpus)
+    assert sum(p.n_docs for p in parts) == corpus.n_docs
+    for s, part in enumerate(parts):
+        for ref in part.refs:
+            assert cluster.route_ref(ref) == s
+            assert slot_of_ref(ref, cluster.n_slots) in \
+                cluster.manifest["shards"][s]["slots"]
+
+
+# ------------------------------------------------------------------ conflicts
+class _CommitDuringReshard(InMemoryBlobStore):
+    """Deterministic interleave: the first time the reshard's staging
+    area is written to, a writer commits one sentinel doc to a source
+    shard — exactly the race the pre-publish recheck must catch."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.armed = False
+        self.fired = False
+
+    def put(self, name: str, data: bytes) -> None:
+        if self.armed and not self.fired and "/gen-" in name:
+            self.fired = True
+            victim = ShardedIndex.open(self, "cluster/race")
+            extra = write_corpus(self, "corpus/race-extra",
+                                 ["zzzsentinel error doc"], n_blobs=1)
+            routed = victim.partition(extra)
+            target = next(s for s, p in enumerate(routed) if p.refs)
+            w = victim.shard(target).writer()
+            w.append(routed[target])
+            w.commit()
+            victim.close()
+        super().put(name, data)
+
+
+def test_concurrent_reshard_vs_commit_fails_typed_then_retries():
+    store = _CommitDuringReshard()
+    docs = make_logs_like(120, seed=5)
+    corpus = write_corpus(store, "corpus/race", docs, n_blobs=2)
+    cluster = ShardedIndex.build(corpus, CFG, store, "cluster/race",
+                                 n_shards=3)
+    store.armed = True
+    names_before = None
+    with pytest.raises(ClusterConflict, match="refresh"):
+        names_before = set(store.list("cluster/race/"))
+        cluster.reshard(5)
+    assert store.fired
+    # the loser's staging blobs are gone; the racing commit's blobs stay
+    leftovers = set(store.list("cluster/race/")) - names_before
+    assert all("/gen-" not in n for n in leftovers)
+    store.armed = False
+
+    # CAS loser retries: refresh picks up the committed shard generation
+    cluster.refresh()
+    cluster.reshard(5)
+    assert cluster.n_shards == 5
+    cs = cluster.searcher()
+    res = cs.query_batch(["zzzsentinel"])[0]
+    assert res.texts == ["zzzsentinel error doc"]
+    cs.close()
+
+
+class _CommitAtPublish(InMemoryBlobStore):
+    """Worst-case interleave: the racing commit lands AFTER the
+    pre-publish recheck, at the very CAS that publishes the new cluster
+    generation — the one window the recheck cannot see."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.armed = False
+        self.fired = False
+
+    def put_if_absent(self, name: str, data: bytes) -> bool:
+        if self.armed and not self.fired and "/cluster-" in name:
+            self.fired = True
+            victim = ShardedIndex.open(self, "cluster/win")
+            extra = write_corpus(self, "corpus/win-extra",
+                                 ["zzzwindow error doc"], n_blobs=1)
+            routed = victim.partition(extra)
+            target = next(s for s, p in enumerate(routed) if p.refs)
+            w = victim.shard(target).writer()
+            w.append(routed[target])
+            w.commit()
+            victim.close()
+        return super().put_if_absent(name, data)
+
+
+def test_commit_in_recheck_cas_window_is_reapplied():
+    store = _CommitAtPublish()
+    docs = make_logs_like(120, seed=6)
+    corpus = write_corpus(store, "corpus/win", docs, n_blobs=2)
+    cluster = ShardedIndex.build(corpus, CFG, store, "cluster/win",
+                                 n_shards=3)
+    store.armed = True
+    cluster.reshard(5)               # publish succeeds, then repairs
+    assert store.fired
+    store.armed = False
+    cs = cluster.searcher()
+    res = cs.query_batch(["zzzwindow"])[0]
+    assert res.texts == ["zzzwindow error doc"]
+    cs.close()
+    # a fresh open of the published generation serves it too
+    reopened = ShardedIndex.open(store, "cluster/win")
+    cs = reopened.searcher()
+    assert cs.query_batch(["zzzwindow"])[0].texts == \
+        ["zzzwindow error doc"]
+    cs.close()
+    reopened.close()
+
+
+def test_cluster_append_routes_and_materializes_empty_slots():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(12, seed=3)
+    corpus = write_corpus(store, "corpus/ap", docs, n_blobs=1)
+    cluster = ShardedIndex.build(corpus, CFG, store, "cluster/ap",
+                                 n_shards=16)
+    empty = [s for s, idx in enumerate(cluster.shards) if idx is None]
+    assert empty
+    # enough new docs to hit at least one previously-empty slot
+    extra = write_corpus(store, "corpus/ap-extra",
+                         [f"apdoc{i} error new" for i in range(40)],
+                         n_blobs=1)
+    gen_before = cluster.generation
+    cluster.append(extra)
+    assert any(cluster.shards[s] is not None for s in empty)
+    assert cluster.generation == gen_before + 1  # slots materialized
+    cs = cluster.searcher()
+    res = cs.query_batch(["apdoc3"])[0]
+    assert res.texts == ["apdoc3 error new"]
+    cs.close()
+
+
+def test_append_on_stale_handle_fails_typed():
+    store = InMemoryBlobStore()
+    _corpus, cluster, _expect = _fixture(store, n_docs=150,
+                                         prefix="cluster/st-ap")
+    stale = ShardedIndex.open(store, "cluster/st-ap")
+    cluster.reshard(2)
+    extra = write_corpus(store, "corpus/st-ap-x", ["zzzstale error"],
+                         n_blobs=1)
+    # a stale handle would commit into the superseded shard set, where
+    # current readers never look and GC will delete — typed instead
+    with pytest.raises(ClusterConflict, match="refresh"):
+        stale.append(extra)
+    cluster.append(extra)                 # the current handle works
+    cs = cluster.searcher()
+    assert cs.query_batch(["zzzstale"])[0].texts == ["zzzstale error"]
+    cs.close()
+
+
+def test_append_retry_is_idempotent():
+    store = InMemoryBlobStore()
+    _corpus, cluster, _expect = _fixture(store, n_docs=150,
+                                         prefix="cluster/idem")
+    extra = write_corpus(store, "corpus/idem-x",
+                         [f"idemdoc{i} error" for i in range(6)],
+                         n_blobs=1)
+    cluster.append(extra)
+    cluster.append(extra)                 # the documented conflict-retry
+    cs = cluster.searcher()
+    res = cs.query_batch(["idemdoc3"])[0]
+    assert res.texts == ["idemdoc3 error"]   # no duplicates
+    cs.close()
+    # the corpus maps carry each ref exactly once
+    all_refs = [r for idx in cluster.shards if idx is not None
+                for r in idx.corpus_refs()]
+    assert len(all_refs) == len(set(all_refs))
+
+
+def test_racing_publisher_fails_typed_and_cleans_staging():
+    store = InMemoryBlobStore()
+    _corpus, cluster, _expect = _fixture(store, prefix="cluster/cas")
+    # another publisher claims the next generation first
+    manifest = dict(cluster.manifest)
+    manifest["generation"] = cluster.generation + 1
+    store.put(_cluster_manifest_name("cluster/cas", cluster.generation + 1),
+              encode_cluster_manifest(manifest))
+    before = set(store.list("cluster/cas/"))
+    with pytest.raises(ClusterConflict):
+        cluster.reshard(2)
+    assert set(store.list("cluster/cas/")) == before
+
+
+# ------------------------------------------------------------------------ GC
+def _gc_roundtrip(store, prefix, expect, keep=1):
+    """Dry-run lists exactly the orphans; the real run deletes exactly
+    those and nothing else; the surviving cluster serves identically."""
+    dry = collect_cluster_garbage(store, prefix, keep=keep,
+                                  grace_s=0.0, dry_run=True)
+    assert isinstance(dry, GCReport) and dry.deleted == []
+    live = cluster_reachable_blobs(store, prefix, keep=keep)
+    assert set(dry.unreachable).isdisjoint(live)
+    assert set(dry.unreachable) | live >= set(store.list(f"{prefix}/"))
+
+    before = set(store.list(f"{prefix}/"))
+    real = collect_cluster_garbage(store, prefix, keep=keep,
+                                   grace_s=0.0)
+    assert real.deleted == dry.unreachable
+    assert real.bytes_reclaimed == dry.bytes_reclaimed > 0
+    assert before - set(store.list(f"{prefix}/")) == set(real.deleted)
+
+    reopened = ShardedIndex.open(store, prefix)
+    cs = reopened.searcher()
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+    reopened.close()
+
+
+def test_collect_garbage_after_reshard_sim_store():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, prefix="cluster/gc")
+    cluster.reshard(2)
+    cluster.reshard(5)
+    _gc_roundtrip(store, "cluster/gc", expect, keep=1)
+
+
+def test_collect_garbage_after_reshard_disk_store(tmp_path):
+    store = LocalBlobStore(str(tmp_path))
+    _corpus, cluster, expect = _fixture(store, n_docs=200,
+                                        prefix="cluster/gcd")
+    cluster.reshard(2)
+    _gc_roundtrip(store, "cluster/gcd", expect, keep=1)
+
+
+def test_gc_keeps_latest_k_generations_openable():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, prefix="cluster/gk")
+    cluster.reshard(2)
+    cluster.reshard(6)
+    cluster.reshard(3)                       # generations 1..4
+    collect_cluster_garbage(store, "cluster/gk", keep=2, grace_s=0.0)
+    for gen in (3, 4):                       # the kept window
+        c = ShardedIndex.open(store, "cluster/gk", generation=gen)
+        cs = c.searcher()
+        assert _flat(cs.query_batch(QUERIES)) == expect
+        cs.close()
+    with pytest.raises(KeyError):            # collected manifest
+        ShardedIndex.open(store, "cluster/gk", generation=1)
+
+
+def test_gc_grace_window_spares_young_blobs():
+    store = InMemoryBlobStore()
+    _corpus, cluster, _expect = _fixture(store, n_docs=150,
+                                         prefix="cluster/gw")
+    cluster.reshard(2)
+    # everything was written moments ago: a 1-hour grace spares it all
+    rep = collect_cluster_garbage(store, "cluster/gw", keep=1,
+                                  grace_s=3600.0)
+    assert rep.deleted == [] and rep.kept_grace == rep.unreachable
+    # same sweep evaluated an hour later deletes it
+    rep2 = collect_cluster_garbage(store, "cluster/gw", keep=1,
+                                   grace_s=3600.0,
+                                   now=time.time() + 7200.0)
+    assert rep2.deleted == rep.unreachable and rep2.kept_grace == []
+
+
+def test_index_level_gc_after_merge():
+    store = InMemoryBlobStore()
+    docs = make_logs_like(150, seed=9)
+    corpus = write_corpus(store, "corpus/igc", docs, n_blobs=2)
+    idx = Index.build(corpus, CFG, store, "index/igc")
+    extra = write_corpus(store, "corpus/igc-extra",
+                         make_logs_like(120, seed=10), n_blobs=1)
+    w = idx.writer()
+    w.append(extra)
+    w.commit()
+    expect = _flat([idx.searcher().query("error")])
+    w.merge()                                # gen 3: fresh base-00000003
+    assert _flat([idx.searcher().query("error")]) == expect
+
+    dry = collect_garbage(store, "index/igc", keep=1, grace_s=0.0,
+                          dry_run=True)
+    # the pre-merge segment is now unreachable; the root-layout base is
+    # still reachable through older... no: keep=1 keeps only gen 3, whose
+    # base is base-00000003 — the root base and the segment are garbage
+    assert any("/seg-" in n for n in dry.unreachable)
+    real = collect_garbage(store, "index/igc", keep=1, grace_s=0.0)
+    assert real.deleted == dry.unreachable
+    assert _flat([Index.open(store, "index/igc").searcher().query("error")]) \
+        == expect
+    # reachability helper agrees with what survived under the prefix
+    # (the root set also lists corpus blobs, which live outside it)
+    assert set(store.list("index/igc/")) == \
+        {n for n in reachable_blobs(store, "index/igc", keep=1)
+         if n.startswith("index/igc/")}
+
+
+# --------------------------------------------------------------- property test
+@settings(max_examples=5, deadline=None)
+@given(st.data())
+def test_gc_never_deletes_blobs_reachable_from_latest_k(data):
+    """Random build/commit/reshard/split/merge histories: after a real
+    GC sweep with keep=K, the latest K cluster generations still open
+    and answer byte-identically to their pre-GC selves."""
+    store = InMemoryBlobStore()
+    docs = make_logs_like(60, seed=21)
+    corpus = write_corpus(store, "corpus/prop", docs, n_blobs=2)
+    cfg = BuilderConfig(B=600, F0=1.0)
+    cluster = ShardedIndex.build(corpus, cfg, store, "cluster/prop",
+                                 n_shards=2, n_slots=4)
+    n_ops = data.draw(st.integers(min_value=1, max_value=4))
+    extra_i = 0
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(
+            ["commit", "merge", "reshard", "split", "merge_shards"]))
+        try:
+            if op == "commit":
+                extra_i += 1
+                extra = write_corpus(
+                    store, f"corpus/prop-x{extra_i}",
+                    [f"xdoc{extra_i} error prop"], n_blobs=1)
+                routed = cluster.partition(extra)
+                target = next(s for s, p in enumerate(routed) if p.refs)
+                w = cluster.shard(target).writer()
+                w.append(routed[target])
+                w.commit()
+            elif op == "merge":
+                s = data.draw(st.integers(min_value=0,
+                                          max_value=cluster.n_shards - 1))
+                if cluster.shards[s] is not None:
+                    cluster.shard(s).writer().merge()
+            elif op == "reshard":
+                m = data.draw(st.integers(min_value=1, max_value=4))
+                cluster.reshard(m, n_slots=4)
+            elif op == "split":
+                s = data.draw(st.integers(min_value=0,
+                                          max_value=cluster.n_shards - 1))
+                if len(cluster.manifest["shards"][s]["slots"]) >= 2:
+                    cluster.split(s)
+            elif op == "merge_shards" and cluster.n_shards >= 2:
+                a = data.draw(st.integers(min_value=0,
+                                          max_value=cluster.n_shards - 2))
+                cluster.merge_shards(a, a + 1)
+        except IndexError:
+            pass                               # drew an empty shard slot
+
+    keep = data.draw(st.integers(min_value=1, max_value=2))
+    latest = cluster.generation
+    kept_gens = [g for g in range(max(1, latest - keep + 1), latest + 1)]
+    before = {}
+    for g in kept_gens:
+        c = ShardedIndex.open(store, "cluster/prop", generation=g)
+        cs = c.searcher()
+        before[g] = _flat(cs.query_batch(["error", "prop"]))
+        cs.close()
+
+    collect_cluster_garbage(store, "cluster/prop", keep=keep,
+                            grace_s=0.0)
+
+    for g in kept_gens:
+        c = ShardedIndex.open(store, "cluster/prop", generation=g)
+        cs = c.searcher()
+        assert _flat(cs.query_batch(["error", "prop"])) == before[g]
+        cs.close()
