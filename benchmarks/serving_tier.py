@@ -1,12 +1,20 @@
 """Serving-tier benchmark: scatter-gather + micro-batched load curves.
 
-Three scenarios over one sharded cluster (4 doc-hash shards, each shard
-on its own simulated VM↔storage link with an independent virtual clock):
+Five scenarios over one sharded cluster (4 doc-hash shards unless the
+scenario reshards, each shard on its own simulated VM↔storage link with
+an independent virtual clock):
 
   scatter_gather — one 32-query burst executed twice on identical clock
       seeds: concurrently (cluster wall = slowest shard) vs the serial
       per-shard loop (wall = sum of shards). Results asserted
       byte-identical to the unsharded index over the same corpus.
+
+  fused_budget — the same burst at 16 (and, full run, 64) doc-hash
+      shards through the cluster-fused combine kernel, `budget="global"`
+      (Eq. 6 over cluster-wide candidate counts, ~k docs total) vs
+      `budget="per_shard"` (independent Eq. 6 per shard, ~n_shards·k).
+      Byte-identical results are load-bearing; the payoff is the
+      round-2 bytes reduction, which grows with shard count.
 
   load_curves — an **open-loop Poisson** arrival process offered to the
       micro-batching frontend model at several QPS levels × batching
@@ -74,7 +82,7 @@ def _fixture():
     for i, d in enumerate(docs):
         for w in distinct_words(d):
             truth.setdefault(w, set()).add(i)
-    return store, docs, truth, mono, cluster
+    return store, docs, corpus, truth, mono, cluster
 
 
 def _workload(truth) -> list:
@@ -138,6 +146,62 @@ def _scatter_scenario(store, cluster, mono, queries) -> dict:
         "identical_to_unsharded": _identical(mono_res, conc_res)
         and _identical(mono_res, serial_res),
     }
+
+
+# ---------------------------------------------------------- fused + budgeted
+def _fused_budget_scenario(store, corpus, cfg, mono, queries,
+                           shard_counts: list[int], k: int = 10) -> dict:
+    """Cluster-fused combine + global top-K sampling budget (Eq. 6).
+
+    For each shard count: the same burst under `budget="global"`
+    (quota allocation from the fused kernel's per-shard candidate
+    counts, ~k docs cluster-wide) vs `budget="per_shard"` (independent
+    Eq. 6 per shard, ~n_shards·k docs). `identical_results` is the
+    load-bearing bit — the budget may only change how many bytes round
+    2 moves, never which documents win. A full (non-top-K) fused burst
+    at the first shard count is checked byte-identical to the unsharded
+    index, covering the fused combine itself."""
+    mono_res = mono.searcher(
+        transport=SimCloudTransport(SimCloudStore(store, seed=91))
+    ).query_batch(queries)
+    runs = []
+    fused_identical = None
+    for n_shards in shard_counts:
+        cluster = ShardedIndex.build(corpus, cfg, store,
+                                     f"cluster/fb{n_shards}",
+                                     n_shards=n_shards)
+        cs = cluster.searcher(replica_sources=[_sim_sources(store, 300)],
+                              fused=True)
+        if fused_identical is None:
+            full = cs.query_batch(queries)
+            fused_identical = _identical(mono_res, full)
+
+        def leg(budget):
+            res = cs.query_batch(queries, top_k=k, budget=budget)
+            rep = cs.last_scatter
+            return res, {
+                "round2_bytes": sum(rep.round2_bytes),
+                "round2_requests": sum(rep.round2_requests),
+                "bytes_per_query": sum(rep.round2_bytes) / len(queries),
+                "requests_per_query": sum(rep.round2_requests)
+                / len(queries),
+                "wall_ms": rep.wall_s * 1e3,
+                "shard_candidates": rep.shard_candidates,
+            }
+
+        global_res, global_row = leg("global")
+        per_shard_res, per_shard_row = leg("per_shard")
+        cs.close()
+        cluster.close()
+        runs.append({
+            "n_shards": n_shards, "top_k": k,
+            "global": global_row, "per_shard": per_shard_row,
+            "bytes_reduction": per_shard_row["round2_bytes"]
+            / max(global_row["round2_bytes"], 1),
+            "identical_results": _identical(global_res, per_shard_res),
+        })
+    return {"n_queries": len(queries), "top_k": k, "runs": runs,
+            "fused_full_identical_to_unsharded": fused_identical}
 
 
 # ------------------------------------------------------------- hedged replicas
@@ -351,17 +415,22 @@ def _reshard_gc_scenario(store, queries, m: int = 8) -> dict:
 
 # ------------------------------------------------------------------- plumbing
 def run(smoke: bool = False) -> dict:
-    store, _docs, truth, mono, cluster = _fixture()
+    store, _docs, corpus, truth, mono, cluster = _fixture()
     queries = _workload(truth)
     if smoke:
         offered, windows, n_requests, rounds = [30.0], \
             [0.0, 0.01, 0.04], 48, 3
+        fused_shards = [16]
     else:
         offered, windows, n_requests, rounds = [15.0, 45.0, 120.0], \
             [0.0, 0.01, 0.04], 200, 10
+        fused_shards = [16, 64]
 
     scenario = {
         "scatter_gather": _scatter_scenario(store, cluster, mono, queries),
+        "fused_budget": _fused_budget_scenario(store, corpus,
+                                               cluster.config, mono,
+                                               queries, fused_shards),
         "load_curves": _load_scenario(store, cluster, queries, offered,
                                       windows, n_requests),
         "hedged_replicas": _hedged_scenario(store, cluster, queries,
@@ -391,6 +460,15 @@ def bench_serving_tier():
     yield row("serving_tier/scatter_serial_wall",
               sg["serial_wall_ms"] * 1e3,
               f"speedup={sg['speedup']:.2f}x")
+    fb = scenario["fused_budget"]
+    for r in fb["runs"]:
+        yield row(f"serving_tier/fused_bytes_per_query_s{r['n_shards']}",
+                  r["global"]["bytes_per_query"],
+                  f"reduction={r['bytes_reduction']:.2f}x"
+                  f";identical={r['identical_results']}")
+        yield row(f"serving_tier/fused_reqs_per_query_s{r['n_shards']}",
+                  r["global"]["requests_per_query"],
+                  f"per_shard={r['per_shard']['requests_per_query']:.1f}")
     for curve in scenario["load_curves"]["curves"]:
         for pt in curve["points"]:
             yield row(

@@ -219,10 +219,12 @@ class MultiSegmentSearcher:
 
     def query_batch(self, queries: list[Query | str],
                     top_k: int | None = None, hedge: bool = False,
-                    impl: str = "sorted") -> list[QueryResult]:
+                    impl: str = "sorted",
+                    batch_stats=None) -> list[QueryResult]:
         jobs = plan_batch(queries, units=tuple(self.units), top_k=top_k)
         return execute_jobs(self.units, jobs, self._fetcher,
-                            hedge=hedge, impl=impl)
+                            hedge=hedge, impl=impl,
+                            batch_stats=batch_stats)
 
     def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
         return execute_jobs(self.units,

@@ -576,6 +576,145 @@ def combine_planned(plans: list[PhysicalPlan],
     return out  # type: ignore[return-value]
 
 
+def combine_cluster_planned(plans_by_group: list[list[PhysicalPlan]],
+                            per_words_by_group: list[list[dict]],
+                            is_common_by_group: list[Callable[[str], bool]],
+                            interpret: bool = True,
+                            ) -> tuple[list[list[tuple[np.ndarray,
+                                                       np.ndarray]]],
+                                       np.ndarray]:
+    """Evaluate every (shard unit, query) candidate algebra in ONE fused
+    Pallas call (`kernels.intersect.combine_cluster`).
+
+    Group g is one shard unit: `plans_by_group[g][q]`,
+    `per_words_by_group[g][q]`, and `is_common_by_group[g]` follow
+    `combine_planned`'s bitmap path per group, but instead of one
+    `combine_batch` launch per unit the whole cluster's programs run on
+    a single (shard, query, tile) grid. Returns `(results, counts)`:
+    `results[g][q]` is the sorted `(keys, lengths)` candidate pair and
+    `counts` a (G, Q) int64 array of per-(group, query) candidate
+    totals — exactly the round-1 statistics `shard_quotas` consumes.
+    """
+    from ..kernels.intersect import (combine_cluster, pack_cluster_programs,
+                                     postings_to_bitmap_batch)
+
+    G = len(plans_by_group)
+    Q = len(plans_by_group[0]) if G else 0
+    if not G or not Q:
+        return [[] for _ in range(G)], np.zeros((G, Q), dtype=np.int64)
+    compiled = [[_compile_steps(plans_by_group[g][q],
+                                per_words_by_group[g][q],
+                                is_common_by_group[g])
+                 for q in range(Q)] for g in range(G)]
+    universes: list[list[np.ndarray | None]] = \
+        [[None] * Q for _ in range(G)]
+    rows: list[list[list[np.ndarray]]] = [[[] for _ in range(Q)]
+                                          for _ in range(G)]
+    programs: list[list[list[tuple[int, int, int]]]] = \
+        [[[] for _ in range(Q)] for _ in range(G)]
+    for g in range(G):
+        for q in range(Q):
+            leaves, steps = compiled[g][q]
+            keys_list = [k for k, _l in leaves]
+            uni = np.unique(np.concatenate(keys_list)) if keys_list else \
+                np.empty(0, np.uint64)
+            if not len(uni):
+                # placeholder block: layer 0 of the zero-filled tensor is
+                # all-zero, so AND(0, 0) evaluates to the empty set the
+                # grid still needs a program for
+                programs[g][q] = [(OP_AND, 0, 0)]
+                continue
+            universes[g][q] = uni
+            rows[g][q] = [np.searchsorted(uni, k).astype(np.uint32)
+                          for k in keys_list]
+            programs[g][q] = steps
+    n_bits = max((len(u) for row in universes for u in row
+                  if u is not None), default=1)
+    L_max = max(max((len(r) for r in row), default=0)
+                for row in rows) or 1
+    W = (n_bits + 31) // 32
+    bitmaps = np.zeros((G, Q, L_max, W), dtype=np.uint32)
+    padded: list[list[list[tuple[int, int, int]]]] = \
+        [[[] for _ in range(Q)] for _ in range(G)]
+    for g in range(G):
+        for q in range(Q):
+            posts = rows[g][q]
+            if posts:
+                bitmaps[g, q, :len(posts)] = postings_to_bitmap_batch(
+                    [posts], n_bits)[0, :len(posts)]
+                # re-point step slots at the padded layer count
+                shift = L_max - len(posts)
+                padded[g][q] = [(op,
+                                 a + shift if a >= len(posts) else a,
+                                 b + shift if b >= len(posts) else b)
+                                for op, a, b in programs[g][q]]
+            else:
+                padded[g][q] = programs[g][q]      # zero-layer identity
+    progs = pack_cluster_programs(padded, L_max)
+    inter, counts = combine_cluster(bitmaps, progs, interpret=interpret)
+    inter = np.asarray(inter)
+    results: list[list[tuple[np.ndarray, np.ndarray]]] = \
+        [[(np.empty(0, np.uint64), np.empty(0, np.uint64))] * Q
+         for _ in range(G)]
+    for g in range(G):
+        for q in range(Q):
+            uni = universes[g][q]
+            if uni is None:
+                continue
+            bits = np.unpackbits(inter[g, q].view(np.uint8),
+                                 bitorder="little")
+            sel = np.flatnonzero(bits[:len(uni)])
+            keys = uni[sel].astype(np.uint64, copy=False)
+            leaves, _steps = compiled[g][q]
+            results[g][q] = (keys, _recover_lengths(keys, leaves))
+    return results, np.asarray(counts).astype(np.int64)
+
+
+# ----------------------------------------------------- global top-K budget
+def shard_quotas(counts: list[int], k: int, F0s: list[float],
+                 delta: float = 1e-6) -> list[int]:
+    """Global top-K sampling budget (paper Eq. 6, applied cluster-wide).
+
+    `counts[g]` is group g's round-1 candidate total R_g; `F0s[g]` its
+    index unit's expected false-positive count. Per-shard sampling
+    evaluates Eq. 6 independently per group and fetches ~N·k documents
+    across N groups; here Eq. 6 is evaluated ONCE over the pooled
+    candidates — R = ΣR_g, F0 = ΣF0_g (each unit contributes ~F0_g of
+    the cluster's false positives, so they pool additively) — and the
+    global R_K is split into per-group quotas proportional to R_g by
+    deterministic largest-remainder rounding, capped at R_g, with a
+    minimum of 1 for any group holding candidates (a tiny shard can
+    never be starved out of a top-K it actually holds).
+    """
+    from ..core.topk import sample_size
+
+    counts = [int(c) for c in counts]
+    total = sum(counts)
+    if total == 0:
+        return [0] * len(counts)
+    rk = min(sample_size(total, k, float(sum(F0s)), delta), total)
+    exact = [rk * c / total for c in counts]
+    quotas = [min(int(x), c) for x, c in zip(exact, counts)]
+    for g, c in enumerate(counts):
+        if c and not quotas[g]:
+            quotas[g] = 1
+    short = rk - sum(quotas)
+    if short > 0:
+        order = sorted(range(len(counts)),
+                       key=lambda g: (-(exact[g] - int(exact[g])), g))
+        while short > 0:
+            progressed = False
+            for g in order:
+                if short > 0 and quotas[g] < counts[g]:
+                    quotas[g] += 1
+                    short -= 1
+                    progressed = True
+            if not progressed:
+                break
+    return quotas
+
+
 __all__ = ["PureNegationError", "GramlessIndexError", "PhysicalPlan",
            "Job", "DocContent", "make_job", "plan_batch", "physical_plan",
-           "matches", "regex_prefilter", "combine_planned"]
+           "matches", "regex_prefilter", "combine_planned",
+           "combine_cluster_planned", "shard_quotas"]

@@ -91,6 +91,34 @@ class QueryResult:
 
 
 @dataclass
+class BatchStats:
+    """Whole-batch fetch accounting, each shared round counted ONCE.
+
+    `execute_jobs` copies every shared fetch round's `FetchStats` into
+    each member job's `QueryStats` (a job's latency IS the round it
+    waited on), so summing per-job stats overcounts bytes and requests
+    N-fold for an N-job batch. Callers that need the true wire totals —
+    the serving tier's per-shard byte accounting — pass one of these
+    through `query_batch(batch_stats=...)` instead."""
+
+    lookup: FetchStats = field(default_factory=FetchStats)
+    docs: FetchStats = field(default_factory=FetchStats)
+    n_candidates: int = 0
+
+
+def topk_order(keys: np.ndarray) -> np.ndarray:
+    """Deterministic §IV-D sampling permutation over a candidate array.
+
+    Seeded by the first (lowest) candidate key, so every path that holds
+    the same candidate set — serial, batched, or the cluster-fused
+    combine — draws the SAME permutation; the byte-identity guarantee
+    between budgeted and unbudgeted top-K fetches rests on this being
+    shared."""
+    rng = np.random.default_rng(int(keys[0]) & 0xFFFF)
+    return rng.permutation(len(keys))
+
+
+@dataclass
 class _LookupPlan:
     """Round-1 fetch plan: unique words -> unique superpost requests."""
 
@@ -333,7 +361,9 @@ class Searcher:
 
     def query_batch(self, queries: list[Query | str],
                     top_k: int | None = None, hedge: bool = False,
-                    impl: str = "sorted") -> list[QueryResult]:
+                    impl: str = "sorted",
+                    batch_stats: BatchStats | None = None,
+                    ) -> list[QueryResult]:
         """Execute a whole batch of queries in two shared fetch rounds.
 
         Accepts any query-language tree (Term/And/Or/Not/Phrase/Regex,
@@ -347,12 +377,16 @@ class Searcher:
         Pallas kernels (`kernels/intersect`).
         """
         jobs = plan_batch(queries, units=(self,), top_k=top_k)
-        return self._execute_jobs(jobs, hedge=hedge, impl=impl)
+        return self._execute_jobs(jobs, hedge=hedge, impl=impl,
+                                  batch_stats=batch_stats)
 
     def _execute_jobs(self, jobs: list[_Job], hedge: bool = False,
-                      impl: str = "sorted") -> list[QueryResult]:
+                      impl: str = "sorted",
+                      batch_stats: BatchStats | None = None,
+                      ) -> list[QueryResult]:
         return execute_jobs([self], jobs, self._fetcher,
-                            hedge=hedge, impl=impl)
+                            hedge=hedge, impl=impl,
+                            batch_stats=batch_stats)
 
     def regex_query(self, pattern: str, ngram: int = 3) -> QueryResult:
         """RegEx search via n-gram prefilter (paper §IV-F).
@@ -447,11 +481,14 @@ def lookup_units(units: list[Searcher], queries: list[Query | str],
 
 def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
                  hedge: bool = False, impl: str = "sorted",
+                 batch_stats: BatchStats | None = None,
                  ) -> list[QueryResult]:
     """Run a job batch over base + segments in two shared fetch rounds."""
     n_units = len(units)
     outs_per_unit, lstats = lookup_units(
         units, [j.lookup_q for j in jobs], fetcher, hedge=hedge)
+    if batch_stats is not None:
+        batch_stats.lookup.add(lstats.lookup)
     combined = [_combine_jobs(jobs, outs, impl, unit)
                 for unit, outs in zip(units, outs_per_unit)]
 
@@ -468,6 +505,8 @@ def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
     for j, job in enumerate(jobs):
         total = sum(len(combined[u][j][0]) for u in range(n_units))
         stats_of[j].n_candidates = total
+        if batch_stats is not None:
+            batch_stats.n_candidates += total
         want = total
         if job.top_k is not None and total:
             want = job.top_k
@@ -477,8 +516,7 @@ def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
             order = np.arange(len(keys))
             if job.top_k is not None and len(keys):
                 rk = sample_size(len(keys), job.top_k, unit.F0, job.delta)
-                rng = np.random.default_rng(int(keys[0]) & 0xFFFF)
-                order = rng.permutation(len(keys))
+                order = topk_order(keys)
                 sampled[u][j] = (keys[order[:rk]], lengths[order[:rk]])
             else:
                 sampled[u][j] = (keys, lengths)
@@ -495,8 +533,10 @@ def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
     live = [j for j in range(len(jobs)) if results[j] is None]
     unit_job_refs = [{j: units[u]._refs(*sampled[u][j]) for j in live}
                      for u in range(n_units)]
+    batch_docs = batch_stats.docs if batch_stats is not None else None
     texts_of, refs_of = _fetch_and_filter_units(
-        units, jobs, unit_job_refs, stats_of, fetcher)
+        units, jobs, unit_job_refs, stats_of, fetcher,
+        batch_docs=batch_docs)
 
     # --- Eq. 6 failure (prob < delta) or tiny candidate set: fall back
     # to fetching the remainder — again ONE batch for every unit of every
@@ -523,7 +563,7 @@ def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
                                                     lengths[rest])
     if any(fallback):
         t2, r2 = _fetch_and_filter_units(units, jobs, fallback, stats_of,
-                                         fetcher)
+                                         fetcher, batch_docs=batch_docs)
         for u in range(n_units):
             for j in fallback[u]:
                 texts_of[u][j] += t2[u][j]
@@ -584,6 +624,7 @@ def _merge_results(refs_lists: list[list[DocRef]],
 def _fetch_and_filter_units(units: list[Searcher], jobs: list[_Job],
                             unit_job_refs: list[dict[int, list[DocRef]]],
                             stats_of: list[QueryStats], fetcher: _Fetcher,
+                            batch_docs: FetchStats | None = None,
                             ) -> tuple[list[dict[int, list[str]]],
                                        list[dict[int, list[DocRef]]]]:
     """Round 2 for many jobs across units: documents wanted by several
@@ -605,6 +646,8 @@ def _fetch_and_filter_units(units: list[Searcher], jobs: list[_Job],
     if not requests:
         return texts_of, refs_of
     payloads, fstats = fetcher.fetch_ranges(requests)
+    if batch_docs is not None:
+        batch_docs.add(fstats)
     # a job's doc round is accounted once, no matter how many units fed it
     rounds_jobs = sorted({j for refs_by_job in unit_job_refs
                           for j, refs in refs_by_job.items() if refs})

@@ -6,7 +6,7 @@ On TPU we tile the document axis through VMEM in (8, 128)-aligned blocks
 and fuse AND-reduce with population count in one pass, so candidate
 counting (needed by top-K sampling, Eq. 6) costs no extra HBM traffic.
 
-Three entry points:
+Four entry points:
 
   * `intersect_pallas`  — one query: bitmaps (L, W), 1-D grid over W tiles;
   * `intersect_batch_pallas` — a whole query batch: bitmaps (Q, L, W),
@@ -19,7 +19,15 @@ Three entry points:
     tree), evaluated slot-machine style per document tile. Programs are
     padded to one static step count; padding steps re-AND the running
     result with itself (the identity), so raggedness costs a few no-op
-    vector ops, never a second `pallas_call`.
+    vector ops, never a second `pallas_call`;
+  * `combine_cluster_pallas` — the serving-tier generalization: a whole
+    CLUSTER's combine work — every (shard, query) pair carries its own
+    program over its own layers — runs as ONE `pallas_call` over a
+    (shard, query, tile) grid, instead of one host-threaded program
+    launch per shard. The per-(shard, query) candidate counts it emits
+    are exactly the round-1 statistics the global top-K sampling budget
+    (paper Eq. 6) needs, so the scatter-gather path gets them with zero
+    extra passes.
 
 Layout: bitmaps (… , L, W) uint32 where W = n_docs/32, padded to the tile.
 Each program streams an (L, TILE) block HBM→VMEM, writes the (TILE,)
@@ -146,6 +154,67 @@ def combine_batch_pallas(bitmaps: jnp.ndarray, programs: jnp.ndarray,
         interpret=interpret,
     )(bitmaps, programs)
     return out[:, :W], jnp.sum(counts, axis=1, dtype=jnp.uint32)
+
+
+def _cluster_kernel(bm_ref, prog_ref, out_ref, cnt_ref):
+    """Evaluate one (shard, query) combine program on one document tile.
+
+    Identical slot machine to `_combine_kernel`, one more leading grid
+    axis: program (s, q, i) evaluates shard s's query-q program on its
+    i-th tile, so the whole cluster's candidate combination is a single
+    fused launch instead of one host-driven `pallas_call` per shard.
+    """
+    block = bm_ref[...]                     # (1, 1, L, TILE) uint32
+    prog = prog_ref[...]                    # (1, 1, S, 3) int32
+    slots = block[0, 0]                     # (L, TILE)
+    for s in range(prog.shape[2]):          # S static — unrolled program
+        a = jnp.take(slots, prog[0, 0, s, 1], axis=0)
+        b = jnp.take(slots, prog[0, 0, s, 2], axis=0)
+        op = prog[0, 0, s, 0]
+        r = jnp.where(op == OP_AND, jnp.bitwise_and(a, b),
+                      jnp.where(op == OP_OR, jnp.bitwise_or(a, b),
+                                jnp.bitwise_and(a, jnp.bitwise_not(b))))
+        slots = jnp.concatenate([slots, r[None]], axis=0)
+    acc = slots[-1]
+    out_ref[...] = acc[None, None]
+    cnt_ref[...] = jnp.sum(_popcount_swar(acc),
+                           dtype=jnp.uint32)[None, None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def combine_cluster_pallas(bitmaps: jnp.ndarray, programs: jnp.ndarray,
+                           interpret: bool = True,
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """bitmaps: (G, Q, L, W) uint32, programs: (G, Q, S, 3) int32 →
+    (result bitmaps (G, Q, W), counts (G, Q)).
+
+    G indexes shard units, Q queries. Grid is (shard, query, tile): the
+    whole cluster's combine round — every shard's every query's boolean
+    program — runs in ONE fused pass; the (G, Q) candidate counts come
+    back for free (per-tile popcounts summed), feeding the Eq. 6 global
+    top-K sampling budget without a second reduction pass.
+    """
+    G, Q, L, W = bitmaps.shape
+    S = programs.shape[2]
+    pad = (-W) % TILE
+    if pad:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    Wp = W + pad
+    n_tiles = Wp // TILE
+    out, counts = pl.pallas_call(
+        _cluster_kernel,
+        grid=(G, Q, n_tiles),
+        in_specs=[pl.BlockSpec((1, 1, L, TILE),
+                               lambda g, q, i: (g, q, 0, i)),
+                  pl.BlockSpec((1, 1, S, 3),
+                               lambda g, q, i: (g, q, 0, 0))],
+        out_specs=[pl.BlockSpec((1, 1, TILE), lambda g, q, i: (g, q, i)),
+                   pl.BlockSpec((1, 1, 1), lambda g, q, i: (g, q, i))],
+        out_shape=[jax.ShapeDtypeStruct((G, Q, Wp), jnp.uint32),
+                   jax.ShapeDtypeStruct((G, Q, n_tiles), jnp.uint32)],
+        interpret=interpret,
+    )(bitmaps, programs)
+    return out[:, :, :W], jnp.sum(counts, axis=2, dtype=jnp.uint32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -6,8 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kernel import (OP_AND, OP_ANDNOT, OP_OR, combine_batch_pallas,
-                     intersect_batch_pallas, intersect_pallas)
-from .ref import combine_batch_ref, intersect_batch_ref, intersect_ref
+                     combine_cluster_pallas, intersect_batch_pallas,
+                     intersect_pallas)
+from .ref import (combine_batch_ref, combine_cluster_ref,
+                  intersect_batch_ref, intersect_ref)
 
 
 def postings_to_bitmap(postings: list[np.ndarray], n_docs: int) -> np.ndarray:
@@ -83,6 +85,24 @@ def pack_programs(programs: list[list[tuple[int, int, int]]],
     return out
 
 
+def pack_cluster_programs(programs: list[list[list[tuple[int, int, int]]]],
+                          n_layers: int) -> np.ndarray:
+    """Ragged per-(shard, query) programs → one (G, Q, S_max, 3) array.
+
+    `programs[g][q]` is shard-unit g's combine program for query q; all
+    groups must cover the same Q queries. Flattens through
+    `pack_programs` so every program is padded to the cluster-wide
+    S_max with the chained identity step (AND of the previous result
+    with itself) — zero-padding here would overwrite each result slot
+    with layer 0.
+    """
+    Q = len(programs[0])
+    if any(len(g) != Q for g in programs):
+        raise ValueError("all shard groups must carry the same Q queries")
+    flat = pack_programs([p for g in programs for p in g], n_layers)
+    return flat.reshape(len(programs), Q, flat.shape[1], 3)
+
+
 def combine_batch(bitmaps, programs, impl: str = "pallas",
                   interpret: bool = True):
     """Evaluate per-query AND/OR/ANDNOT programs over layered bitsets.
@@ -97,3 +117,21 @@ def combine_batch(bitmaps, programs, impl: str = "pallas",
     return combine_batch_pallas(bitmaps, jnp.asarray(programs,
                                                      dtype=jnp.int32),
                                 interpret=interpret)
+
+
+def combine_cluster(bitmaps, programs, impl: str = "pallas",
+                    interpret: bool = True):
+    """Evaluate a whole cluster's combine round in one fused call.
+
+    bitmaps: (G, Q, L, W) uint32 — axis 0 is the shard unit; programs:
+    (G, Q, S, 3) int32 (`pack_programs` per shard, padded to a common
+    S/L). Returns (result bitmaps (G, Q, W), counts (G, Q)) — the
+    counts are the per-(shard, query) candidate totals that drive the
+    global top-K sampling budget. impl: pallas | ref.
+    """
+    bitmaps = jnp.asarray(bitmaps, dtype=jnp.uint32)
+    if impl == "ref":
+        return combine_cluster_ref(bitmaps, programs)
+    return combine_cluster_pallas(bitmaps, jnp.asarray(programs,
+                                                       dtype=jnp.int32),
+                                  interpret=interpret)

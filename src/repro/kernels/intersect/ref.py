@@ -63,3 +63,20 @@ def combine_batch_ref(bitmaps: jnp.ndarray, programs,
         outs.append(slots[-1])
     out = jnp.stack(outs)
     return out, jnp.sum(popcount(out), axis=1, dtype=jnp.uint32)
+
+
+def combine_cluster_ref(bitmaps: jnp.ndarray, programs,
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for the cluster-fused program evaluator.
+
+    bitmaps: (G, Q, L, W) uint32 — shard-unit g's layered bitsets for
+    query q; programs: (G, Q, S, 3). Evaluates every (shard, query)
+    program independently (`combine_batch_ref` per shard) and returns
+    (result bitmaps (G, Q, W), counts (G, Q)).
+    """
+    outs, cnts = [], []
+    for g in range(bitmaps.shape[0]):
+        out, cnt = combine_batch_ref(bitmaps[g], programs[g])
+        outs.append(out)
+        cnts.append(cnt)
+    return jnp.stack(outs), jnp.stack(cnts)

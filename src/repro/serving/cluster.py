@@ -46,14 +46,17 @@ mutation. Superseded generations are reclaimed by
 from __future__ import annotations
 
 import hashlib
+import heapq
 import threading
 import time
 import uuid
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass, field, replace
 
 import msgpack
 
+from ..core.hashing import word_fingerprint
+from ..core.topk import sample_size
 from ..data.corpus import Corpus, DocRef
 from ..index.builder import BuilderConfig
 from ..index.lifecycle import (DEFAULT_GRACE_S, GCReport, Index,
@@ -61,9 +64,11 @@ from ..index.lifecycle import (DEFAULT_GRACE_S, GCReport, Index,
                                collect_garbage, latest_generation,
                                open_many, publish_generation,
                                reachable_blobs)
+from ..index.planner import (DocContent, combine_cluster_planned,
+                             physical_plan, plan_batch, shard_quotas)
 from ..index.query import Query, Regex
-from ..index.searcher import (QueryResult, QueryStats, Searcher,
-                              _merge_results)
+from ..index.searcher import (BatchStats, QueryResult, QueryStats, Searcher,
+                              _merge_results, lookup_units, topk_order)
 from ..storage.blobstore import RangeRequest
 from ..storage.cache import SuperpostCache
 from ..storage.simcloud import FetchStats
@@ -728,7 +733,8 @@ class ShardedIndex:
                  coalesce_gap: int | None = 4096,
                  replica_sources: list | None = None,
                  hedge_after_s: float | None = None,
-                 concurrent: bool = True) -> "ClusterSearcher":
+                 concurrent: bool = True,
+                 fused: bool = False) -> "ClusterSearcher":
         """Open a scatter-gather read session over all non-empty shards.
 
         `replica_sources` names the data plane(s): each entry serves one
@@ -805,7 +811,8 @@ class ShardedIndex:
                                concurrent=concurrent,
                                generation=self.reader_generation,
                                owned_transports=owned,
-                               init_stats=boot_stats)
+                               init_stats=boot_stats,
+                               fused=fused)
 
 
 # ================================================================ scatter-gather
@@ -827,7 +834,13 @@ class _Replica:
 
 @dataclass
 class ScatterReport:
-    """Accounting for one scatter-gather round (benchmarks read this)."""
+    """Accounting for one scatter-gather round (benchmarks read this).
+
+    The per-shard lists make the top-K budget decision observable:
+    `shard_candidates` are the round-1 candidate totals that fed the
+    quota computation, `round2_bytes`/`round2_requests` what the
+    resulting document round actually cost per shard on the wire (each
+    shared round counted once — never the per-job N-fold copies)."""
 
     shard_elapsed_s: list[float] = field(default_factory=list)
     replica_of: list[int] = field(default_factory=list)
@@ -836,6 +849,11 @@ class ScatterReport:
     concurrent: bool = True
     n_hedges_issued: int = 0
     n_hedge_wins: int = 0
+    fused: bool = False              # cluster-fused combine path?
+    budget: str | None = None        # "global" | "per_shard" | None
+    shard_candidates: list[int] = field(default_factory=list)
+    round2_bytes: list[int] = field(default_factory=list)
+    round2_requests: list[int] = field(default_factory=list)
 
 
 class ClusterSearcher:
@@ -852,11 +870,16 @@ class ClusterSearcher:
                  concurrent: bool = True,
                  generation: tuple = (),
                  owned_transports: list[StorageTransport] | None = None,
-                 init_stats: FetchStats | None = None) -> None:
+                 init_stats: FetchStats | None = None,
+                 fused: bool = False) -> None:
         assert shard_replicas, "need at least one non-empty shard"
         self.shard_replicas = shard_replicas
         self.hedge_after_s = hedge_after_s
         self.concurrent = concurrent
+        # default for query_batch(fused=None): run the cluster-fused
+        # combine + global top-K budget path instead of per-shard
+        # query_batch legs
+        self.fused = fused
         # generation pin for result caches (matches reader_generation of
         # the ShardedIndex that opened this session)
         self.generation = generation
@@ -935,28 +958,31 @@ class ClusterSearcher:
 
     # -- one shard --------------------------------------------------------
     def _run_on(self, replica: _Replica, queries, top_k, hedge, impl,
-                ) -> tuple[list[QueryResult], float]:
-        """Execute the batch on one replica; returns (results, elapsed).
+                ) -> tuple[list[QueryResult], float, BatchStats]:
+        """Execute the batch on one replica; returns (results, elapsed,
+        batch-level fetch stats).
 
         Elapsed is the replica's virtual-clock delta when simulated, real
         wall time otherwise."""
         clock = replica.sim_clock
         t0 = clock.clock_s if clock is not None else time.perf_counter()
+        bstats = BatchStats()
         try:
             out = replica.reader.query_batch(queries, top_k=top_k,
-                                             hedge=hedge, impl=impl)
+                                             hedge=hedge, impl=impl,
+                                             batch_stats=bstats)
         finally:
             self._release(replica)
         t1 = clock.clock_s if clock is not None else time.perf_counter()
-        return out, t1 - t0
+        return out, t1 - t0, bstats
 
     def _query_shard(self, replicas: list[_Replica], queries, top_k,
                      hedge, impl) -> tuple[list[QueryResult], float, int,
-                                           int, int]:
+                                           int, int, BatchStats]:
         """One shard's scatter leg: pick replica, run, hedge a straggler.
 
-        Returns (results, effective_elapsed, replica_idx, hedges, wins).
-        """
+        Returns (results, effective_elapsed, replica_idx, hedges, wins,
+        batch_stats)."""
         primary_i = self._pick_replica(replicas)
         primary = replicas[primary_i]
         threshold = self.hedge_after_s
@@ -970,8 +996,9 @@ class ClusterSearcher:
                                           top_k, hedge, impl)
             done, _ = wait([fut], timeout=threshold)
             if done:
-                out, _elapsed = fut.result()
-                return (out, time.perf_counter() - t0, primary_i, 0, 0)
+                out, _elapsed, bstats = fut.result()
+                return (out, time.perf_counter() - t0, primary_i, 0, 0,
+                        bstats)
             backup_i = self._pick_replica(replicas, exclude=primary_i)
             bfut = self._executor().submit(
                 self._run_on, replicas[backup_i], queries, top_k, hedge,
@@ -980,35 +1007,53 @@ class ClusterSearcher:
             winner = fut if fut in done else bfut
             loser = bfut if winner is fut else fut
             loser.add_done_callback(lambda f: f.exception())
-            out, _elapsed = winner.result()
+            out, _elapsed, bstats = winner.result()
             return (out, time.perf_counter() - t0,
                     backup_i if winner is bfut else primary_i, 1,
-                    1 if winner is bfut else 0)
+                    1 if winner is bfut else 0, bstats)
 
-        out, elapsed = self._run_on(primary, queries, top_k, hedge, impl)
+        out, elapsed, bstats = self._run_on(primary, queries, top_k,
+                                            hedge, impl)
         if threshold is not None and len(replicas) > 1 \
                 and elapsed > threshold:
             # simulated transports: the duplicate is issued AT the
             # threshold on the backup's own clock; the faster completion
             # wins (same math as transport-level hedging)
             backup_i = self._pick_replica(replicas, exclude=primary_i)
-            bout, belapsed = self._run_on(replicas[backup_i], queries,
-                                          top_k, hedge, impl)
+            bout, belapsed, bbstats = self._run_on(
+                replicas[backup_i], queries, top_k, hedge, impl)
             if threshold + belapsed < elapsed:
-                return (bout, threshold + belapsed, backup_i, 1, 1)
-            return (out, elapsed, primary_i, 1, 0)
-        return (out, elapsed, primary_i, 0, 0)
+                return (bout, threshold + belapsed, backup_i, 1, 1,
+                        bbstats)
+            return (out, elapsed, primary_i, 1, 0, bstats)
+        return (out, elapsed, primary_i, 0, 0, bstats)
 
     # -- queries ----------------------------------------------------------
     def query_batch(self, queries: list[Query | str],
                     top_k: int | None = None, hedge: bool = False,
-                    impl: str = "sorted") -> list[QueryResult]:
+                    impl: str = "sorted", fused: bool | None = None,
+                    budget: str = "global") -> list[QueryResult]:
         """Scatter the batch to every shard, gather, merge per query.
 
         Shards with distinct (or no) virtual clocks run concurrently —
         the round costs the slowest shard; shards sharing one simulated
         clock fall back to a deterministic sequential drive.
+
+        `fused=True` (default: the session's `fused` flag) switches to
+        the cluster-fused path: shards only run round 1, every (shard,
+        query) candidate combine executes in ONE Pallas launch on the
+        gather side, and round-2 document work scatters back out under a
+        top-K sampling `budget` — `"global"` evaluates Eq. 6 once over
+        the pooled cluster candidates (~k docs total), `"per_shard"`
+        evaluates it independently per shard unit (~N·k docs, the
+        unbudgeted baseline). Both budgets return byte-identical
+        results: the final top-K is always the first k accepted docs in
+        the canonical candidate order, and a completion round fetches
+        whatever the initial quota left unproven.
         """
+        fused = self.fused if fused is None else fused
+        if fused:
+            return self._query_batch_fused(queries, top_k, hedge, budget)
         concurrent = self.concurrent and self._independent_clocks()
         if concurrent and self.n_shards > 1:
             futs = [self._executor().submit(
@@ -1026,12 +1071,265 @@ class ClusterSearcher:
             serial_wall_s=sum(leg[1] for leg in legs),
             concurrent=concurrent,
             n_hedges_issued=sum(leg[3] for leg in legs),
-            n_hedge_wins=sum(leg[4] for leg in legs))
+            n_hedge_wins=sum(leg[4] for leg in legs),
+            shard_candidates=[leg[5].n_candidates for leg in legs],
+            round2_bytes=[int(leg[5].docs.bytes_fetched) for leg in legs],
+            round2_requests=[int(leg[5].docs.n_requests) for leg in legs])
         report.wall_s = max(report.shard_elapsed_s) if concurrent \
             else report.serial_wall_s
         self.last_scatter = report
         return [self._merge(j, [leg[0] for leg in legs], top_k, report)
                 for j in range(len(queries))]
+
+    # -- fused scatter-gather ----------------------------------------------
+    def _fused_round1(self, replica: _Replica, queries, top_k, hedge):
+        """Round-1 leg on one shard: plan against the shard's own units
+        and run the shared superpost round. No combine happens here —
+        the per-word postings travel to the gather side, where the whole
+        cluster's combine work runs as one fused kernel launch."""
+        clock = replica.sim_clock
+        t0 = clock.clock_s if clock is not None else time.perf_counter()
+        reader = replica.reader
+        units = reader.units if isinstance(reader, MultiSegmentSearcher) \
+            else [reader]
+        jobs = plan_batch(queries, units=tuple(units), top_k=top_k)
+        outs_per_unit, lstats = lookup_units(
+            units, [j.lookup_q for j in jobs], reader._fetcher,
+            hedge=hedge)
+        t1 = clock.clock_s if clock is not None else time.perf_counter()
+        return units, jobs, outs_per_unit, lstats, t1 - t0
+
+    def _fused_fetch(self, replica: _Replica, requests,
+                     ) -> tuple[list, FetchStats, float]:
+        """One round-2 leg: a raw batched document fetch on the shard's
+        own fetcher (documents are not cached, matching the single-index
+        round-2 path)."""
+        clock = replica.sim_clock
+        t0 = clock.clock_s if clock is not None else time.perf_counter()
+        payloads, fstats = replica.reader._fetcher.fetch_ranges(requests)
+        t1 = clock.clock_s if clock is not None else time.perf_counter()
+        return payloads, fstats, t1 - t0
+
+    @staticmethod
+    def _next_pending(st: dict, top_k: int | None) -> set:
+        """Completion step of the budget loop.
+
+        The final answer is defined as the first `top_k` ACCEPTED docs
+        in the canonical candidate order — a property of the candidate
+        sets, the verifier, and the shared §IV-D permutations alone, so
+        it is independent of whatever the initial quota policy selected
+        (this is what makes "global" and "per_shard" budgets
+        byte-identical). With k docs accepted, any unfetched candidate
+        ranked before the k-th accepted could still displace it — fetch
+        exactly those; with fewer than k accepted, fall back to the
+        unbudgeted fetch (everything left). Each branch strictly shrinks
+        the unproven set, so the loop terminates in <= 2 extra rounds
+        past the initial quota fetch."""
+        canon, fetched = st["canon"], st["fetched"]
+        if top_k is None:
+            return set()          # everything was selected up front
+        accepted = [i for i in canon if st["accepted"].get(i)]
+        if len(accepted) < top_k:
+            return {i for i in canon if i not in fetched}
+        threshold = st["prio"][accepted[top_k - 1]]
+        return {i for i in canon
+                if i not in fetched and st["prio"][i] < threshold}
+
+    def _query_batch_fused(self, queries, top_k, hedge, budget,
+                           ) -> list[QueryResult]:
+        """Phase-split scatter-gather: concurrent round-1 legs → ONE
+        cluster-fused combine → budgeted round-2 scatter → canonical
+        selection with a completion loop. See `query_batch`."""
+        if budget not in ("global", "per_shard"):
+            raise ValueError(
+                f"unknown budget policy {budget!r}: use 'global' or "
+                "'per_shard'")
+        if not queries:
+            return []
+        concurrent = self.concurrent and self._independent_clocks()
+        n_shards = self.n_shards
+        Q = len(queries)
+        picked: list[tuple[int, _Replica]] = []
+        for replicas in self.shard_replicas:
+            i = self._pick_replica(replicas)
+            picked.append((i, replicas[i]))
+        try:
+            # --- phase 1: per-shard superpost rounds (concurrent) -------
+            if concurrent and n_shards > 1:
+                futs = [self._executor().submit(
+                    self._fused_round1, r, queries, top_k, hedge)
+                    for _i, r in picked]
+                legs = [f.result() for f in futs]
+            else:
+                legs = [self._fused_round1(r, queries, top_k, hedge)
+                        for _i, r in picked]
+
+            # --- phase 2: ONE fused combine over (shard, query) ---------
+            # groups flatten every shard's units; group order is
+            # shard-major so group index breaks priority ties the same
+            # way the non-fused merge breaks shard ties
+            groups: list[tuple[int, Searcher]] = []
+            plans_by_group, words_by_group, common_by_group = [], [], []
+            for si, (units, jobs, outs_per_unit, _l, _e) in enumerate(legs):
+                for ui, unit in enumerate(units):
+                    groups.append((si, unit))
+                    plans_by_group.append(
+                        [job.plan if job.plan is not None
+                         else physical_plan(job.lookup_q, ())
+                         for job in jobs])
+                    words_by_group.append(outs_per_unit[ui])
+                    common_by_group.append(
+                        lambda w, u=unit: word_fingerprint(w) in u.common)
+            combined, counts = combine_cluster_planned(
+                plans_by_group, words_by_group, common_by_group)
+            shard_candidates = [0] * n_shards
+            for g, (si, _u) in enumerate(groups):
+                shard_candidates[si] += int(counts[g].sum())
+            F0s = [unit.F0 for _si, unit in groups]
+
+            # --- phase 3: quotas + canonical candidate order per job ----
+            job_state: list[dict] = []
+            for j in range(Q):
+                per_group_refs: list[list[DocRef]] = []
+                R_gs: list[int] = []
+                for g, (si, unit) in enumerate(groups):
+                    keys, lengths = combined[g][j]
+                    if top_k is not None and len(keys):
+                        order = topk_order(keys)
+                        keys, lengths = keys[order], lengths[order]
+                    per_group_refs.append(unit._refs(keys, lengths))
+                    R_gs.append(len(keys))
+                # dedup into the canonical order: priority = (rank in the
+                # group's permutation, group); a doc indexed by several
+                # units keeps its smallest priority
+                prio: dict[tuple, tuple] = {}
+                ref_of: dict[tuple, DocRef] = {}
+                shard_of: dict[tuple, int] = {}
+                for g, refs in enumerate(per_group_refs):
+                    si = groups[g][0]
+                    for rank, ref in enumerate(refs):
+                        ident = (ref.blob, ref.offset, ref.length)
+                        p = (rank, g)
+                        if ident not in prio or p < prio[ident]:
+                            prio[ident] = p
+                            ref_of[ident] = ref
+                            shard_of[ident] = si
+                canon = sorted(prio, key=lambda i: prio[i])
+                delta = legs[0][1][j].delta
+                if top_k is None:
+                    quotas = R_gs
+                elif budget == "global":
+                    quotas = shard_quotas(R_gs, top_k, F0s, delta)
+                else:    # per_shard: independent Eq. 6 per group (~N·k)
+                    quotas = [sample_size(R, top_k, f0, delta) if R else 0
+                              for R, f0 in zip(R_gs, F0s)]
+                pending: set = set()
+                for g, refs in enumerate(per_group_refs):
+                    for ref in refs[:quotas[g]]:
+                        pending.add((ref.blob, ref.offset, ref.length))
+                job_state.append(dict(
+                    prio=prio, ref_of=ref_of, shard_of=shard_of,
+                    canon=canon, pending=pending, fetched=set(),
+                    accepted={}))
+
+            # --- phase 4: budgeted round-2 scatter + completion loop ----
+            round2_stats = [FetchStats() for _ in range(n_shards)]
+            round2_elapsed = [0.0] * n_shards
+            n_rounds2 = 0
+            texts_cache: dict[tuple, str] = {}
+            content_cache: dict[tuple, DocContent] = {}
+            fp_count = [0] * Q
+            while any(st["pending"] for st in job_state):
+                per_shard_idents: list[list[tuple]] = \
+                    [[] for _ in range(n_shards)]
+                queued: set = set()
+                for st in job_state:
+                    for ident in st["pending"]:
+                        if ident not in queued and ident not in texts_cache:
+                            queued.add(ident)
+                            per_shard_idents[st["shard_of"][ident]].append(
+                                ident)
+
+                def fetch_leg(si: int):
+                    idents = per_shard_idents[si]
+                    if not idents:
+                        return [], FetchStats(), 0.0
+                    return self._fused_fetch(
+                        picked[si][1],
+                        [RangeRequest(*ident) for ident in idents])
+
+                if concurrent and n_shards > 1:
+                    futs = [self._executor().submit(fetch_leg, si)
+                            for si in range(n_shards)]
+                    legs2 = [f.result() for f in futs]
+                else:
+                    legs2 = [fetch_leg(si) for si in range(n_shards)]
+                for si, (payloads, fstats, elapsed) in enumerate(legs2):
+                    round2_stats[si].add(fstats)
+                    round2_elapsed[si] += elapsed
+                    for ident, payload in zip(per_shard_idents[si],
+                                              payloads):
+                        texts_cache[ident] = payload.decode("utf-8")
+                n_rounds2 += 1
+
+                for j, st in enumerate(job_state):
+                    for ident in st["pending"]:
+                        st["fetched"].add(ident)
+                        job = legs[st["shard_of"][ident]][1][j]
+                        ok = _accept(job, ident, texts_cache[ident],
+                                     content_cache)
+                        st["accepted"][ident] = ok
+                        if not ok:
+                            fp_count[j] += 1
+                    st["pending"] = self._next_pending(st, top_k)
+
+            # --- gather: canonical selection + stats --------------------
+            lookup_merged = _merge_fetch([leg[3].lookup for leg in legs],
+                                         concurrent)
+            docs_merged = _merge_fetch(round2_stats, concurrent)
+            results: list[QueryResult] = []
+            for j, st in enumerate(job_state):
+                accepted = [i for i in st["canon"]
+                            if st["accepted"].get(i)]
+                if top_k is not None:
+                    chosen = accepted[:top_k]
+                else:
+                    # non-top-K: monolithic (blob, offset) order, same as
+                    # the non-fused merge
+                    chosen = sorted(accepted)
+                stats = QueryStats(
+                    lookup=replace(lookup_merged),
+                    docs=replace(docs_merged),
+                    n_candidates=int(counts[:, j].sum()),
+                    n_false_positives=fp_count[j],
+                    n_results=len(chosen),
+                    rounds=1 + n_rounds2)
+                results.append(QueryResult(
+                    refs=[st["ref_of"][i] for i in chosen],
+                    texts=[texts_cache[i] for i in chosen],
+                    stats=stats))
+
+            shard_elapsed = [legs[si][4] + round2_elapsed[si]
+                             for si in range(n_shards)]
+            report = ScatterReport(
+                shard_elapsed_s=shard_elapsed,
+                replica_of=[i for i, _r in picked],
+                serial_wall_s=sum(shard_elapsed),
+                concurrent=concurrent,
+                fused=True,
+                budget=budget if top_k is not None else None,
+                shard_candidates=shard_candidates,
+                round2_bytes=[int(s.bytes_fetched)
+                              for s in round2_stats],
+                round2_requests=[int(s.n_requests)
+                                 for s in round2_stats])
+            report.wall_s = max(shard_elapsed) if concurrent \
+                else report.serial_wall_s
+            self.last_scatter = report
+            return results
+        finally:
+            for _i, r in picked:
+                self._release(r)
 
     def query(self, q: Query | str, top_k: int | None = None,
               hedge: bool = False) -> QueryResult:
@@ -1067,13 +1365,19 @@ class ClusterSearcher:
         fields always sum.
         """
         shard_results = [res[j] for res in per_shard]
-        refs, texts = _merge_results(
-            [r.refs for r in shard_results],
-            [r.texts for r in shard_results],
-            already_merged=len(shard_results) == 1,
-            sort=top_k is None)
         if top_k is not None:
-            refs, texts = refs[:top_k], texts[:top_k]
+            # bounded-heap pick keyed (rank-in-shard, shard): O(M log k),
+            # deterministic, never a full union sort or a shard-major
+            # truncation
+            refs, texts = _topk_select(
+                [r.refs for r in shard_results],
+                [r.texts for r in shard_results], top_k)
+        else:
+            refs, texts = _merge_results(
+                [r.refs for r in shard_results],
+                [r.texts for r in shard_results],
+                already_merged=len(shard_results) == 1,
+                sort=True)
         stats = QueryStats(
             lookup=_merge_fetch([r.stats.lookup for r in shard_results],
                                 report.concurrent),
@@ -1085,6 +1389,44 @@ class ClusterSearcher:
             n_results=len(refs),
             rounds=max(r.stats.rounds for r in shard_results))
         return QueryResult(refs=refs, texts=texts, stats=stats)
+
+
+def _accept(job, ident: tuple, text: str,
+            content_cache: dict) -> bool:
+    """Run one job's acceptance predicate on a fetched document, sharing
+    the lazy `DocContent` (tokenization, word set) across every job that
+    verifies the same document."""
+    if job.accept_text is not None:
+        return job.accept_text(text)
+    content = content_cache.get(ident)
+    if content is None:
+        content = content_cache[ident] = DocContent(text)
+    if job.accept_doc is not None:
+        return job.accept_doc(content)
+    return job.accept_words(content.words)
+
+
+def _topk_select(refs_lists: list[list[DocRef]],
+                 texts_lists: list[list[str]],
+                 k: int) -> tuple[list[DocRef], list[str]]:
+    """Deterministic bounded-heap top-K selection across shard results.
+
+    Keyed (position-in-shard-ranking, shard): rank r of every shard
+    outranks rank r+1 of any shard, so the pick interleaves the shard
+    rankings instead of truncating the shard-major concatenation (which
+    kept whole early shards and dropped late ones wholesale).
+    `heapq.nsmallest` keeps a k-item heap — O(M log k) over M shard
+    results, never a full union sort."""
+    best: dict[tuple, tuple] = {}
+    for s, (rl, tl) in enumerate(zip(refs_lists, texts_lists)):
+        for pos, (r, t) in enumerate(zip(rl, tl)):
+            ident = (r.blob, r.offset, r.length)
+            key = (pos, s)
+            cur = best.get(ident)
+            if cur is None or key < cur[0]:
+                best[ident] = (key, r, t)
+    picked = heapq.nsmallest(k, best.values(), key=lambda e: e[0])
+    return [e[1] for e in picked], [e[2] for e in picked]
 
 
 def _merge_fetch(parts: list[FetchStats], concurrent: bool) -> FetchStats:

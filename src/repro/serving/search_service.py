@@ -60,6 +60,13 @@ class LatencyStats:
     results: int = 0
     cache_hits: int = 0          # query-result cache
     cache_lookups: int = 0
+    # per-shard scatter accounting (cluster backends only): running sums
+    # over every observed ScatterReport, index = shard position
+    shard_candidates: list = field(default_factory=list)
+    round2_bytes: list = field(default_factory=list)
+    round2_requests: list = field(default_factory=list)
+    scatter_rounds: int = 0
+    fused_rounds: int = 0
 
     def observe(self, stats) -> None:
         self.samples_s.append(stats.total_s)
@@ -89,6 +96,27 @@ class LatencyStats:
             self.false_positives += s.n_false_positives
             self.results += s.n_results
 
+    def observe_scatter(self, report) -> None:
+        """Fold one scatter-gather round's per-shard accounting in.
+
+        Accepts any `ScatterReport`; rounds that predate the budget
+        fields (or single-index backends) contribute nothing. The
+        accumulators resize when cluster membership grew across a
+        `refresh()` — sums stay per shard position."""
+        per_shard = [getattr(report, "shard_candidates", []),
+                     getattr(report, "round2_bytes", []),
+                     getattr(report, "round2_requests", [])]
+        sums = [self.shard_candidates, self.round2_bytes,
+                self.round2_requests]
+        for values, acc in zip(per_shard, sums):
+            if len(acc) < len(values):
+                acc.extend([0] * (len(values) - len(acc)))
+            for i, v in enumerate(values):
+                acc[i] += int(v)
+        self.scatter_rounds += 1
+        if getattr(report, "fused", False):
+            self.fused_rounds += 1
+
     def summary(self) -> dict:
         arr = np.asarray(self.samples_s)
         n_queries = int(sum(self.batch_sizes))
@@ -105,6 +133,14 @@ class LatencyStats:
             "avg_false_positives": self.false_positives / max(n_queries, 1),
             "cache_hit_rate": self.cache_hits / self.cache_lookups
             if self.cache_lookups else 0.0,
+            # scatter observability (empty/zero on single-index backends)
+            "scatter_rounds": self.scatter_rounds,
+            "fused_rounds": self.fused_rounds,
+            "shard_candidates": list(self.shard_candidates),
+            "round2_bytes_per_shard": list(self.round2_bytes),
+            "round2_requests_per_shard": list(self.round2_requests),
+            "round2_bytes": int(sum(self.round2_bytes)),
+            "round2_requests": int(sum(self.round2_requests)),
         }
 
 
@@ -219,6 +255,14 @@ class SearchService:
         if self._cache is not None:
             self._cache.put(key, result)
 
+    def _observe_scatter(self) -> None:
+        """After a cluster-backed round, fold the searcher's
+        `last_scatter` per-shard accounting into the latency stats
+        (single-index searchers expose no scatter report)."""
+        report = getattr(self.searcher, "last_scatter", None)
+        if report is not None:
+            self.stats.observe_scatter(report)
+
     # -------------------------------------------------------------- serving
     def search(self, query: Query | str, top_k: int | None = None):
         """Serve one query: any query-language tree (Term/And/Or/Not/
@@ -231,6 +275,7 @@ class SearchService:
             return hit
         result = self.searcher.query(query, top_k=top_k, hedge=self.hedge)
         self.stats.observe(result.stats)
+        self._observe_scatter()
         self._cache_put(key, result)
         return result
 
@@ -280,6 +325,7 @@ class SearchService:
                 to_fetch, top_k=top_k, hedge=self.hedge, impl=impl)
             # the whole batch shares its fetch rounds: ONE latency sample
             self.stats.observe_batch([res.stats for res in batch])
+            self._observe_scatter()
             for key, pos in pos_of.items():
                 self._cache_put(key, batch[pos])
             for i, pos in assign:
