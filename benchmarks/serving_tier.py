@@ -1,6 +1,6 @@
 """Serving-tier benchmark: scatter-gather + micro-batched load curves.
 
-Five scenarios over one sharded cluster (4 doc-hash shards unless the
+Six scenarios over one sharded cluster (4 doc-hash shards unless the
 scenario reshards, each shard on its own simulated VM↔storage link with
 an independent virtual clock):
 
@@ -29,6 +29,13 @@ an independent virtual clock):
       replica set (high-variance NetworkModel), with and without
       per-shard hedged retry; fewer straggling shards on the gather
       barrier at the cost of a few duplicate shard reads.
+
+  freshness — commit-to-searchable latency of one delta ingest, the
+      poll-refresh reader vs the NRT push path (index/nrt.py memory
+      segments + serving/notify.py GenerationBus) on a deterministic
+      virtual clock. The NRT reader answers from the memory segment
+      before any blob exists; `identical_results` asserts its
+      pre-publish answers equal its post-publish ones byte-for-byte.
 
   reshard_gc — online membership change under a serving session:
       reshard N→M while a pre-cutover searcher keeps answering
@@ -351,6 +358,95 @@ def _load_scenario(store, cluster, pool, offered: list, windows: list,
             "n_requests_per_point": n_requests, "curves": curves}
 
 
+# ------------------------------------------------------------------ freshness
+FRESH_POLL_INTERVAL_S = 2.0
+
+# commit-to-searchable is a CI *gate* (the >=10x ratio is asserted), so
+# this scenario's link model draws no jitter and no tail stragglers
+CALM_MODEL = NetworkModel(jitter_sigma=0.0, tail_prob=0.0,
+                          name="us-central1-calm")
+
+
+def _freshness_scenario(store) -> dict:
+    """Commit-to-searchable latency: poll-refresh vs NRT push.
+
+    Two identical indexes over the same base corpus ingest the same
+    delta. The *poll* reader (its own handle, its own virtual clock)
+    learns about the delta only after publish + its next poll tick:
+    mean poll residual (interval/2) + the manifest fetch + the new
+    segment's header fetch + the query itself. The *NRT* reader shares
+    the writer's handle and follows a GenerationBus: the delta is
+    searchable at `add()` — before any blob exists — for the cost of a
+    zero-read swap plus the same query. `identical_results` asserts the
+    NRT path's pre-publish answers are byte-identical to its
+    post-publish ones: the subsystem's load-bearing invariant."""
+    from repro.serving import GenerationBus
+
+    base_docs = make_logs_like(1200, seed=23)
+    delta_docs = make_logs_like(250, seed=24)
+    base = write_corpus(store, "corpus/fresh", base_docs, n_blobs=3)
+    delta = write_corpus(store, "corpus/fresh-delta", delta_docs,
+                         n_blobs=1)
+    cfg = BuilderConfig(B=2200, F0=1.0, index_ngrams=3)
+    have: set[str] = set()
+    for d in base_docs:
+        have |= distinct_words(d)
+    fresh_words = sorted(
+        {w for d in delta_docs for w in distinct_words(d)} - have)
+    probes = [Term(w) for w in fresh_words[:4]]
+    assert probes, "delta corpus introduced no new words"
+
+    # -- poll path: reader and writer are separate handles ----------------
+    Index.build(base, cfg, store, "index/fresh-poll").close()
+    poll_cloud = SimCloudStore(store, model=CALM_MODEL, seed=601)
+    poll_idx = Index.open(SimCloudTransport(poll_cloud),
+                          "index/fresh-poll")
+    poll_idx.searcher()                   # boot paid before the write
+    widx = Index.open(store, "index/fresh-poll")
+    w = widx.writer()
+    w.add(delta)
+    w.commit()                            # published; poll reader unaware
+    t0 = poll_cloud.clock_s
+    poll_idx.refresh()                    # manifest fetch
+    poll_res = poll_idx.searcher().query_batch(probes)   # + header fetch
+    poll_fetch_s = poll_cloud.clock_s - t0
+    poll_latency_s = FRESH_POLL_INTERVAL_S / 2.0 + poll_fetch_s
+    widx.close()
+    poll_idx.close()
+
+    # -- NRT path: reader shares the writer's handle, push-notified -------
+    Index.build(base, cfg, store, "index/fresh-nrt").close()
+    nrt_cloud = SimCloudStore(store, model=CALM_MODEL, seed=602)
+    nrt_idx = Index.open(SimCloudTransport(nrt_cloud), "index/fresh-nrt")
+    nrt_idx.searcher()                    # boot paid before the write
+    bus = GenerationBus()
+    nrt_idx.attach_bus(bus)
+    w = nrt_idx.writer()
+    w.add(delta)                          # searchable NOW, zero blobs
+    bus.drain()                           # the push the poll path lacks
+    t0 = nrt_cloud.clock_s
+    pre = nrt_idx.searcher().query_batch(probes)   # zero-read swap
+    nrt_latency_s = nrt_cloud.clock_s - t0
+    w.commit()
+    bus.drain()
+    post = nrt_idx.searcher().query_batch(probes)
+    nrt_idx.close()
+
+    n_hits = sum(len(r.texts) for r in pre)
+    assert n_hits > 0, "probe queries matched nothing in the delta"
+    return {
+        "poll_interval_s": FRESH_POLL_INTERVAL_S,
+        "poll_commit_to_searchable_s": poll_latency_s,
+        "poll_fetch_s": poll_fetch_s,
+        "nrt_commit_to_searchable_s": nrt_latency_s,
+        "speedup": poll_latency_s / nrt_latency_s,
+        "identical_results": _identical(pre, post)
+        and _identical(pre, poll_res),
+        "n_probe_queries": len(probes),
+        "n_probe_hits": n_hits,
+    }
+
+
 # ----------------------------------------------------------------- reshard+GC
 def _reshard_gc_scenario(store, queries, m: int = 8) -> dict:
     """Reshard a dedicated copy of the cluster under a live session, then
@@ -390,10 +486,16 @@ def _reshard_gc_scenario(store, queries, m: int = 8) -> dict:
     after_sess.close()
 
     n_blobs_before = len(work.list("cluster/rg/"))
+    # every reader session above is closed by now; the (empty) registry
+    # records exactly that, which is what lets grace_s=0.0 sweep safely
+    # (index/nrt.py LeaseRegistry — passing none at all deprecation-warns)
+    from repro.index import LeaseRegistry
+    leases = LeaseRegistry()
     dry = collect_cluster_garbage(work, "cluster/rg", keep=1,
-                                  grace_s=0.0, dry_run=True)
+                                  grace_s=0.0, dry_run=True,
+                                  leases=leases)
     real = collect_cluster_garbage(work, "cluster/rg", keep=1,
-                                   grace_s=0.0)
+                                   grace_s=0.0, leases=leases)
     post = ShardedIndex.open(work, "cluster/rg")
     post_sess = post.searcher()
     post_gc = post_sess.query_batch(queries)
@@ -435,6 +537,7 @@ def run(smoke: bool = False) -> dict:
                                       windows, n_requests),
         "hedged_replicas": _hedged_scenario(store, cluster, queries,
                                             rounds),
+        "freshness": _freshness_scenario(store),
         "reshard_gc": _reshard_gc_scenario(store, queries,
                                            m=8 if not smoke else 6),
         "smoke": smoke,
@@ -480,6 +583,14 @@ def bench_serving_tier():
     hr = scenario["hedged_replicas"]
     yield row("serving_tier/hedged_max_wall", hr["hedged"]["max_wall_ms"]
               * 1e3, f"speedup={hr['max_wall_speedup']:.2f}x")
+    fr = scenario["freshness"]
+    yield row("serving_tier/freshness_poll_s",
+              fr["poll_commit_to_searchable_s"],
+              f"interval={fr['poll_interval_s']:.1f}s")
+    yield row("serving_tier/freshness_nrt_s",
+              fr["nrt_commit_to_searchable_s"],
+              f"speedup={fr['speedup']:.1f}x"
+              f";identical={fr['identical_results']}")
     rg = scenario["reshard_gc"]
     yield row("serving_tier/reshard_wall", rg["reshard_s"] * 1e6,
               f"identical={rg['identical_across_cutover']}")

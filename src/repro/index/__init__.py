@@ -6,6 +6,7 @@ from .builder import Builder, BuilderConfig, BuildReport
 from .fetch_plan import coalesce_requests, slice_payloads
 from .lifecycle import (GCReport, Index, IndexWriter, MultiSegmentSearcher,
                         collect_garbage, reachable_blobs)
+from .nrt import Lease, LeaseRegistry, MemorySegment
 from .planner import (GramlessIndexError, PhysicalPlan, PureNegationError,
                       physical_plan)
 from .query import (And, Not, Or, Phrase, Query, QuerySyntaxError, Regex,
@@ -19,4 +20,4 @@ __all__ = ["Builder", "BuilderConfig", "BuildReport", "And", "Or", "Not",
            "physical_plan", "QueryResult", "QueryStats", "Searcher",
            "coalesce_requests", "slice_payloads", "Index", "IndexWriter",
            "MultiSegmentSearcher", "GCReport", "collect_garbage",
-           "reachable_blobs"]
+           "reachable_blobs", "MemorySegment", "Lease", "LeaseRegistry"]

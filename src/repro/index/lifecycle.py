@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import time
 import uuid
+import warnings
 from dataclasses import asdict, dataclass, field, replace
 
 import msgpack
@@ -50,6 +51,7 @@ from ..storage.cache import SuperpostCache
 from ..storage.simcloud import FetchStats
 from ..storage.transport import StorageTransport, as_transport
 from .builder import Builder, BuilderConfig, BuildReport
+from .nrt import MemorySegment
 from .planner import make_job, plan_batch
 from .query import Query, Regex, Term
 from .searcher import (QueryResult, Searcher, _Fetcher, execute_jobs,
@@ -251,6 +253,17 @@ class Index:
         self._manifest = manifest
         self.report = report
         self._owns_transport = owns_transport
+        # NRT state (index/nrt.py): memory-resident segments staged by an
+        # IndexWriter.add() but not yet published, a sequence number that
+        # bumps on every memory add/retract (so searcher pins can tell
+        # "same generation, more memory docs" apart), a per-unit header
+        # byte cache (a handle that just published a memory segment never
+        # refetches the header bytes it built), and an optional
+        # GenerationBus the write path posts visibility changes to.
+        self._nrt: list[MemorySegment] = []
+        self._nrt_seq = 0
+        self._headers: dict[str, bytes] = {}
+        self._bus = None
 
     # -- introspection ----------------------------------------------------
     @property
@@ -277,6 +290,30 @@ class Index:
     def config(self) -> BuilderConfig | None:
         cfg = self._manifest.get("config")
         return BuilderConfig(**cfg) if cfg is not None else None
+
+    @property
+    def nrt_seq(self) -> int:
+        """Bumps whenever the memory-resident segment set changes; a
+        searcher pin over this handle is `(generation, nrt_seq)`."""
+        return self._nrt_seq
+
+    @property
+    def memory_segments(self) -> list[MemorySegment]:
+        """Memory-resident segments searchable now, publishable later."""
+        return list(self._nrt)
+
+    def attach_bus(self, bus) -> "Index":
+        """Post visibility changes (memory adds, publishes) under this
+        prefix to `bus` (serving/notify.py GenerationBus). Writers opened
+        from this handle inherit it. Returns self for chaining."""
+        self._bus = bus
+        return self
+
+    def _notify(self, kind: str) -> None:
+        if self._bus is not None:
+            self._bus.post_generation(prefix=self.prefix, kind=kind,
+                                      generation=self.generation,
+                                      seq=self._nrt_seq)
 
     def corpus_refs(self) -> list[DocRef]:
         """Every document ref this generation indexes (base + segments,
@@ -398,16 +435,28 @@ class Index:
         """
         gen = self.generation
         data_plane = self.transport if transport is None else transport
-        if not self._manifest["segments"]:
-            return Searcher(data_plane, self.base_prefix, cache=cache,
-                            coalesce_gap=coalesce_gap, generation=gen)
         prefixes = [self.base_prefix] + self.segment_prefixes
-        headers, init_stats = data_plane.fetch_batch(
-            [RangeRequest(f"{p}/header.airp") for p in prefixes])
-        units = [Searcher(data_plane, p, cache=cache,
-                          coalesce_gap=coalesce_gap, generation=gen,
-                          header=h)
-                 for p, h in zip(prefixes, headers)]
+        # header bytes are immutable per unit prefix, so this handle
+        # caches them: a reopen after a push-notified swap (commit seeds
+        # the cache with the bytes it just published) costs ZERO fetches
+        missing = [p for p in prefixes if p not in self._headers]
+        init_stats = FetchStats()
+        if missing:
+            payloads, init_stats = data_plane.fetch_batch(
+                [RangeRequest(f"{p}/header.airp") for p in missing])
+            for p, h in zip(missing, payloads):
+                self._headers[p] = h
+        units: list[Searcher] = [
+            Searcher(data_plane, p, cache=cache,
+                     coalesce_gap=coalesce_gap, generation=gen,
+                     header=self._headers[p])
+            for p in prefixes]
+        # memory-resident segments (index/nrt.py) ride along as extra
+        # units: searchable now, byte-identical once published
+        units += self._nrt
+        if len(units) == 1:
+            units[0].init_stats = init_stats
+            return units[0]
         return MultiSegmentSearcher(units, units[0]._fetcher,
                                     init_stats=init_stats)
 
@@ -444,15 +493,21 @@ def open_many(transport: StorageTransport,
 
 # ===================================================================== writer
 class IndexWriter:
-    """Segmented write session: append → commit, or merge to compact.
+    """Segmented write session: append/add → commit, or merge to compact.
 
     Appends build **delta segments** — small self-contained sketches
     (own header + superpost blocks) over just the new documents — under
-    the index prefix. Nothing is visible to readers until `commit()`
-    writes the next manifest generation; `abort()` deletes staged blobs.
-    `merge()` compacts base + committed segments back into a single base
-    index by re-profiling the concatenated corpus (so the optimizer's L
-    and the common-word table reflect the full document set again).
+    the index prefix. `append()` builds the segment durably (store
+    writes, invisible until commit); `add()` builds the same segment
+    into process memory (index/nrt.py `MemorySegment`), which makes its
+    documents **searchable immediately** through the handle's searchers
+    while still staying invisible to other openers until `commit()`
+    publishes the identical bytes. Either way nothing is durable-visible
+    until `commit()` writes the next manifest generation; `abort()`
+    deletes staged blobs and retracts memory segments. `merge()`
+    compacts base + committed segments back into a single base index by
+    re-profiling the concatenated corpus (so the optimizer's L and the
+    common-word table reflect the full document set again).
     """
 
     def __init__(self, index: Index) -> None:
@@ -466,6 +521,7 @@ class IndexWriter:
         self._base_generation = index.generation
         self._staged: list[dict] = []          # manifest segment entries
         self._staged_prefixes: list[str] = []
+        self._memory: dict[str, MemorySegment] = {}   # seg prefix -> unit
         # per-session token: two writers based on the same generation must
         # never stage to the same blob names — else the loser's abort()
         # could delete blobs the winner's commit already published
@@ -482,17 +538,44 @@ class IndexWriter:
         B = min(self._config.B, max(128, 8 * corpus.n_docs))
         return replace(self._config, B=B)
 
+    def _next_seg_prefix(self) -> str:
+        return (f"{self._index.prefix}/"
+                f"seg-{self._base_generation + 1:08d}"
+                f"-{self._token}-{len(self._staged):04d}")
+
     def append(self, corpus: Corpus) -> BuildReport:
         """Stage one delta segment over `corpus` (not yet visible)."""
-        seg_prefix = (f"{self._index.prefix}/"
-                      f"seg-{self._base_generation + 1:08d}"
-                      f"-{self._token}-{len(self._staged):04d}")
+        seg_prefix = self._next_seg_prefix()
         report = Builder(self._segment_config(corpus)).build(
             corpus, self._index.transport.blobs, seg_prefix)
         self._staged.append({"prefix": seg_prefix,
                              "corpus": _pack_refs(corpus.refs)})
         self._staged_prefixes.append(seg_prefix)
         return report
+
+    def add(self, corpus: Corpus) -> BuildReport:
+        """Stage one delta segment **in memory**: searchable through this
+        handle's searchers milliseconds from now, durable at `commit()`.
+
+        The segment is built under the exact prefix `commit()` will
+        publish it to, into a process-local staging store — so the
+        header bytes, hash draws, and false-positive sets a reader sees
+        pre-publish are byte-for-byte the ones every reader sees
+        post-publish (enforced by tests/test_nrt.py). Posts a
+        `"memory"` event to the handle's attached `GenerationBus`.
+        """
+        seg_prefix = self._next_seg_prefix()
+        seg = MemorySegment.build(corpus, self._segment_config(corpus),
+                                  self._index.transport, seg_prefix)
+        self._staged.append({"prefix": seg_prefix,
+                             "corpus": _pack_refs(corpus.refs)})
+        self._staged_prefixes.append(seg_prefix)
+        self._memory[seg_prefix] = seg
+        idx = self._index
+        idx._nrt.append(seg)
+        idx._nrt_seq += 1
+        idx._notify("memory")
+        return seg.report
 
     def _check_not_raced(self) -> int:
         current = _latest_generation(self._index.transport.blobs,
@@ -505,33 +588,72 @@ class IndexWriter:
         return current + 1
 
     def commit(self) -> Index:
-        """Publish staged segments as the next manifest generation."""
+        """Publish staged segments as the next manifest generation.
+
+        Memory segments staged by `add()` are written to the store first
+        (byte-identical to what they served from memory), then the
+        manifest CAS-publishes; on a lost race the copied blobs are
+        rolled back but the memory segments stay searchable, so a retry
+        after `Index.refresh()` loses no visibility. On success the
+        memory units retire — the identical published blobs take over —
+        the handle's header cache is seeded with the bytes just
+        published (the reopen swap costs zero fetches), and a
+        `"published"` event is posted to the attached bus.
+        """
         if not self._staged:
             return self._index
         generation = self._check_not_raced()
         idx = self._index
+        published: list[str] = []
+        for seg in self._memory.values():
+            published += seg.publish(idx.transport.blobs)
         manifest = {
             "generation": generation,
             "base": idx.manifest["base"],
             "segments": list(idx.manifest["segments"]) + self._staged,
             "config": idx.manifest["config"],
         }
-        _publish(idx.transport.blobs, idx.prefix, manifest)
+        try:
+            _publish(idx.transport.blobs, idx.prefix, manifest)
+        except BaseException:
+            for name in published:
+                idx.transport.blobs.delete(name)
+            raise
+        for seg in self._memory.values():
+            idx._headers[seg.prefix] = seg.header_bytes
+        self._retire_memory()
         idx._manifest = manifest
         self._base_generation = generation
         self._staged = []
         self._staged_prefixes = []
+        idx._notify("published")
         return idx
 
+    def _retire_memory(self) -> None:
+        """Drop this session's memory units from the handle (their
+        documents are now reachable another way, or retracted)."""
+        if not self._memory:
+            return
+        idx = self._index
+        idx._nrt = [s for s in idx._nrt if s.prefix not in self._memory]
+        idx._nrt_seq += 1
+        self._memory = {}
+
     def abort(self) -> None:
-        """Drop staged segments and delete their blobs (readers never saw
-        them — segments only become reachable through a manifest)."""
+        """Drop staged segments: delete durable staged blobs (readers
+        never saw them — segments only become reachable through a
+        manifest) and retract memory segments (this handle's searchers
+        saw those; the `"memory"` event tells followers to swap off)."""
         blobs = self._index.transport.blobs
         for seg_prefix in self._staged_prefixes:
             for name in blobs.list(seg_prefix + "/"):
                 blobs.delete(name)
+        retracted = bool(self._memory)
+        self._retire_memory()
         self._staged = []
         self._staged_prefixes = []
+        if retracted:
+            self._index._notify("memory")
 
     def merge(self) -> Index:
         """Compact base + committed segments into one new base index.
@@ -622,14 +744,27 @@ def manifest_reachable(manifest: dict, all_names: list[str]) -> set[str]:
     return out
 
 
+def _manifest_generation(name: str) -> int:
+    """Generation number encoded in a manifest blob name (zero-padded,
+    so name order is generation order)."""
+    tail = name.rsplit("-", 1)[1]
+    return int(tail.split(".")[0])
+
+
 def reachable_blobs(blobs, prefix: str, keep: int = 2,
-                    all_names: list[str] | None = None) -> set[str]:
-    """The blob set reachable from the latest `keep` manifests of the
-    index at `prefix` (manifests included). A legacy header-only prefix
-    (no manifests) reports everything reachable — there is no manifest
-    history to walk, so nothing is provably garbage. `all_names` skips
-    the LIST when the caller already holds one covering the prefix (how
-    cluster GC walks N shard prefixes on a single cluster-level LIST)."""
+                    all_names: list[str] | None = None,
+                    min_generation: int | None = None) -> set[str]:
+    """The blob set reachable from the kept manifests of the index at
+    `prefix` (manifests included). Kept = the latest `keep` manifests,
+    widened down to `min_generation` when given — that is how reader
+    leases (index/nrt.py `LeaseRegistry`) pin old generations: the keep
+    floor is `min(latest-keep, min(leased generations))`, so a leased
+    snapshot's blobs stay reachable no matter how many commits have
+    happened since. A legacy header-only prefix (no manifests) reports
+    everything reachable — there is no manifest history to walk, so
+    nothing is provably garbage. `all_names` skips the LIST when the
+    caller already holds one covering the prefix (how cluster GC walks
+    N shard prefixes on a single cluster-level LIST)."""
     if all_names is None:
         all_names = blobs.list(f"{prefix}/")
     else:
@@ -640,6 +775,9 @@ def reachable_blobs(blobs, prefix: str, keep: int = 2,
     if not manifests:
         return set(all_names)
     kept = manifests[-max(1, int(keep)):]
+    if min_generation is not None:
+        floor = min(int(min_generation), _manifest_generation(kept[0]))
+        kept = [m for m in manifests if _manifest_generation(m) >= floor]
     out: set[str] = set(kept)
     for name in kept:
         manifest = decode_manifest(blobs.get(name))
@@ -650,13 +788,27 @@ def reachable_blobs(blobs, prefix: str, keep: int = 2,
 DEFAULT_GRACE_S = 600.0
 
 
+def warn_ungraced_sweep(grace_s: float, leases) -> None:
+    """`grace_s=0.0` with no `LeaseRegistry` deletes out from under any
+    reader the sweep cannot see — deprecation-warn so callers migrate to
+    leases instead of relying on "nobody is reading right now"."""
+    if grace_s <= 0.0 and leases is None:
+        warnings.warn(
+            "collect_garbage(grace_s=0.0) without a LeaseRegistry has no "
+            "protection for in-flight readers; pass leases=<registry> "
+            "(index/nrt.py) or keep a grace window",
+            DeprecationWarning, stacklevel=3)
+
+
 def collect_garbage(source, prefix: str, keep: int = 2,
                     grace_s: float = DEFAULT_GRACE_S,
                     dry_run: bool = False,
                     now: float | None = None,
-                    reachable: set[str] | None = None) -> GCReport:
-    """Delete blobs under `prefix` unreachable from the latest `keep`
-    manifest generations.
+                    reachable: set[str] | None = None,
+                    leases=None) -> GCReport:
+    """Delete blobs under `prefix` unreachable from the kept manifest
+    generations: the latest `keep`, widened down to the oldest leased
+    generation when a `LeaseRegistry` is passed.
 
     Old generations accumulate by design — `merge()` writes a fresh
     `base-<gen>` and never overwrites live blobs, the serving tier's
@@ -665,26 +817,43 @@ def collect_garbage(source, prefix: str, keep: int = 2,
     Reachability is computed from the manifests (`reachable_blobs`);
     everything else under the prefix is garbage, EXCEPT blobs younger
     than `grace_s` (by `BlobStore.mtime`), which are spared until the
-    next sweep. The grace window is the ONLY thing protecting two kinds
-    of in-flight work, so it defaults ON (`DEFAULT_GRACE_S`, 10 min):
-    a reader that just resolved a manifest and is about to range-read
-    the blobs it points at, and a membership change's staging blobs
-    (serving/cluster.py `_stage_prefix`) written but not yet published —
-    deleting those would let the change CAS-publish a manifest pointing
-    at nothing. Set `grace_s=0.0` only when no writer or reader can be
-    in flight (tests, offline compaction). `dry_run=True` reports the
-    orphan set without deleting. `reachable` overrides the root set
-    (how cluster-level GC folds shard reachability in); `now` pins the
-    clock for deterministic tests.
+    next sweep.
+
+    Two mechanisms protect in-flight readers, in order of preference:
+
+      * **Leases** (`leases=`, an `index.nrt.LeaseRegistry`): a reader
+        that registered the generation it pins is protected exactly —
+        every manifest at or above the minimum leased generation stays
+        reachable, for as long as the lease lives, even with
+        `grace_s=0.0`.
+      * **The grace window** is the fallback for whatever holds no
+        lease: a reader that just resolved a manifest and is about to
+        range-read the blobs it points at, and a membership change's
+        staging blobs (serving/cluster.py `_stage_prefix`) written but
+        not yet published — deleting those would let the change
+        CAS-publish a manifest pointing at nothing. It defaults ON
+        (`DEFAULT_GRACE_S`, 10 min).
+
+    `grace_s=0.0` with an active registry is safe for registered
+    readers (how tests/test_nrt.py exercises exactness); `grace_s=0.0`
+    with NO registry deletes out from under any concurrent reader and
+    now raises a `DeprecationWarning` — keep it only where no reader or
+    writer can be in flight (offline compaction). `dry_run=True`
+    reports the orphan set without deleting. `reachable` overrides the
+    root set (how cluster-level GC folds shard reachability in, leases
+    already applied); `now` pins the clock for deterministic tests.
 
     Works on any store handle: a `BlobStore`, `SimCloudStore`, or
     `StorageTransport` (GC is control-plane — LIST/DELETE — so no
     latency model mediates it).
     """
     blobs = blobs_of(source)
+    if reachable is None:
+        warn_ungraced_sweep(grace_s, leases)
     candidates = blobs.list(f"{prefix}/")
+    min_gen = leases.min_generation(prefix) if leases is not None else None
     live = reachable if reachable is not None else \
-        reachable_blobs(blobs, prefix, keep)
+        reachable_blobs(blobs, prefix, keep, min_generation=min_gen)
     orphans = sorted(n for n in candidates if n not in live)
     t_now = time.time() if now is None else now
     report = GCReport(prefix=prefix, keep=int(keep),

@@ -429,12 +429,35 @@ def lookup_units(units: list[Searcher], queries: list[Query | str],
     requests: list[RangeRequest] = []
     hedgeable: set[int] = set()
     bases: list[int] = []
-    for plan in plans:
-        bases.append(len(requests))
+    local: dict[int, bytes] = {}
+    for unit, plan in zip(units, plans):
+        base = len(requests)
+        bases.append(base)
         requests.extend(plan.requests)
-        hedgeable.update(i + bases[-1] for i in plan.hedgeable)
-    payloads, fstats = fetcher.fetch_ranges(
-        requests, hedge=hedge, hedgeable=hedgeable, use_cache=True)
+        resolve = getattr(unit, "resolve_local", None)
+        if resolve is not None:
+            # memory-resident unit (index/nrt.py): its superposts never
+            # touch the wire — answered synchronously from process memory,
+            # excluded from the shared fetch round and from hedging
+            for i, req in enumerate(plan.requests):
+                local[base + i] = resolve(req)
+        else:
+            hedgeable.update(i + base for i in plan.hedgeable)
+    if local:
+        net = [i for i in range(len(requests)) if i not in local]
+        net_payloads, fstats = fetcher.fetch_ranges(
+            [requests[i] for i in net], hedge=hedge,
+            hedgeable={k for k, i in enumerate(net) if i in hedgeable},
+            use_cache=True)
+        payloads = [None] * len(requests)
+        for k, i in enumerate(net):
+            payloads[i] = net_payloads[k]
+        for i, p in local.items():
+            payloads[i] = p
+    else:
+        # no memory units: the exact pre-NRT single-batch path
+        payloads, fstats = fetcher.fetch_ranges(
+            requests, hedge=hedge, hedgeable=hedgeable, use_cache=True)
     stats.lookup = fstats
     stats.rounds += 1
 

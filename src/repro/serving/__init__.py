@@ -7,6 +7,7 @@ from .cluster import (ClusterConflict, ClusterSearcher, ScatterReport,
                       slot_of_ref)
 from .frontend import (DeadlineExceeded, Frontend, FrontendConfig,
                        FrontendStats, Overloaded)
+from .notify import GenerationBus, GenerationEvent, Subscription
 from .rag import RAGPipeline, RAGResult
 from .search_service import LatencyStats, SearchService
 
@@ -17,4 +18,5 @@ __all__ = [
     "slot_of_ref", "collect_cluster_garbage",
     "Frontend", "FrontendConfig", "FrontendStats",
     "Overloaded", "DeadlineExceeded",
+    "GenerationBus", "GenerationEvent", "Subscription",
 ]

@@ -63,7 +63,7 @@ from ..index.lifecycle import (DEFAULT_GRACE_S, GCReport, Index,
                                MultiSegmentSearcher, blobs_of,
                                collect_garbage, latest_generation,
                                open_many, publish_generation,
-                               reachable_blobs)
+                               reachable_blobs, warn_ungraced_sweep)
 from ..index.planner import (DocContent, combine_cluster_planned,
                              physical_plan, plan_batch, shard_quotas)
 from ..index.query import Query, Regex
@@ -205,6 +205,7 @@ class ShardedIndex:
         self._manifest = manifest
         self.shards = shards                 # None for empty shard slots
         self._owns_transport = owns_transport
+        self._bus = None
 
     # -- introspection ----------------------------------------------------
     @property
@@ -249,6 +250,30 @@ class ShardedIndex:
         return (self.generation,
                 *(0 if idx is None else idx.generation
                   for idx in self.shards))
+
+    @property
+    def nrt_seq(self) -> tuple:
+        """Per-shard NRT sequence numbers (index/nrt.py): bumps when any
+        shard's memory-resident segment set changes. Together with
+        `reader_generation` this pins the full visibility state."""
+        return tuple(0 if idx is None else idx.nrt_seq
+                     for idx in self.shards)
+
+    def attach_bus(self, bus) -> "ShardedIndex":
+        """Post visibility changes to `bus` (serving/notify.py): cluster
+        membership publishes under the cluster prefix, and — via each
+        member shard's handle — shard commits and memory adds under the
+        shard prefixes. Survives `refresh()` re-opening shard handles.
+        Returns self for chaining."""
+        self._bus = bus
+        self._attach_shard_buses()
+        return self
+
+    def _attach_shard_buses(self) -> None:
+        if self._bus is not None:
+            for idx in self.shards:
+                if idx is not None:
+                    idx.attach_bus(self._bus)
 
     def shard(self, i: int) -> Index:
         """The i-th shard's `Index` handle (writers go through this —
@@ -361,6 +386,7 @@ class ShardedIndex:
             self._manifest = decode_cluster_manifest(data)
             self.shards = _open_member_shards(self.transport,
                                               self._manifest)
+            self._attach_shard_buses()
         else:
             # usually 0-1 shards have moved; Index.refresh only fetches
             # a manifest when its generation actually changed
@@ -502,6 +528,9 @@ class ShardedIndex:
         except RuntimeError as exc:
             self._abort_staged(stage)
             raise ClusterConflict(str(exc)) from exc
+        if self._bus is not None:
+            self._bus.post_generation(prefix=self.prefix, kind="published",
+                                      generation=generation)
         return manifest
 
     def reshard(self, n_shards: int,
@@ -550,6 +579,7 @@ class ShardedIndex:
                                             stage, sources)
         self._manifest = manifest
         self.shards = shards
+        self._attach_shard_buses()
         self._reapply_raced_commits(sources, corpus.refs)
         return self
 
@@ -591,6 +621,7 @@ class ShardedIndex:
                                             self.n_slots, stage, sources)
         self._manifest = manifest
         self.shards = shards
+        self._attach_shard_buses()
         self._reapply_raced_commits(sources, refs)
         return self
 
@@ -623,6 +654,7 @@ class ShardedIndex:
                                             self.n_slots, stage, sources)
         self._manifest = manifest
         self.shards = shards
+        self._attach_shard_buses()
         self._reapply_raced_commits(sources, refs)
         return self
 
@@ -665,6 +697,7 @@ class ShardedIndex:
                 generation, entries, self.n_slots, stage, sources=[])
             self._manifest = manifest
             self.shards = shards
+            self._attach_shard_buses()
         for s, part in enumerate(parts):
             if not part.refs or s in empties:
                 continue
@@ -722,11 +755,13 @@ class ShardedIndex:
     def collect_garbage(self, keep: int = 2,
                         grace_s: float = DEFAULT_GRACE_S,
                         dry_run: bool = False,
-                        now: float | None = None) -> GCReport:
+                        now: float | None = None,
+                        leases=None) -> GCReport:
         """Sweep this cluster's prefix: see `collect_cluster_garbage`."""
         return collect_cluster_garbage(self.transport, self.prefix,
                                        keep=keep, grace_s=grace_s,
-                                       dry_run=dry_run, now=now)
+                                       dry_run=dry_run, now=now,
+                                       leases=leases)
 
     # -- sessions ---------------------------------------------------------
     def searcher(self, cache: SuperpostCache | None = None,
@@ -795,12 +830,19 @@ class ShardedIndex:
         shard_replicas: list[list[_Replica]] = []
         for si, (_s, idx) in enumerate(live):
             replicas = []
+            # the shard handle's memory-resident segments (index/nrt.py)
+            # serve every replica: their round-1 reads resolve from
+            # process memory, so no replica transport mediates them —
+            # documents a shard writer add()ed are cluster-searchable
+            # before the shard commit publishes their blobs
+            memory = idx.memory_segments
             for ri, t in enumerate(transports[si]):
                 units = [Searcher(t, p, cache=cache,
                                   coalesce_gap=coalesce_gap,
                                   generation=idx.generation,
                                   header=headers[(si, ri, uj)])
                          for uj, p in enumerate(unit_prefixes[si])]
+                units += memory
                 reader = units[0] if len(units) == 1 else \
                     MultiSegmentSearcher(units, units[0]._fetcher,
                                          init_stats=FetchStats())
@@ -1443,15 +1485,20 @@ def _merge_fetch(parts: list[FetchStats], concurrent: bool) -> FetchStats:
 
 
 # ============================================================ garbage collection
-def cluster_reachable_blobs(blobs, prefix: str, keep: int = 2) -> set[str]:
-    """Blobs reachable from the latest `keep` cluster generations: the
-    kept `cluster-<gen>.airc` manifests themselves, plus — for every
-    shard prefix any of them references — that shard's own latest-`keep`
-    reachable set (`index.lifecycle.reachable_blobs`: shard manifests,
-    unit headers, superpost blocks, corpus blobs). Everything else under
-    the prefix is garbage: old-generation shard sets a `reshard` replaced,
-    orphaned staging areas of conflicted membership changes, pre-merge
-    segment blobs beyond the shard's own history window."""
+def cluster_reachable_blobs(blobs, prefix: str, keep: int = 2,
+                            leases=None) -> set[str]:
+    """Blobs reachable from the kept cluster generations — the latest
+    `keep`, widened down to the oldest leased cluster generation when a
+    `LeaseRegistry` is passed — plus, for every shard prefix any kept
+    manifest references, that shard's own reachable set
+    (`index.lifecycle.reachable_blobs`: shard manifests, unit headers,
+    superpost blocks, corpus blobs), itself widened by any lease on the
+    shard prefix. A cluster reader session leases the cluster prefix
+    AND each shard prefix it serves, so both levels of the walk respect
+    its pins. Everything else under the prefix is garbage:
+    old-generation shard sets a `reshard` replaced, orphaned staging
+    areas of conflicted membership changes, pre-merge segment blobs
+    beyond the shard's own history window."""
     all_names = blobs.list(f"{prefix}/")
     manifests = sorted(n for n in all_names
                        if n.startswith(f"{prefix}/cluster-")
@@ -1459,6 +1506,11 @@ def cluster_reachable_blobs(blobs, prefix: str, keep: int = 2) -> set[str]:
     if not manifests:
         return set(all_names)
     kept = manifests[-max(1, int(keep)):]
+    min_gen = leases.min_generation(prefix) if leases is not None else None
+    if min_gen is not None:
+        floor = min(int(min_gen), _cluster_manifest_generation(kept[0]))
+        kept = [m for m in manifests
+                if _cluster_manifest_generation(m) >= floor]
     out: set[str] = set(kept)
     shard_prefixes: set[str] = set()
     for name in kept:
@@ -1469,24 +1521,39 @@ def cluster_reachable_blobs(blobs, prefix: str, keep: int = 2) -> set[str]:
     for sp in sorted(shard_prefixes):
         # shard prefixes nest under the cluster prefix: reuse the one
         # cluster-level LIST instead of re-listing per shard
+        shard_min = leases.min_generation(sp) if leases is not None \
+            else None
         out |= reachable_blobs(blobs, sp, keep=keep,
-                               all_names=all_names)
+                               all_names=all_names,
+                               min_generation=shard_min)
     return out
+
+
+def _cluster_manifest_generation(name: str) -> int:
+    tail = name.rsplit("cluster-", 1)[1]
+    return int(tail.split(".")[0])
 
 
 def collect_cluster_garbage(source, prefix: str, keep: int = 2,
                             grace_s: float = DEFAULT_GRACE_S,
                             dry_run: bool = False,
-                            now: float | None = None) -> GCReport:
-    """Delete blobs under a cluster prefix unreachable from the latest
-    `keep` cluster + shard manifest generations.
+                            now: float | None = None,
+                            leases=None) -> GCReport:
+    """Delete blobs under a cluster prefix unreachable from the kept
+    cluster + shard manifest generations.
 
     The reachability walk (`cluster_reachable_blobs`) and the sweep
-    semantics — grace window by `BlobStore.mtime`, `dry_run` reporting,
-    `GCReport` accounting — are shared with single-index GC
+    semantics — reader leases as the primary protection, grace window by
+    `BlobStore.mtime` as the fallback, `dry_run` reporting, `GCReport`
+    accounting — are shared with single-index GC
     (`index.lifecycle.collect_garbage`); only the root set differs.
-    Accepts a `BlobStore`, `SimCloudStore`, or `StorageTransport`."""
+    `grace_s=0.0` with no `leases` registry raises the same
+    `DeprecationWarning`. Accepts a `BlobStore`, `SimCloudStore`, or
+    `StorageTransport`."""
     blobs = blobs_of(source)
+    warn_ungraced_sweep(grace_s, leases)
     return collect_garbage(
         blobs, prefix, keep=keep, grace_s=grace_s, dry_run=dry_run,
-        now=now, reachable=cluster_reachable_blobs(blobs, prefix, keep))
+        now=now,
+        reachable=cluster_reachable_blobs(blobs, prefix, keep,
+                                          leases=leases))

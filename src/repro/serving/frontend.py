@@ -116,6 +116,8 @@ class Frontend:
         self._cond = threading.Condition()
         self._thread: threading.Thread | None = None
         self._closed = False
+        self._refresh_pending = False
+        self._subscription = None
         if not hasattr(backend, "search_batch") \
                 and not hasattr(backend, "query_batch"):
             raise TypeError(
@@ -176,7 +178,32 @@ class Frontend:
             batch.append(self._queue.popleft())
         return batch
 
+    def follow(self, bus) -> "Frontend":
+        """Swap the backend's generation on push (serving/notify.py
+        GenerationBus) instead of polling: an event only *flags* the
+        refresh; the actual `backend.refresh()` runs on the dispatch
+        thread at the next batch boundary — never mid-batch, so every
+        request in one micro-batch is served from one snapshot. Requires
+        a backend exposing `refresh` (a `SearchService`). Returns self."""
+        if not hasattr(self.backend, "refresh"):
+            raise TypeError(
+                f"{type(self.backend).__name__} exposes no refresh(); "
+                "follow() needs a SearchService backend")
+        self._subscription = bus.subscribe(self._on_generation)
+        return self
+
+    def _on_generation(self, _event) -> None:
+        with self._cond:
+            self._refresh_pending = True
+            self._cond.notify()      # wake the loop so the swap is prompt
+
+    def _maybe_refresh(self) -> None:
+        if self._refresh_pending:
+            self._refresh_pending = False
+            self.backend.refresh()
+
     def _serve(self, batch: list[_Pending]) -> int:
+        self._maybe_refresh()
         if not batch:
             return 0
         now = self.clock()
@@ -263,6 +290,9 @@ class Frontend:
         Stepped mode has no loop, so `close` serves the remainder
         itself — a submitted request's future is ALWAYS completed, never
         silently abandoned."""
+        if self._subscription is not None:
+            self._subscription.cancel()
+            self._subscription = None
         with self._cond:
             self._closed = True
             self._cond.notify_all()

@@ -148,12 +148,20 @@ class SearchService:
     def __init__(self, source, index_prefix: str | None = None,
                  hedge: bool = False, cache_size: int = 0,
                  superpost_cache_bytes: int = 0,
-                 coalesce_gap: int | None = 4096) -> None:
+                 coalesce_gap: int | None = 4096,
+                 leases=None) -> None:
         self.superpost_cache = SuperpostCache(superpost_cache_bytes) \
             if superpost_cache_bytes else None
         self.hedge = hedge
         self.coalesce_gap = coalesce_gap
         self.stats = LatencyStats()
+        # reader leases (index/nrt.py LeaseRegistry): when given, the
+        # service registers every generation its live searcher pins, so
+        # collect_garbage(..., leases=...) can never delete the snapshot
+        # it is serving — even with grace_s=0.0
+        self.leases = leases
+        self._held: list = []
+        self._subscription = None
         # query-result cache (paper §IV-A remark: memoization bounds the
         # worst case where a few irrelevant hot words dominate) — LRU, so
         # a burst of distinct queries evicts the coldest entry, not the
@@ -187,6 +195,27 @@ class SearchService:
             old.close()          # a ClusterSearcher owns a thread pool
         self.searcher = self._index.searcher(
             cache=self.superpost_cache, coalesce_gap=self.coalesce_gap)
+        # the snapshot this service serves until the next swap — result
+        # caches key on it, leases pin it
+        self._pin = self._reader_pin()
+        self._lease_pins()
+
+    def _lease_pins(self) -> None:
+        """Acquire leases on everything the new searcher pins, THEN
+        release the old set — the GC never observes a moment where
+        neither snapshot is protected. A cluster session leases the
+        cluster prefix and every live shard prefix (shards commit and
+        collect independently)."""
+        if self.leases is None:
+            return
+        idx = self._index
+        fresh = [self.leases.acquire(idx.prefix, idx.generation)]
+        if isinstance(idx, ShardedIndex):
+            fresh += [self.leases.acquire(sh.prefix, sh.generation)
+                      for sh in idx.shards if sh is not None]
+        old, self._held = self._held, fresh
+        for lease in old:
+            lease.release()
 
     # ------------------------------------------------------------ lifecycle
     @property
@@ -198,48 +227,69 @@ class SearchService:
         return self._index.generation
 
     def _reader_pin(self):
-        """The generation value a freshly opened searcher would pin —
-        an int for an `Index`, the (cluster, *shards) tuple for a
-        `ShardedIndex` (shards commit independently)."""
+        """The visibility state a freshly opened searcher would pin —
+        `(generation, nrt_seq)` for an `Index`, `(reader_generation,
+        per-shard nrt_seqs)` for a `ShardedIndex` (shards commit
+        independently). The NRT sequence numbers (index/nrt.py) make a
+        memory-segment add/retract — same durable generation, different
+        visible document set — a distinct pin, so result caches and
+        swap decisions treat it like any other generation change."""
         idx = self._index
-        return idx.reader_generation \
-            if isinstance(idx, ShardedIndex) else idx.generation
+        if isinstance(idx, ShardedIndex):
+            return (idx.reader_generation, idx.nrt_seq)
+        return (idx.generation, idx.nrt_seq)
 
     def refresh(self) -> bool:
-        """Pick up the index's current generation (after a writer's
-        commit/merge). Returns True when a newer generation was opened.
-        Cache entries of the old generation become unreachable (keys are
-        generation-qualified) and age out of the LRUs."""
-        before = self._reader_pin()
+        """Pick up the index's current visibility state (after a
+        writer's commit/merge/add). Returns True when a new snapshot was
+        opened. Cache entries of the old snapshot become unreachable
+        (keys are pin-qualified) and age out of the LRUs. Cheap no-op
+        when nothing changed: one LIST, zero range reads, no reopen."""
         self._index.refresh()
-        if self._reader_pin() == before \
-                and self.searcher.generation == before:
+        if self._reader_pin() == self._pin:
             return False
         self._open_searcher()
         return True
+
+    def follow(self, bus) -> "SearchService":
+        """Swap on push instead of poll: `refresh()` whenever `bus`
+        (serving/notify.py GenerationBus) delivers a visibility event.
+        An event for an unrelated prefix costs one no-op refresh. On a
+        threaded bus the swap runs on the delivery thread — front the
+        service with `Frontend.follow` when queries run concurrently,
+        which defers the swap to a batch boundary. Returns self."""
+        self._subscription = bus.subscribe(lambda _event: self.refresh())
+        return self
 
     @property
     def cache_hits(self) -> int:
         return self.stats.cache_hits
 
     def close(self) -> None:
-        """Release the index handle's transport (worker pools)."""
+        """Release the index handle's transport (worker pools), any bus
+        subscription, and every held lease."""
+        if self._subscription is not None:
+            self._subscription.cancel()
+            self._subscription = None
+        for lease in self._held:
+            lease.release()
+        self._held = []
         if hasattr(self.searcher, "close"):
             self.searcher.close()
         self._index.close()
 
     # ------------------------------------------------------------ internals
     def _cache_key(self, query, top_k):
-        # keyed by the generation of the searcher actually serving — NOT
-        # the Index handle's, which a shared writer may have bumped ahead
-        # of refresh(); results cached between a commit and a refresh()
-        # must stay filed under the snapshot that produced them.
-        # Query trees key by their NORMALIZED form, so equivalent
-        # spellings — `a AND (b AND c)` vs `a b c`, `-(x OR y)` vs
-        # `NOT x NOT y` — share one cache entry.
+        # keyed by the pin captured when the serving searcher opened —
+        # NOT the Index handle's live state, which a shared writer may
+        # have bumped ahead of refresh(); results cached between a
+        # commit and a refresh() must stay filed under the snapshot that
+        # produced them. Query trees key by their NORMALIZED form, so
+        # equivalent spellings — `a AND (b AND c)` vs `a b c`,
+        # `-(x OR y)` vs `NOT x NOT y` — share one cache entry.
         if isinstance(query, Query):
             query = normalize(query)
-        return (self.searcher.generation, query, top_k)
+        return (self._pin, query, top_k)
 
     def _cache_get(self, key):
         if self._cache is None:

@@ -1,0 +1,436 @@
+"""NRT ingest subsystem: memory-resident segments, generation
+notifications, and lease-based GC (index/nrt.py + serving/notify.py).
+
+Load-bearing acceptance criteria: (1) a document staged by
+`IndexWriter.add()` is returned by `SearchService.search` BEFORE
+`commit()` publishes blobs, and the pre-publish results are
+byte-identical to the post-publish + refresh results — single index and
+sharded cluster; (2) `collect_garbage` never deletes a blob reachable
+from a leased generation, even with `grace_s=0.0` (property-tested over
+random add/commit/refresh/gc interleavings); (3) push-notified swaps
+cost zero range reads when nothing durable changed."""
+
+import threading
+import warnings
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.data import make_logs_like, write_corpus
+from repro.data.tokenizer import distinct_words
+from repro.index import (And, BuilderConfig, Index, LeaseRegistry,
+                         MultiSegmentSearcher, Or, Term)
+from repro.index.lifecycle import collect_garbage, reachable_blobs
+from repro.serving import (Frontend, FrontendConfig, GenerationBus,
+                           GenerationEvent, SearchService, ShardedIndex,
+                           collect_cluster_garbage)
+from repro.storage import InMemoryBlobStore
+
+CFG = BuilderConfig(B=1200, F0=1.0, hedge_layers=1, index_ngrams=3)
+
+MIXED = [
+    "error", "info", "block",
+    And((Term("error"), Term("block"))),
+    Or((Term("warn"), Term("node7"))),
+    Or((And((Term("error"), Term("block"))), Term("node9"))),
+]
+
+
+class CountingStore(InMemoryBlobStore):
+    """InMemoryBlobStore that counts range reads (the data plane a
+    refresh must NOT touch when nothing durable changed)."""
+
+    def __init__(self):
+        super().__init__()
+        self.n_reads = 0
+
+    def get_range(self, req):
+        self.n_reads += 1
+        return super().get_range(req)
+
+
+def _identical(a, b):
+    assert len(a) == len(b)
+    return all(x.texts == y.texts and x.refs == y.refs
+               for x, y in zip(a, b))
+
+
+def _fixture(n1=700, n2=180, store=None):
+    store = store or InMemoryBlobStore()
+    docs1 = make_logs_like(n1, seed=71)
+    docs2 = make_logs_like(n2, seed=72)
+    c1 = write_corpus(store, "corpus/nrt1", docs1, n_blobs=3)
+    c2 = write_corpus(store, "corpus/nrt2", docs2, n_blobs=2)
+    return store, docs1, docs2, c1, c2
+
+
+def _word_only_in(docs2, docs1):
+    """A query word present in docs2 but absent from docs1."""
+    have = set()
+    for d in docs1:
+        have |= distinct_words(d)
+    for d in docs2:
+        for w in distinct_words(d):
+            if w not in have:
+                return w
+    raise AssertionError("fixtures overlap completely")
+
+
+# ------------------------------------------------ pre-publish byte identity
+def test_add_visible_before_publish_and_identical_after(tmp_path=None):
+    store, docs1, docs2, c1, c2 = _fixture()
+    idx = Index.build(c1, CFG, store, "index/nrt")
+    svc = SearchService(idx, cache_size=32)
+    fresh_word = _word_only_in(docs2, docs1)
+    assert svc.search(fresh_word).texts == []     # not ingested yet
+
+    w = idx.writer()
+    rep = w.add(c2)
+    assert rep.n_docs == len(docs2)
+    # nothing durable happened: no segment blobs, no new manifest
+    assert store.list("index/nrt/seg-") == []
+    assert idx.generation == 1
+    # ...but the documents are already searchable through this handle
+    assert svc.refresh() is True
+    pre = svc.search_batch(MIXED + [fresh_word])
+    expect_fresh = {d for d in docs2 if fresh_word in distinct_words(d)}
+    assert set(pre[-1].texts) == expect_fresh and expect_fresh
+
+    w.commit()
+    assert idx.generation == 2
+    assert store.list("index/nrt/seg-") != []     # now durable
+    assert svc.refresh() is True
+    post = svc.search_batch(MIXED + [fresh_word])
+    assert _identical(pre, post)                  # byte-identical swap
+
+    # a cold reader over the published store agrees exactly
+    cold = SearchService(Index.open(store, "index/nrt"))
+    assert _identical(pre, cold.search_batch(MIXED + [fresh_word]))
+
+
+def test_memory_segment_publish_is_byte_identical(tmp_path=None):
+    store, _docs1, _docs2, c1, c2 = _fixture(n1=120, n2=120)
+    idx = Index.build(c1, CFG, store, "index/pubbytes")
+    w = idx.writer()
+    w.add(c2)
+    seg = idx.memory_segments[0]
+    staged = {name: seg._staging.get(name) for name in seg.blob_names()}
+    assert staged and seg.staged_bytes == sum(len(v) for v in staged.values())
+    w.commit()
+    for name, data in staged.items():
+        assert store.get(name) == data            # the very same bytes
+
+
+def test_abort_retracts_memory_segments(tmp_path=None):
+    store, docs1, docs2, c1, c2 = _fixture(n1=120, n2=120)
+    idx = Index.build(c1, CFG, store, "index/abort")
+    svc = SearchService(idx)
+    fresh_word = _word_only_in(docs2, docs1)
+    w = idx.writer()
+    w.add(c2)
+    svc.refresh()
+    assert svc.search(fresh_word).texts != []
+    w.abort()
+    assert idx.memory_segments == []
+    assert svc.refresh() is True
+    assert svc.search(fresh_word).texts == []
+
+
+def test_cluster_add_visible_before_publish_and_identical(tmp_path=None):
+    store, docs1, docs2, c1, c2 = _fixture(n1=900, n2=450)
+    cluster = ShardedIndex.build(c1, CFG, store, "cluster/nrt", n_shards=3)
+    svc = SearchService(cluster, cache_size=32)
+    fresh_word = _word_only_in(docs2, docs1)
+    assert svc.search(fresh_word).texts == []
+
+    # route the delta the same way cluster.append would, but stage each
+    # shard's slice as a MEMORY segment through the shard writer
+    writers = []
+    for s, part in enumerate(cluster.partition(c2)):
+        if part.refs:
+            assert cluster.shards[s] is not None
+            w = cluster.shard(s).writer()
+            w.add(part)
+            writers.append(w)
+    assert writers
+    assert svc.refresh() is True
+    pre = svc.search_batch(MIXED + [fresh_word])
+    expect_fresh = {d for d in docs2 if fresh_word in distinct_words(d)}
+    assert set(pre[-1].texts) == expect_fresh and expect_fresh
+
+    for w in writers:
+        w.commit()
+    assert svc.refresh() is True
+    post = svc.search_batch(MIXED + [fresh_word])
+    assert _identical(pre, post)
+
+    cold = SearchService(ShardedIndex.open(store, "cluster/nrt"))
+    assert _identical(pre, cold.search_batch(MIXED + [fresh_word]))
+    cold.close()
+    svc.close()
+
+
+# ----------------------------------------------------- O(1) no-op refreshes
+def test_refresh_is_zero_read_noop_and_swap_is_zero_read(tmp_path=None):
+    store = CountingStore()
+    _store, docs1, docs2, c1, c2 = _fixture(n1=120, n2=120, store=store)
+    idx = Index.build(c1, CFG, store, "index/cheap")
+    svc = SearchService(idx)
+
+    n0 = store.n_reads
+    for _ in range(3):
+        assert svc.refresh() is False     # unchanged: LIST only
+    assert store.n_reads == n0
+
+    w = idx.writer()
+    w.add(c2)
+    n1 = store.n_reads                    # (add read corpus text blobs)
+    assert svc.refresh() is True          # memory swap: zero range reads
+    assert store.n_reads == n1
+    assert isinstance(svc.searcher, MultiSegmentSearcher)
+
+    w.commit()
+    n2 = store.n_reads
+    assert svc.refresh() is True          # publish swap: headers cached,
+    assert store.n_reads == n2            # manifest already in-handle
+
+    # a FRESH handle still pays its boot reads (the cache is per-handle)
+    before = store.n_reads
+    SearchService(Index.open(store, "index/cheap"))
+    assert store.n_reads > before
+
+
+def test_sharded_refresh_is_zero_read_noop(tmp_path=None):
+    store = CountingStore()
+    _store, _docs1, _docs2, c1, _c2 = _fixture(n1=200, n2=30, store=store)
+    cluster = ShardedIndex.build(c1, CFG, store, "cluster/cheap",
+                                 n_shards=2)
+    n0 = store.n_reads
+    cluster.refresh()
+    assert store.n_reads == n0
+
+
+# ------------------------------------------------------------ notifications
+def test_bus_stepped_buffers_until_drain(tmp_path=None):
+    bus = GenerationBus()
+    seen = []
+    bus.subscribe(seen.append)
+    bus.post(GenerationEvent(prefix="p", kind="memory", generation=1,
+                             seq=1))
+    bus.post_generation(prefix="p", kind="published", generation=2)
+    assert seen == [] and bus.pending == 2
+    assert bus.drain() == 2
+    assert [e.kind for e in seen] == ["memory", "published"]
+    assert bus.n_delivered == 2 and bus.pending == 0
+
+
+def test_bus_threaded_delivers_async(tmp_path=None):
+    bus = GenerationBus(threaded=True)
+    got = threading.Event()
+    seen = []
+
+    def on_event(e):
+        seen.append(e)
+        got.set()
+
+    bus.subscribe(on_event)
+    bus.post_generation(prefix="p", kind="published", generation=3)
+    assert got.wait(timeout=5.0)
+    assert seen[0].generation == 3
+    bus.close()
+
+
+def test_bus_callback_errors_are_counted_not_raised(tmp_path=None):
+    bus = GenerationBus()
+    ok = []
+
+    def bad(_e):
+        raise RuntimeError("boom")
+
+    bus.subscribe(bad)
+    bus.subscribe(ok.append)
+    bus.post_generation(prefix="p", kind="memory", generation=1)
+    bus.drain()
+    assert bus.n_callback_errors == 1 and len(ok) == 1
+
+
+def test_service_follows_bus_push_swap(tmp_path=None):
+    store, docs1, docs2, c1, c2 = _fixture(n1=120, n2=120)
+    idx = Index.build(c1, CFG, store, "index/follow")
+    bus = GenerationBus()
+    idx.attach_bus(bus)
+    svc = SearchService(idx).follow(bus)
+    fresh_word = _word_only_in(docs2, docs1)
+    w = idx.writer()
+    w.add(c2)
+    assert svc.search(fresh_word).texts == []     # not yet delivered
+    bus.drain()                                   # push-triggered swap
+    pre = svc.search(fresh_word)
+    assert pre.texts != []
+    w.commit()
+    bus.drain()
+    assert svc.search(fresh_word).texts == pre.texts
+
+
+def test_frontend_follow_swaps_at_batch_boundary(tmp_path=None):
+    store, docs1, docs2, c1, c2 = _fixture(n1=120, n2=120)
+    idx = Index.build(c1, CFG, store, "index/fefollow")
+    bus = GenerationBus()
+    idx.attach_bus(bus)
+    svc = SearchService(idx)
+    fe = Frontend(svc, FrontendConfig(max_queue=8)).follow(bus)
+    fresh_word = _word_only_in(docs2, docs1)
+    idx.writer().add(c2)
+    bus.drain()                  # flags the refresh; swap is deferred
+    fut = fe.submit(fresh_word)
+    fe.run_once()                # ...to the next batch boundary
+    assert fut.result().texts != []
+    fe.close()
+
+
+# ------------------------------------------------------------------- leases
+def test_lease_pins_generation_through_gc(tmp_path=None):
+    store, docs1, _docs2, c1, c2 = _fixture(n1=120, n2=120)
+    idx = Index.build(c1, CFG, store, "index/lease")
+    w = idx.writer()
+    w.append(c2)
+    w.commit()                                   # gen 2: base + segment
+    reg = LeaseRegistry()
+    lease = reg.acquire("index/lease", 2)
+    pinned = Index.open(store, "index/lease", generation=2).searcher()
+    expect = pinned.query_batch(MIXED)
+
+    w.merge()                                    # gen 3: fresh base only
+    # grace 0 + keep 1 would normally delete gen<=2 outright; the lease
+    # must keep every blob generation 2 reaches — no warning either
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        report = collect_garbage(store, "index/lease", keep=1,
+                                 grace_s=0.0, leases=reg)
+    gen2_live = reachable_blobs(store, "index/lease", keep=1,
+                                min_generation=2)
+    assert not (set(report.deleted) & gen2_live)
+    again = Index.open(store, "index/lease", generation=2).searcher()
+    assert _identical(expect, again.query_batch(MIXED))
+
+    lease.release()
+    lease.release()                              # idempotent
+    assert reg.min_generation("index/lease") is None
+    collect_garbage(store, "index/lease", keep=1, grace_s=0.0, leases=reg)
+    with pytest.raises(Exception):
+        Index.open(store, "index/lease", generation=2)
+
+
+def test_service_leases_move_with_refresh(tmp_path=None):
+    store, _docs1, _docs2, c1, c2 = _fixture(n1=120, n2=120)
+    idx = Index.build(c1, CFG, store, "index/svclease")
+    reg = LeaseRegistry()
+    svc = SearchService(Index.open(store, "index/svclease"), leases=reg)
+    assert reg.min_generation("index/svclease") == 1
+    w = idx.writer()
+    w.append(c2)
+    w.commit()
+    assert reg.min_generation("index/svclease") == 1   # not yet swapped
+    assert svc.refresh() is True
+    assert reg.min_generation("index/svclease") == 2   # moved atomically
+    svc.close()
+    assert reg.min_generation("index/svclease") is None
+
+
+def test_cluster_gc_respects_service_leases(tmp_path=None):
+    store, _docs1, _docs2, c1, c2 = _fixture(n1=400, n2=300)
+    cluster = ShardedIndex.build(c1, CFG, store, "cluster/lease",
+                                 n_shards=2)
+    reg = LeaseRegistry()
+    svc = SearchService(ShardedIndex.open(store, "cluster/lease"),
+                        leases=reg, cache_size=16)
+    expect = svc.search_batch(MIXED)
+    # age every shard: append + merge makes the old bases unreachable
+    # from latest-1 — only the service's leases protect them
+    for s in range(cluster.n_shards):
+        w = cluster.shard(s).writer()
+        w.append(cluster.partition(c2)[s])
+        w.commit()
+        w.merge()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        collect_cluster_garbage(store, "cluster/lease", keep=1,
+                                grace_s=0.0, leases=reg)
+    assert _identical(expect, svc.search_batch(MIXED))  # snapshot intact
+    assert svc.refresh() is True
+    collect_cluster_garbage(store, "cluster/lease", keep=1, grace_s=0.0,
+                            leases=reg)
+    svc.close()
+
+
+def test_grace_zero_without_registry_warns(tmp_path=None):
+    store, _docs1, _docs2, c1, _c2 = _fixture(n1=40, n2=20)
+    Index.build(c1, CFG, store, "index/warn")
+    with pytest.warns(DeprecationWarning, match="LeaseRegistry"):
+        collect_garbage(store, "index/warn", keep=1, grace_s=0.0)
+    with pytest.warns(DeprecationWarning, match="LeaseRegistry"):
+        collect_cluster_garbage(store, "index/warn", keep=1, grace_s=0.0)
+    # either protection silences it
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        collect_garbage(store, "index/warn", keep=1, grace_s=600.0)
+        collect_garbage(store, "index/warn", keep=1, grace_s=0.0,
+                        leases=LeaseRegistry())
+
+
+# -------------------------------------------- property: random interleavings
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_interleaved_ops_keep_leases_safe_and_docs_visible(data):
+    """Random add/commit/refresh/merge/gc interleavings with a leased
+    reader: (1) the leased generation's blobs are never deleted — the
+    pinned searcher keeps answering exactly; (2) every document whose
+    add/commit notification was observed (bus drained) is visible to
+    the following service — no lost update between notify and swap."""
+    store = InMemoryBlobStore()
+    docs = make_logs_like(30, seed=5)
+    base = write_corpus(store, "corpus/prop", docs, n_blobs=1)
+    cfg = BuilderConfig(B=600, F0=1.0, index_ngrams=0)
+    idx = Index.build(base, cfg, store, "index/prop")
+    bus = GenerationBus()
+    idx.attach_bus(bus)
+    reg = LeaseRegistry()
+    svc = SearchService(idx, leases=reg).follow(bus)
+    pin = reg.acquire("index/prop", 1)           # an unmoving old reader
+    pinned = Index.open(store, "index/prop", generation=1).searcher()
+    baseline = pinned.query("error")
+    w = idx.writer()
+    sentinels: list[str] = []
+
+    n_ops = data.draw(st.integers(min_value=2, max_value=7))
+    for step in range(n_ops):
+        op = data.draw(st.sampled_from(
+            ["add", "commit", "refresh", "merge", "gc"]))
+        if op == "add":
+            k = len(sentinels)
+            word = f"sentineldoc{k}"
+            extra = write_corpus(store, f"corpus/prop-x{k}",
+                                 [f"{word} payload entry"], n_blobs=1)
+            w.add(extra)
+            sentinels.append(word)
+        elif op == "commit":
+            if w.n_staged:
+                w.commit()
+        elif op == "refresh":
+            svc.refresh()
+        elif op == "merge":
+            if not w.n_staged:
+                w.merge()
+        elif op == "gc":
+            collect_garbage(store, "index/prop", keep=1, grace_s=0.0,
+                            leases=reg)
+        bus.drain()     # observe whatever notifications the op posted
+        # invariant 2: every added-and-notified doc is visible NOW
+        for word in sentinels:
+            res = svc.search(word)
+            assert len(res.texts) == 1 and word in res.texts[0], \
+                f"step {step} op {op}: lost {word}"
+        # invariant 1: the leased generation still answers, unchanged
+        res = pinned.query("error")
+        assert res.texts == baseline.texts and res.refs == baseline.refs
+    assert pin.generation == 1   # lease held throughout
