@@ -15,7 +15,7 @@ from repro.data.tokenizer import distinct_words, parse_words
 from repro.index import Builder, BuilderConfig, Searcher
 from repro.index.baselines import BTreeIndex, SkipListIndex
 from repro.storage import (InMemoryBlobStore, NetworkModel, RangeRequest,
-                           REGIONS, SimCloudStore)
+                           REGIONS, SimCloudStore, SimCloudTransport)
 
 from .common import (cranfield_fixture, latencies, logs_fixture, row,
                      sample_words)
@@ -52,7 +52,7 @@ def bench_fig5_false_positives() -> list[str]:
     for L in (1, 2, 3, 4, 6):
         Builder(BuilderConfig(B=B, L=L, common_frac=0.0)).build(
             corpus, store, f"idx/f5-{L}")
-        s = Searcher(SimCloudStore(store, seed=0), f"idx/f5-{L}")
+        s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), f"idx/f5-{L}")
         emp = float(np.mean(
             [s.query(w).stats.n_false_positives for w in words]))
         exp = F_exact(profile, L, B)
@@ -187,7 +187,7 @@ def bench_fig10_structure() -> list[str]:
         for L in (1, 2, 4, 8):
             Builder(BuilderConfig(B=B, L=L, common_frac=0.01)).build(
                 corpus, store, f"idx/f10-{B}-{L}")
-            s = Searcher(SimCloudStore(store, seed=0), f"idx/f10-{B}-{L}")
+            s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), f"idx/f10-{B}-{L}")
             fp, lat, lk = [], [], []
             for w in words:
                 res = s.query(w)
@@ -233,7 +233,7 @@ def bench_fig14_lookup() -> list[str]:
     """Term-index lookup latency only (Airphant vs SQLite-like B-tree)."""
     store, docs, truth = logs_fixture()
     words = sample_words(truth, 50, seed=4)
-    s = Searcher(SimCloudStore(store, seed=1), "index/air")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=1)), "index/air")
     bt = BTreeIndex(store, "index/bt").open(SimCloudStore(store, seed=1))
     air = np.asarray([s.lookup(w)[1].lookup.elapsed_s for w in words])
     bts = np.asarray([bt.lookup(w)[2].lookup.elapsed_s for w in words])
@@ -264,7 +264,7 @@ def bench_fig15_scalability() -> list[str]:
             for w in distinct_words(d):
                 truth.setdefault(w, set()).add(i)
         words = sample_words(truth, 25, seed=0)
-        s = Searcher(SimCloudStore(store, seed=0), "i")
+        s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), "i")
         q_bt = bt.open(SimCloudStore(store, seed=0)).query
         air = latencies(s.query, words).mean()
         btl = latencies(q_bt, words).mean()
@@ -287,7 +287,7 @@ def bench_fig16_tiny_sketch() -> list[str]:
         for L in (1, 2, 4, 8):
             rep = Builder(BuilderConfig(B=B, L=L, common_frac=0.0)).build(
                 corpus, store, f"idx/f16-{B}-{L}")
-            s = Searcher(SimCloudStore(store, seed=0), f"idx/f16-{B}-{L}")
+            s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), f"idx/f16-{B}-{L}")
             fp, lat, lk = [], [], []
             for w in words:
                 res = s.query(w)
@@ -308,7 +308,7 @@ def bench_fig11_individual_breakdown() -> list[str]:
     store, docs, truth = logs_fixture()
     words = sample_words(truth, 12, seed=11)
     rows = []
-    s = Searcher(SimCloudStore(store, seed=3), "index/air")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/air")
     bt = BTreeIndex(store, "index/bt").open(SimCloudStore(store, seed=3))
     for name, q in (("airphant", s.query), ("btree", bt.query)):
         for i, w in enumerate(words):
@@ -329,7 +329,7 @@ def bench_regex_ngram() -> list[str]:
     corpus = write_corpus(store, "corpus/re", docs, n_blobs=2)
     Builder(BuilderConfig(B=4000, F0=1.0, index_ngrams=3)).build(
         corpus, store, "index/re")
-    s = Searcher(SimCloudStore(store, seed=0), "index/re")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), "index/re")
     import re as _re
     rows = []
     for pattern in (r"blk_1[0-9]2\b", r"shuffle_9\d+"):
@@ -353,7 +353,7 @@ def bench_fig17_accuracy_f0() -> list[str]:
     for F0 in (1.0, 0.01, 0.0001):
         rep = Builder(BuilderConfig(B=20_000, F0=F0)).build(
             corpus, store, f"idx/f17-{F0}")
-        s = Searcher(SimCloudStore(store, seed=0), f"idx/f17-{F0}")
+        s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), f"idx/f17-{F0}")
         lat = latencies(s.query, words)
         lk = np.asarray([s.lookup(w)[1].lookup.elapsed_s for w in words])
         rows.append(row(

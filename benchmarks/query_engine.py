@@ -168,7 +168,8 @@ def _serve_serially(cloud, svc, queries, *, queueing: bool,
 
 def _run_serial(store, queries) -> tuple[list, dict]:
     cloud = SimCloudStore(store, seed=42)
-    svc = SearchService(cloud, "index/qe", coalesce_gap=None)
+    svc = SearchService(SimCloudTransport(cloud), "index/qe",
+                        coalesce_gap=None)
     start = cloud.clock_s
     results, completions = _serve_serially(cloud, svc, queries,
                                            queueing=True)
@@ -182,7 +183,7 @@ def _run_serial(store, queries) -> tuple[list, dict]:
 def _run_batched(store, queries, cache_bytes: int = 0,
                  waves: int = 1) -> tuple[list, dict]:
     cloud = SimCloudStore(store, seed=42)
-    svc = SearchService(cloud, "index/qe",
+    svc = SearchService(SimCloudTransport(cloud), "index/qe",
                         superpost_cache_bytes=cache_bytes)
     results, last = [], {}
     for _wave in range(waves):

@@ -1,6 +1,6 @@
 """Serving-tier benchmark: scatter-gather + micro-batched load curves.
 
-Six scenarios over one sharded cluster (4 doc-hash shards unless the
+Eight scenarios over one sharded cluster (4 doc-hash shards unless the
 scenario reshards, each shard on its own simulated VM↔storage link with
 an independent virtual clock):
 
@@ -24,6 +24,23 @@ an independent virtual clock):
       (batch completion − arrival) on the virtual clock, so the curves
       show the batching window trading a bounded added wait for
       amortized fetch rounds — and where each configuration saturates.
+
+  adaptive_serving — the control plane at scale: real scatter rounds
+      calibrate a service-time fit S(b) = a + c·b, then millions of
+      virtual-clock arrivals (zipfian / bursty / multi-tenant mixes,
+      offered load swept around the calibrated capacity) replay through
+      the SAME queueing model under static windows vs the
+      `BatchController`. The claim: adaptive matches or beats the best
+      static window at every offered load without being told which it
+      is; the `DeadlineShedder`'s predictive rejections are scored for
+      precision/recall against the no-shed oracle on the same trace.
+
+  soak — real threads on a real disk store (`LocalBlobStore`): p2c
+      replica picking over telemetry gauges, adaptive window, and
+      predictive shedding under concurrent client threads on the wall
+      clock. Every future settles, in-flight gauges return to zero,
+      and the threaded path stays byte-identical to a direct
+      `query_batch`.
 
   hedged_replicas — the same burst served from a straggler-heavy
       replica set (high-variance NetworkModel), with and without
@@ -61,7 +78,8 @@ import numpy as np
 from repro.data import make_logs_like, write_corpus
 from repro.data.tokenizer import distinct_words
 from repro.index import (And, BuilderConfig, Index, Not, Or, Regex, Term)
-from repro.serving import ShardedIndex
+from repro.serving import (BatchController, ControlConfig,
+                           DeadlineExceeded, DeadlineShedder, ShardedIndex)
 from repro.storage import (InMemoryBlobStore, NetworkModel, SimCloudStore,
                            SimCloudTransport)
 
@@ -246,57 +264,79 @@ def _hedged_scenario(store, cluster, queries, rounds: int) -> dict:
 
 
 # ---------------------------------------------------------------- load curves
-def simulate_open_loop(searcher, pool: list, offered_qps: float,
-                       window_s: float, max_batch: int, max_queue: int,
-                       n_requests: int, seed: int = 0,
-                       arrivals: np.ndarray | None = None) -> dict:
-    """Open-loop Poisson arrivals into a micro-batching single server.
+# per-request outcome codes in `_drive_open_loop`'s status array
+SERVED, SHED, SHED_PREDICTED, EXPIRED = range(4)
 
-    Arrivals are independent of completions (offered load, not achieved
-    load). A batch opens at its first waiter, closes after `window_s` or
-    at `max_batch`, then runs as ONE shared `query_batch` round whose
-    service time is the cluster's simulated scatter wall. Requests
-    arriving with `max_queue` already waiting are shed (that is the
-    frontend's `Overloaded` path). Latency = completion − arrival.
 
-    This is a virtual-time MODEL of `serving/frontend.py` — the real
-    `Frontend` sleeps on wall-clock `Condition.wait`, which a virtual
-    clock cannot drive — so admission (shed at `max_queue`), batch
-    formation (window / `max_batch`), and dispatch must stay in
-    lockstep with `Frontend.submit`/`_loop`/`_take`.
-    tests/test_serving_cluster.py pins the two together on a burst;
-    change the policy in both places or that test fails. `arrivals`
-    overrides the Poisson schedule (how the pin injects its burst).
+def _deadline_of(deadlines, i):
+    """Absolute deadline of request `i`, or None (np.inf encodes none)."""
+    if deadlines is None:
+        return None
+    d = float(deadlines[i])
+    return d if np.isfinite(d) else None
+
+
+def _drive_open_loop(arrivals, service, *, max_batch: int, max_queue: int,
+                     window_s: float = 0.0, controller=None, shedder=None,
+                     deadlines=None, collect_results: bool = False) -> dict:
+    """Virtual-time queueing core shared by every open-loop scenario.
+
+    Mirrors `serving/frontend.py` decision-for-decision: admission sheds
+    at `max_queue` (`Overloaded`), then asks the optional
+    `DeadlineShedder` (`PredictedDeadlineMiss`); a batch opens at its
+    first waiter, collects for the window — the static `window_s` or the
+    optional `BatchController`'s per-batch decision at queue depth —
+    closing early at `max_batch`; `_take` pops expired requests along
+    with live ones (they consume batch slots, checked against dispatch
+    time, strict `>` like `Frontend._serve`); an all-expired batch runs
+    no service round. `service(live)` returns the batch's service
+    seconds (or `(seconds, results)` when `collect_results`).
+
+    tests/test_serving_cluster.py pins this model to the real `Frontend`
+    on a burst and tests/test_control_plane.py pins the control-plane
+    paths; change the policy here and there together or those fail.
     """
-    rng = np.random.default_rng(seed)
-    if arrivals is None:
-        arrivals = np.cumsum(rng.exponential(1.0 / offered_qps,
-                                             size=n_requests))
-    order = rng.integers(0, len(pool), size=n_requests)
+    n = len(arrivals)
+    status = np.full(n, SERVED, dtype=np.int8)
+    completion = np.full(n, np.nan)
     pending: deque[int] = deque()
     next_i = 0
     t_free = 0.0
-    latencies: list[float] = []
-    shed = 0
     batch_sizes: list[int] = []
+    windows: list[float] = []
+    results: list | None = [None] * n if collect_results else None
 
     def admit_one() -> None:
-        nonlocal next_i, shed
-        if len(pending) >= max_queue:
-            shed += 1                # typed Overloaded at the frontend
-        else:
-            pending.append(next_i)
+        nonlocal next_i
+        i = next_i
         next_i += 1
+        if len(pending) >= max_queue:
+            status[i] = SHED         # typed Overloaded at the frontend
+            return
+        t_arr = float(arrivals[i])
+        if shedder is not None:
+            try:
+                shedder.admit(t_arr, _deadline_of(deadlines, i),
+                              len(pending))
+            except DeadlineExceeded:
+                status[i] = SHED_PREDICTED
+                return
+        pending.append(i)
+        if controller is not None:
+            controller.on_arrival(t_arr)
 
     def admit(until: float) -> None:
-        while next_i < n_requests and arrivals[next_i] <= until:
+        while next_i < n and arrivals[next_i] <= until:
             admit_one()
 
-    while next_i < n_requests or pending:
+    while next_i < n or pending:
         if not pending:
             admit(arrivals[next_i])   # jump idle time to the next arrival
             continue
-        open_t = max(arrivals[pending[0]], t_free)
+        open_t = max(float(arrivals[pending[0]]), t_free)
+        w = (controller.window(len(pending), now=open_t)
+             if controller is not None else window_s)
+        windows.append(w)
         if len(pending) >= max_batch:
             # backlog already fills the batch: the Frontend's loop takes
             # it immediately (no window wait), so arrivals during the
@@ -308,9 +348,9 @@ def simulate_open_loop(searcher, pool: list, offered_qps: float,
             # early the instant the batch fills (Frontend._loop breaks
             # at max_batch and _take pops the queue right there), so
             # later arrivals see the popped queue, not the batch
-            close_t = open_t + window_s
+            close_t = open_t + w
             dispatch_t = close_t
-            while next_i < n_requests and arrivals[next_i] <= close_t:
+            while next_i < n and arrivals[next_i] <= close_t:
                 t_arr = float(arrivals[next_i])
                 admit_one()
                 if len(pending) >= max_batch:
@@ -318,26 +358,144 @@ def simulate_open_loop(searcher, pool: list, offered_qps: float,
                     break
         batch = [pending.popleft()
                  for _ in range(min(max_batch, len(pending)))]
-        searcher.query_batch([pool[order[i]] for i in batch])
-        service_s = searcher.last_scatter.wall_s
-        done_t = dispatch_t + service_s
-        batch_sizes.append(len(batch))
-        latencies.extend(done_t - arrivals[i] for i in batch)
+        live: list[int] = []
+        for i in batch:
+            dl = _deadline_of(deadlines, i)
+            if dl is not None and dispatch_t > dl:
+                status[i] = EXPIRED   # consumed its slot all the same
+            else:
+                live.append(i)
+        if live:
+            out = service(live)
+            service_s, served = out if isinstance(out, tuple) \
+                else (out, None)
+            done_t = dispatch_t + service_s
+            batch_sizes.append(len(live))
+            for j, i in enumerate(live):
+                completion[i] = done_t
+                if served is not None:
+                    results[i] = served[j]
+            if controller is not None:
+                controller.on_batch(service_s, len(live))
+            if shedder is not None:
+                shedder.on_batch(service_s, len(live))
+        else:
+            done_t = dispatch_t       # all expired: no fetch round
         t_free = done_t
         admit(done_t)
 
-    arr = np.asarray(latencies) if latencies else np.zeros(1)
-    horizon = max(float(arrivals[-1]), t_free)
-    return {
+    return {"status": status, "completion": completion,
+            "batch_sizes": batch_sizes, "windows": windows,
+            "t_end": max(float(arrivals[-1]), t_free) if n else 0.0,
+            "results": results}
+
+
+def _summarize_open_loop(raw: dict, arrivals, offered_qps: float,
+                         window_s: float, n_requests: int,
+                         adaptive: bool = False) -> dict:
+    served = raw["status"] == SERVED
+    lat = raw["completion"][served] - np.asarray(arrivals, float)[served]
+    arr = lat if lat.size else np.zeros(1)
+    shed = int((raw["status"] == SHED).sum())
+    out = {
         "offered_qps": offered_qps, "window_ms": window_s * 1e3,
-        "n_requests": n_requests, "n_served": len(latencies),
+        "n_requests": n_requests, "n_served": int(served.sum()),
         "n_shed": shed, "shed_frac": shed / n_requests,
-        "achieved_qps": len(latencies) / horizon,
+        "achieved_qps": int(served.sum()) / raw["t_end"],
         "p50_ms": float(np.percentile(arr, 50) * 1e3),
         "p99_ms": float(np.percentile(arr, 99) * 1e3),
-        "mean_batch_size": float(np.mean(batch_sizes))
-        if batch_sizes else 0.0,
+        "mean_batch_size": float(np.mean(raw["batch_sizes"]))
+        if raw["batch_sizes"] else 0.0,
     }
+    if adaptive:
+        out["adaptive"] = True
+        out["mean_window_ms"] = float(
+            np.mean(raw["windows"]) * 1e3) if raw["windows"] else 0.0
+    if (raw["status"] == SHED_PREDICTED).any() or \
+            (raw["status"] == EXPIRED).any():
+        out["n_shed_predicted"] = int(
+            (raw["status"] == SHED_PREDICTED).sum())
+        out["n_expired"] = int((raw["status"] == EXPIRED).sum())
+    return out
+
+
+def simulate_open_loop(searcher, pool: list, offered_qps: float,
+                       window_s: float, max_batch: int, max_queue: int,
+                       n_requests: int, seed: int = 0,
+                       arrivals: np.ndarray | None = None,
+                       controller=None, shedder=None, deadlines=None,
+                       collect_results: bool = False) -> dict:
+    """Open-loop Poisson arrivals into a micro-batching single server.
+
+    Arrivals are independent of completions (offered load, not achieved
+    load). A batch opens at its first waiter, closes after the window or
+    at `max_batch`, then runs as ONE shared `query_batch` round whose
+    service time is the cluster's simulated scatter wall. Requests
+    arriving with `max_queue` already waiting are shed (that is the
+    frontend's `Overloaded` path). Latency = completion − arrival.
+
+    This is a virtual-time MODEL of `serving/frontend.py` — the real
+    `Frontend` sleeps on wall-clock `Condition.wait`, which a virtual
+    clock cannot drive — so admission, batch formation, and dispatch
+    live in `_drive_open_loop`, which stays in lockstep with
+    `Frontend.submit`/`_loop`/`_take`/`_serve`.
+    tests/test_serving_cluster.py pins the two together on a burst;
+    change the policy in both places or that test fails. `arrivals`
+    overrides the Poisson schedule (how the pin injects its burst);
+    `controller`/`shedder` attach the serving/control.py control plane
+    exactly as `Frontend(..., controller=..., shedder=...)` does.
+    """
+    rng = np.random.default_rng(seed)
+    if arrivals is None:
+        arrivals = np.cumsum(rng.exponential(1.0 / offered_qps,
+                                             size=n_requests))
+    order = rng.integers(0, len(pool), size=n_requests)
+
+    def service(live):
+        res = searcher.query_batch([pool[order[i]] for i in live])
+        wall = searcher.last_scatter.wall_s
+        return (wall, res) if collect_results else wall
+
+    raw = _drive_open_loop(arrivals, service, max_batch=max_batch,
+                           max_queue=max_queue, window_s=window_s,
+                           controller=controller, shedder=shedder,
+                           deadlines=deadlines,
+                           collect_results=collect_results)
+    out = _summarize_open_loop(raw, arrivals, offered_qps, window_s,
+                               n_requests, adaptive=controller is not None)
+    if collect_results:
+        out["results"] = raw["results"]
+    return out
+
+
+def _adaptive_controller(max_batch: int = 16,
+                         max_window_s: float = 0.04) -> BatchController:
+    return BatchController(max_batch=max_batch,
+                           config=ControlConfig(max_window_s=max_window_s))
+
+
+def _adaptive_identity_check(store, cluster, pool, qps: float,
+                             n_requests: int) -> bool:
+    """Byte-identity through the adaptive path: the same arrival trace
+    under a static window and under the BatchController must return
+    identical texts/refs for every request both runs served — batching
+    policy may only move *when* a query runs, never its answer."""
+    legs = []
+    for ctl in (None, _adaptive_controller()):
+        cs = cluster.searcher(replica_sources=[_sim_sources(store, 4100)])
+        pt = simulate_open_loop(cs, pool, qps,
+                                0.01 if ctl is None else 0.0,
+                                max_batch=16, max_queue=64,
+                                n_requests=n_requests, seed=3,
+                                controller=ctl, collect_results=True)
+        cs.close()
+        legs.append(pt.pop("results"))
+    a, b = legs
+    common = [i for i in range(len(a))
+              if a[i] is not None and b[i] is not None]
+    return bool(common) and all(
+        a[i].texts == b[i].texts and a[i].refs == b[i].refs
+        for i in common)
 
 
 def _load_scenario(store, cluster, pool, offered: list, windows: list,
@@ -354,8 +512,306 @@ def _load_scenario(store, cluster, pool, offered: list, windows: list,
                 n_requests=n_requests, seed=q_i))
             cs.close()
         curves.append({"window_ms": window_s * 1e3, "points": points})
+
+    # adaptive leg: the BatchController picks each batch's window from
+    # observed queue depth + its decayed S(b) fit; same arrival seeds as
+    # the static sweep, so `gate` compares policies, not traces. The CI
+    # smoke job enforces ratio <= 1.1 at every point.
+    adaptive_points, gate = [], []
+    for q_i, qps in enumerate(offered):
+        cs = cluster.searcher(replica_sources=[_sim_sources(
+            store, 1000 + 37 * (len(windows) * len(offered) + q_i))])
+        pt = simulate_open_loop(cs, pool, qps, 0.0, max_batch=16,
+                                max_queue=64, n_requests=n_requests,
+                                seed=q_i,
+                                controller=_adaptive_controller(
+                                    max_window_s=max(windows)))
+        cs.close()
+        adaptive_points.append(pt)
+        best_p99, best_w = min(
+            (c["points"][q_i]["p99_ms"], c["window_ms"]) for c in curves)
+        gate.append({"offered_qps": qps,
+                     "adaptive_p99_ms": pt["p99_ms"],
+                     "best_static_p99_ms": best_p99,
+                     "best_static_window_ms": best_w,
+                     "ratio": pt["p99_ms"] / best_p99})
+
     return {"max_batch": 16, "max_queue": 64,
-            "n_requests_per_point": n_requests, "curves": curves}
+            "n_requests_per_point": n_requests, "curves": curves,
+            "adaptive": {
+                "points": adaptive_points, "gate": gate,
+                "identical_results": _adaptive_identity_check(
+                    store, cluster, pool, offered[0], n_requests)}}
+
+
+# --------------------------------------------------- adaptive control @ scale
+def _calibrate_service(store, cluster, pool) -> dict:
+    """Fit S(b) = a + c·b from real scatter rounds at several batch
+    sizes. The scale sweep then replays millions of virtual-clock
+    arrivals against this fitted service model — the queueing dynamics
+    come from `_drive_open_loop`, the per-batch cost from the measured
+    cluster."""
+    cs = cluster.searcher(replica_sources=[_sim_sources(store, 3000)])
+    xs, ys = [], []
+    for b in (1, 2, 4, 8, 16):
+        for r in range(3):
+            qs = [pool[(5 * r + j) % len(pool)] for j in range(b)]
+            cs.query_batch(qs)
+            xs.append(float(b))
+            ys.append(cs.last_scatter.wall_s)
+    cs.close()
+    c, a = np.polyfit(np.asarray(xs), np.asarray(ys), 1)
+    return {"base_s": float(max(a, 1e-4)),
+            "per_query_s": float(max(c, 1e-6)),
+            "samples": [[int(x), float(y)] for x, y in zip(xs, ys)]}
+
+
+def _mix_arrivals(mix: str, qps: float, n: int, rng) -> np.ndarray:
+    if mix == "burst":
+        # on-off modulated Poisson, time-average rate == qps:
+        # 2 s at 2.5x alternating with 4 s at 0.25x
+        t, chunks, hi = 0.0, [], True
+        while sum(len(c) for c in chunks) < n:
+            dur, rate = (2.0, 2.5 * qps) if hi else (4.0, 0.25 * qps)
+            k = int(rng.poisson(rate * dur))
+            chunks.append(np.sort(rng.uniform(t, t + dur, size=k)))
+            t += dur
+            hi = not hi
+        return np.concatenate(chunks)[:n]
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+def _mix_weights(mix: str, n: int, rng) -> np.ndarray:
+    if mix == "zipfian":
+        # zipf-skewed per-request service weight (hot queries cost more
+        # round-2 bytes), clipped and normalized to mean 1 so offered
+        # load stays comparable across mixes
+        z = np.minimum(rng.zipf(2.0, size=n).astype(float), 50.0)
+        return z / z.mean()
+    return np.ones(n)
+
+
+def _mix_deadlines(mix: str, arrivals: np.ndarray,
+                   cal: dict, rng) -> np.ndarray | None:
+    if mix != "multi_tenant":
+        return None
+    # 20% of tenants carry a tight deadline (~4 batch services), the
+    # rest are latency-tolerant (np.inf encodes "no deadline")
+    deadlines = np.full(len(arrivals), np.inf)
+    tight = rng.random(len(arrivals)) < 0.2
+    budget = 4.0 * (cal["base_s"] + cal["per_query_s"] * 8)
+    deadlines[tight] = arrivals[tight] + budget
+    return deadlines
+
+
+def _adaptive_scale_scenario(store, cluster, pool, smoke: bool) -> dict:
+    """Adaptive vs static micro-batching at scale: zipfian / bursty /
+    multi-tenant mixes, offered load swept around the calibrated
+    capacity, millions of virtual-clock requests in the full run. The
+    claim under test: the BatchController matches or beats the best
+    static window at EVERY offered load without being told which window
+    that is, and the DeadlineShedder's predictive rejections are
+    precise (shed requests would indeed have missed)."""
+    cal = _calibrate_service(store, cluster, pool)
+    max_batch, max_queue = 16, 64
+    windows = [0.0, 0.01, 0.04]
+    mu = max_batch / (cal["base_s"] + cal["per_query_s"] * max_batch)
+    if smoke:
+        mixes = ["poisson", "multi_tenant"]
+        loads = [0.8, 1.3]
+        n_by_mix = {m: 4000 for m in mixes}
+    else:
+        mixes = ["poisson", "zipfian", "burst", "multi_tenant"]
+        loads = [0.5, 0.9, 1.3]
+        n_by_mix = {"poisson": 1_000_000, "zipfian": 300_000,
+                    "burst": 300_000, "multi_tenant": 400_000}
+
+    out_mixes = []
+    for m_i, mix in enumerate(mixes):
+        n = n_by_mix[mix]
+        points = []
+        for l_i, load in enumerate(loads):
+            qps = load * mu
+            seed = 5000 + 97 * (m_i * len(loads) + l_i)
+            rng = np.random.default_rng(seed)
+            arrivals = _mix_arrivals(mix, qps, n, rng)
+            weights = _mix_weights(mix, n, rng)
+            deadlines = _mix_deadlines(mix, arrivals, cal, rng)
+
+            def leg(window_s=0.0, controller=None, shedder=None):
+                noise = np.random.default_rng(seed + 1)
+                a, c = cal["base_s"], cal["per_query_s"]
+
+                def service(live):
+                    return (a + c * float(weights[live].sum())) \
+                        * float(noise.lognormal(0.0, 0.1))
+
+                raw = _drive_open_loop(
+                    arrivals, service, max_batch=max_batch,
+                    max_queue=max_queue, window_s=window_s,
+                    controller=controller, shedder=shedder,
+                    deadlines=deadlines)
+                return _summarize_open_loop(
+                    raw, arrivals, qps, window_s, n,
+                    adaptive=controller is not None), raw
+
+            legs = {}
+            for w in windows:
+                legs[f"w{w * 1e3:.0f}ms"], _ = leg(window_s=w)
+            adaptive, adaptive_raw = leg(
+                controller=_adaptive_controller(max_batch=max_batch))
+            best_p99 = min(s["p99_ms"] for s in legs.values())
+            point = {"mix": mix, "load": load, "offered_qps": qps,
+                     "n_requests": n, "static": legs,
+                     "adaptive": adaptive,
+                     "best_static_p99_ms": best_p99,
+                     "adaptive_vs_best_static":
+                     adaptive["p99_ms"] / best_p99}
+            if deadlines is not None:
+                # predictive shedding: precision/recall of the
+                # DeadlineShedder's rejections against the no-shed
+                # oracle (the adaptive run of the SAME trace: which
+                # requests actually missed their deadline)
+                shed_sum, shed_raw = leg(
+                    controller=_adaptive_controller(max_batch=max_batch),
+                    shedder=DeadlineShedder(max_batch=max_batch))
+                was_shed = shed_raw["status"] == SHED_PREDICTED
+                o_served = adaptive_raw["status"] == SERVED
+                late = o_served & np.less(
+                    deadlines, adaptive_raw["completion"],
+                    where=o_served, out=np.zeros(n, bool))
+                missed = (adaptive_raw["status"] == EXPIRED) | late
+                n_shed = int(was_shed.sum())
+                n_missed = int(missed.sum())
+                point["shedder"] = shed_sum
+                point["shed_precision"] = (
+                    float((was_shed & missed).sum()) / n_shed
+                    if n_shed else 1.0)
+                point["shed_recall"] = (
+                    float((was_shed & missed).sum()) / n_missed
+                    if n_missed else 1.0)
+            points.append(point)
+        out_mixes.append({"mix": mix, "n_requests": n, "points": points})
+    return {"calibration": cal, "capacity_qps": mu,
+            "max_batch": max_batch, "max_queue": max_queue,
+            "static_windows_ms": [w * 1e3 for w in windows],
+            "mixes": out_mixes}
+
+
+# ---------------------------------------------------------------------- soak
+def _soak_scenario(smoke: bool) -> dict:
+    """Real threads against a real disk store: the full control plane —
+    p2c replica picking over telemetry gauges, BatchController window,
+    DeadlineShedder admission — under concurrent client threads on the
+    wall clock. Every submitted future must settle (result or typed
+    error), the telemetry in-flight gauges must return to zero, and a
+    probe batch through the threaded frontend must be byte-identical to
+    a direct `query_batch`."""
+    import tempfile
+    import threading
+    import time
+
+    from repro.serving import (Frontend, FrontendConfig, Overloaded,
+                               Telemetry)
+    from repro.storage import BlobStoreTransport, LocalBlobStore
+
+    n_clients = 4
+    n_per_client = 40 if smoke else 150
+    with tempfile.TemporaryDirectory() as td:
+        store = LocalBlobStore(td)
+        docs = make_logs_like(900, seed=41)
+        corpus = write_corpus(store, "corpus/soak", docs, n_blobs=2)
+        cfg = BuilderConfig(B=1500, F0=1.0, index_ngrams=3)
+        cluster = ShardedIndex.build(corpus, cfg, store, "cluster/soak",
+                                     n_shards=2)
+        truth: dict[str, set[int]] = {}
+        for i, d in enumerate(docs):
+            for w in distinct_words(d):
+                truth.setdefault(w, set()).add(i)
+        pool = _workload(truth)
+
+        telemetry = Telemetry()
+        cs = cluster.searcher(
+            replica_sources=[lambda s: BlobStoreTransport(store),
+                             lambda s: BlobStoreTransport(store)],
+            picker="p2c", telemetry=telemetry)
+        controller = BatchController(
+            max_batch=8, config=ControlConfig(max_window_s=0.005),
+            telemetry=telemetry)
+        shedder = DeadlineShedder(max_batch=8, telemetry=telemetry)
+        fe = Frontend(cs, FrontendConfig(max_queue=64, max_batch=8),
+                      controller=controller, shedder=shedder,
+                      telemetry=telemetry).start()
+
+        lock = threading.Lock()
+        outcomes = {"ok": 0, "overloaded": 0, "shed_predicted": 0,
+                    "deadline_miss": 0}
+        latencies: list[float] = []
+
+        def client(cid: int) -> None:
+            rng = np.random.default_rng(100 + cid)
+            for _ in range(n_per_client):
+                q = pool[int(rng.integers(0, len(pool)))]
+                t0 = time.perf_counter()
+                try:
+                    fut = fe.submit(q, timeout_s=5.0)
+                except Overloaded:
+                    with lock:
+                        outcomes["overloaded"] += 1
+                    continue
+                except DeadlineExceeded:
+                    with lock:
+                        outcomes["shed_predicted"] += 1
+                    continue
+                try:
+                    fut.result(timeout=60.0)
+                except DeadlineExceeded:
+                    with lock:
+                        outcomes["deadline_miss"] += 1
+                else:
+                    with lock:
+                        outcomes["ok"] += 1
+                        latencies.append(time.perf_counter() - t0)
+                if rng.random() < 0.3:
+                    time.sleep(float(rng.exponential(0.002)))
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        # byte-identity through the live threaded path
+        direct = cs.query_batch(pool[:8])
+        via_frontend = [fe.submit(q).result(timeout=60.0)
+                        for q in pool[:8]]
+        identical = _identical(direct, via_frontend)
+        stats = fe.stats.summary()
+        fe.close()
+        snap = telemetry.snapshot()
+        in_flight = {k: v for k, v in snap.items()
+                     if k.endswith("in_flight")}
+        cs.close()
+        cluster.close()
+
+    arr = np.asarray(latencies) if latencies else np.zeros(1)
+    n_total = n_clients * n_per_client
+    return {
+        "n_clients": n_clients, "n_requests": n_total,
+        "outcomes": outcomes,
+        "all_settled": sum(outcomes.values()) == n_total,
+        "stats_consistent":
+            stats["n_admitted"] == stats["n_served"] + stats["n_expired"]
+            and stats["n_shed_predicted"] == outcomes["shed_predicted"],
+        "p50_ms": float(np.percentile(arr, 50) * 1e3),
+        "p99_ms": float(np.percentile(arr, 99) * 1e3),
+        "mean_window_ms": float(
+            np.mean([controller.window(4)]) * 1e3),
+        "gauges_zero": all(v == 0 for v in in_flight.values()),
+        "n_in_flight_gauges": len(in_flight),
+        "identical_results": identical,
+    }
 
 
 # ------------------------------------------------------------------ freshness
@@ -535,6 +991,9 @@ def run(smoke: bool = False) -> dict:
                                                queries, fused_shards),
         "load_curves": _load_scenario(store, cluster, queries, offered,
                                       windows, n_requests),
+        "adaptive_serving": _adaptive_scale_scenario(store, cluster,
+                                                     queries, smoke),
+        "soak": _soak_scenario(smoke),
         "hedged_replicas": _hedged_scenario(store, cluster, queries,
                                             rounds),
         "freshness": _freshness_scenario(store),
@@ -580,6 +1039,25 @@ def bench_serving_tier():
                 pt["p99_ms"] * 1e3,
                 f"shed={pt['shed_frac'] * 100:.1f}%"
                 f";batch={pt['mean_batch_size']:.1f}")
+    ad = scenario["load_curves"]["adaptive"]
+    for g in ad["gate"]:
+        yield row(f"serving_tier/p99_adaptive_q{g['offered_qps']:.0f}",
+                  g["adaptive_p99_ms"],
+                  f"vs_best_static={g['ratio']:.2f}x"
+                  f";identical={ad['identical_results']}")
+    for mix in scenario["adaptive_serving"]["mixes"]:
+        for pt in mix["points"]:
+            note = f"ratio={pt['adaptive_vs_best_static']:.2f}x"
+            if "shed_precision" in pt:
+                note += f";shed_prec={pt['shed_precision']:.2f}"
+            yield row(f"serving_tier/scale_{mix['mix']}"
+                      f"_x{pt['load']:.1f}",
+                      pt["adaptive"]["p99_ms"], note)
+    so = scenario["soak"]
+    yield row("serving_tier/soak_p99_ms", so["p99_ms"],
+              f"ok={so['outcomes']['ok']}"
+              f";settled={so['all_settled']}"
+              f";identical={so['identical_results']}")
     hr = scenario["hedged_replicas"]
     yield row("serving_tier/hedged_max_wall", hr["hedged"]["max_wall_ms"]
               * 1e3, f"speedup={hr['max_wall_speedup']:.2f}x")

@@ -23,6 +23,7 @@ import numpy as np
 from ..index.query import Query
 from ..index.searcher import Searcher
 from ..storage.simcloud import SimCloudStore
+from ..storage.transport import as_transport
 from .tokenizer import HashTokenizer
 
 
@@ -47,7 +48,7 @@ class IndexedCorpusLoader:
         self.host = host
         self.n_hosts = n_hosts
         self.tokenizer = HashTokenizer(config.vocab_size)
-        self.searcher = Searcher(cloud, index_prefix)
+        self.searcher = Searcher(as_transport(cloud), index_prefix)
         if query is not None:
             result = self.searcher.query(query, hedge=config.hedge)
             self._texts = result.texts

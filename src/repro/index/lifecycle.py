@@ -45,6 +45,7 @@ from dataclasses import asdict, dataclass, field, replace
 
 import msgpack
 
+from ..compat import UngracedSweepError, deprecated_call
 from ..data.corpus import Corpus, DocRef
 from ..storage.blobstore import RangeRequest
 from ..storage.cache import SuperpostCache
@@ -790,14 +791,15 @@ DEFAULT_GRACE_S = 600.0
 
 def warn_ungraced_sweep(grace_s: float, leases) -> None:
     """`grace_s=0.0` with no `LeaseRegistry` deletes out from under any
-    reader the sweep cannot see — deprecation-warn so callers migrate to
-    leases instead of relying on "nobody is reading right now"."""
+    reader the sweep cannot see. Escalated from DeprecationWarning
+    (repro/compat.py): raises `UngracedSweepError` unless
+    REPRO_ALLOW_DEPRECATED=1 restores the old warn-and-sweep."""
     if grace_s <= 0.0 and leases is None:
-        warnings.warn(
-            "collect_garbage(grace_s=0.0) without a LeaseRegistry has no "
-            "protection for in-flight readers; pass leases=<registry> "
-            "(index/nrt.py) or keep a grace window",
-            DeprecationWarning, stacklevel=3)
+        deprecated_call(
+            "collect_garbage(grace_s=0.0) without a LeaseRegistry has "
+            "no protection for in-flight readers",
+            "pass leases=<registry> (index/nrt.py) or keep a grace "
+            "window", error=UngracedSweepError, stacklevel=4)
 
 
 def collect_garbage(source, prefix: str, keep: int = 2,
@@ -837,8 +839,10 @@ def collect_garbage(source, prefix: str, keep: int = 2,
     `grace_s=0.0` with an active registry is safe for registered
     readers (how tests/test_nrt.py exercises exactness); `grace_s=0.0`
     with NO registry deletes out from under any concurrent reader and
-    now raises a `DeprecationWarning` — keep it only where no reader or
-    writer can be in flight (offline compaction). `dry_run=True`
+    now raises `UngracedSweepError` (repro/compat.py;
+    REPRO_ALLOW_DEPRECATED=1 demotes it back to a warning) — allow it
+    only where no reader or writer can be in flight (offline
+    compaction). `dry_run=True`
     reports the orphan set without deleting. `reachable` overrides the
     root set (how cluster-level GC folds shard reachability in, leases
     already applied); `now` pins the clock for deterministic tests.

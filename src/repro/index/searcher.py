@@ -52,6 +52,7 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from ..compat import deprecated_call
 from ..core.hashing import HashFamily, word_fingerprint
 from ..core.sketch import intersect_sorted
 from ..core.topk import sample_size
@@ -145,6 +146,21 @@ class _Fetcher:
     coalesce_gap: int | None = 4096
     generation: int = 0
 
+    def bind_telemetry(self, telemetry, prefix: str = "fetch",
+                       ) -> "_Fetcher":
+        """Export per-round fetch observations (latency, bytes, request
+        and cache-hit counts) into a metrics registry — duck-typed
+        `serving.telemetry.Telemetry`, so the index layer needs no
+        serving import. The control plane reads these to see what a
+        round *currently* costs. Returns self."""
+        self._metrics = {
+            "round_s": telemetry.histogram(f"{prefix}.round_s"),
+            "bytes": telemetry.counter(f"{prefix}.bytes"),
+            "requests": telemetry.counter(f"{prefix}.requests"),
+            "cache_hits": telemetry.counter(f"{prefix}.cache_hits"),
+        }
+        return self
+
     def fetch_ranges(self, requests: list[RangeRequest], *,
                      hedge: bool = False,
                      hedgeable: set[int] | None = None,
@@ -196,6 +212,13 @@ class _Fetcher:
                         and requests[i].length >= 0:
                     cache.put(requests[i].blob, requests[i].offset,
                               requests[i].length, p, self.generation)
+        m = getattr(self, "_metrics", None)
+        if m is not None:
+            if miss:
+                m["round_s"].observe(float(stats.elapsed_s))
+            m["bytes"].inc(int(stats.bytes_fetched))
+            m["requests"].inc(int(stats.n_requests))
+            m["cache_hits"].inc(int(stats.cache_hits))
         return payloads, stats
 
 
@@ -206,14 +229,14 @@ class Searcher:
                  generation: int = 0,
                  header: bytes | None = None) -> None:
         if isinstance(source, SimCloudStore):
-            warnings.warn(
-                "Searcher(SimCloudStore, prefix) is deprecated: pass a "
-                "StorageTransport (storage.as_transport / SimCloudTransport)"
-                " or use Index.open(store, prefix).searcher()",
-                DeprecationWarning, stacklevel=2)
-            transport: StorageTransport = SimCloudTransport(source)
-        else:
-            transport = as_transport(source)
+            # escalated from DeprecationWarning (repro/compat.py): raises
+            # unless REPRO_ALLOW_DEPRECATED=1 restores the old shim
+            deprecated_call(
+                "Searcher(SimCloudStore, prefix) was removed",
+                "pass a StorageTransport (storage.as_transport / "
+                "SimCloudTransport) or use "
+                "Index.open(store, prefix).searcher()")
+        transport = as_transport(source)
         self.transport = transport
         self.prefix = prefix
         self._fetcher = _Fetcher(transport, cache, coalesce_gap,
@@ -246,6 +269,14 @@ class Searcher:
         raw_ngrams = self.profile.get("index_ngrams")
         self.ngram_n: int | None = \
             None if raw_ngrams is None else int(raw_ngrams)
+
+    def bind_telemetry(self, telemetry, prefix: str = "fetch",
+                       ) -> "Searcher":
+        """Export this reader's fetch rounds (latency, bytes) and its
+        transport's traffic into a metrics registry. Returns self."""
+        self._fetcher.bind_telemetry(telemetry, prefix)
+        self.transport.bind_telemetry(telemetry, f"{prefix}.transport")
+        return self
 
     # fetch knobs live in ONE place — the _Fetcher every round goes
     # through — so post-construction mutation keeps taking effect

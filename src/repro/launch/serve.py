@@ -25,7 +25,8 @@ def main() -> None:
     from repro.data import make_logs_like, write_corpus
     from repro.data.tokenizer import distinct_words
     from repro.index import Builder, BuilderConfig
-    from repro.storage import REGIONS, InMemoryBlobStore, SimCloudStore
+    from repro.storage import (REGIONS, InMemoryBlobStore, SimCloudStore,
+                               SimCloudTransport)
     from repro.serving import SearchService
 
     store = InMemoryBlobStore()
@@ -36,7 +37,8 @@ def main() -> None:
     cloud = SimCloudStore(store, model=REGIONS[args.region], seed=0)
 
     if args.mode == "search":
-        svc = SearchService(cloud, "index/serve", hedge=args.hedge)
+        svc = SearchService(SimCloudTransport(cloud), "index/serve",
+                            hedge=args.hedge)
         truth = set()
         for d in docs[:500]:
             truth.update(distinct_words(d))
@@ -64,7 +66,8 @@ def main() -> None:
 
     if args.mode == "rag":
         from repro.serving import RAGPipeline
-        svc = SearchService(cloud, "index/serve", hedge=args.hedge)
+        svc = SearchService(SimCloudTransport(cloud), "index/serve",
+                            hedge=args.hedge)
         rag = RAGPipeline(svc, model, params, vocab_size=cfg.vocab,
                           max_context=96)
         out = rag.generate("error fetch", top_k_docs=3,

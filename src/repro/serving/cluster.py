@@ -769,7 +769,9 @@ class ShardedIndex:
                  replica_sources: list | None = None,
                  hedge_after_s: float | None = None,
                  concurrent: bool = True,
-                 fused: bool = False) -> "ClusterSearcher":
+                 fused: bool = False,
+                 picker=None,
+                 telemetry=None) -> "ClusterSearcher":
         """Open a scatter-gather read session over all non-empty shards.
 
         `replica_sources` names the data plane(s): each entry serves one
@@ -779,7 +781,11 @@ class ShardedIndex:
         default (`None`) is one replica over the handle's own transport.
         `hedge_after_s` enables per-shard hedged retry on a straggling
         replica; `concurrent=False` forces the serial per-shard loop
-        (the comparison baseline).
+        (the comparison baseline). `picker` selects the replica policy
+        (`None`/"least_loaded", "p2c", or any object with `.pick` —
+        serving/control.py); `telemetry` is a
+        `serving.telemetry.Telemetry` the session exports per-replica
+        in-flight gauges and scatter-round observations into.
         """
         live = [(s, idx) for s, idx in enumerate(self.shards)
                 if idx is not None]
@@ -854,7 +860,9 @@ class ShardedIndex:
                                generation=self.reader_generation,
                                owned_transports=owned,
                                init_stats=boot_stats,
-                               fused=fused)
+                               fused=fused,
+                               picker=picker,
+                               telemetry=telemetry)
 
 
 # ================================================================ scatter-gather
@@ -913,7 +921,9 @@ class ClusterSearcher:
                  generation: tuple = (),
                  owned_transports: list[StorageTransport] | None = None,
                  init_stats: FetchStats | None = None,
-                 fused: bool = False) -> None:
+                 fused: bool = False,
+                 picker=None,
+                 telemetry=None) -> None:
         assert shard_replicas, "need at least one non-empty shard"
         self.shard_replicas = shard_replicas
         self.hedge_after_s = hedge_after_s
@@ -935,6 +945,31 @@ class ClusterSearcher:
         for replicas in shard_replicas:
             for r in replicas:
                 self.init_stats.add(r.reader.init_stats)
+        # replica policy + exported gauges (serving/control.py): the
+        # picker sees a load vector, never the replica objects; with a
+        # telemetry registry every replica's in-flight level is exported
+        # as `replica.s<shard>.r<idx>.in_flight` — the shared-nothing
+        # signal other frontend processes' pickers read
+        from .control import as_picker
+        self._picker = as_picker(picker)
+        self.telemetry = telemetry
+        self._replica_gauges: dict[int, object] = {}
+        if telemetry is not None:
+            self._h_round = telemetry.histogram("cluster.round_s")
+            self._c_hedges = telemetry.counter("cluster.hedges_issued")
+            self._c_hedge_wins = telemetry.counter("cluster.hedge_wins")
+            self._c_r2_bytes = telemetry.counter("cluster.round2_bytes")
+            for si, replicas in enumerate(shard_replicas):
+                for ri, r in enumerate(replicas):
+                    g = telemetry.gauge(
+                        f"replica.s{si}.r{ri}.in_flight")
+                    self._replica_gauges[id(r)] = g
+                    fetcher = getattr(r.reader, "_fetcher", None)
+                    if fetcher is not None:
+                        fetcher.bind_telemetry(
+                            telemetry, prefix=f"fetch.s{si}.r{ri}")
+                    r.transport.bind_telemetry(
+                        telemetry, prefix=f"transport.s{si}.r{ri}")
 
     # -- plumbing ---------------------------------------------------------
     @property
@@ -977,26 +1012,45 @@ class ClusterSearcher:
 
     def _pick_replica(self, replicas: list[_Replica],
                       exclude: int | None = None) -> int:
-        """Least-in-flight replica choice, ties to the lowest index.
+        """Replica choice, delegated to the session's picker policy
+        (default `LeastLoaded`: argmin, ties to the lowest index;
+        `PowerOfTwoChoices` for multi-frontend deployments —
+        serving/control.py explains why).
 
         Load is the replica's executing shard queries plus its
         transport's own outstanding range-GETs (`in_flight` gauge,
         storage/transport.py) — a transport shared with other readers
         counts their traffic too."""
         with self._lock:
-            best, best_load = -1, None
-            for i, r in enumerate(replicas):
-                if i == exclude:
-                    continue
-                load = r.in_flight + r.transport.in_flight
-                if best_load is None or load < best_load:
-                    best, best_load = i, load
-            replicas[best].in_flight += 1
+            loads = [r.in_flight + r.transport.in_flight
+                     for r in replicas]
+            best = self._picker.pick(loads, exclude=exclude)
+            r = replicas[best]
+            r.in_flight += 1
+            self._export_load(r)
             return best
 
     def _release(self, replica: _Replica) -> None:
         with self._lock:
             replica.in_flight -= 1
+            self._export_load(replica)
+
+    def _export_load(self, replica: _Replica) -> None:
+        g = self._replica_gauges.get(id(replica))
+        if g is not None:
+            g.set(replica.in_flight)
+
+    def _observe_scatter(self, report: ScatterReport) -> None:
+        if self.telemetry is None:
+            return
+        self._h_round.observe(report.wall_s)
+        if report.n_hedges_issued:
+            self._c_hedges.inc(report.n_hedges_issued)
+        if report.n_hedge_wins:
+            self._c_hedge_wins.inc(report.n_hedge_wins)
+        r2 = sum(report.round2_bytes)
+        if r2:
+            self._c_r2_bytes.inc(r2)
 
     # -- one shard --------------------------------------------------------
     def _run_on(self, replica: _Replica, queries, top_k, hedge, impl,
@@ -1120,6 +1174,7 @@ class ClusterSearcher:
         report.wall_s = max(report.shard_elapsed_s) if concurrent \
             else report.serial_wall_s
         self.last_scatter = report
+        self._observe_scatter(report)
         return [self._merge(j, [leg[0] for leg in legs], top_k, report)
                 for j in range(len(queries))]
 
@@ -1368,6 +1423,7 @@ class ClusterSearcher:
             report.wall_s = max(shard_elapsed) if concurrent \
                 else report.serial_wall_s
             self.last_scatter = report
+            self._observe_scatter(report)
             return results
         finally:
             for _i, r in picked:
@@ -1548,8 +1604,8 @@ def collect_cluster_garbage(source, prefix: str, keep: int = 2,
     accounting — are shared with single-index GC
     (`index.lifecycle.collect_garbage`); only the root set differs.
     `grace_s=0.0` with no `leases` registry raises the same
-    `DeprecationWarning`. Accepts a `BlobStore`, `SimCloudStore`, or
-    `StorageTransport`."""
+    `UngracedSweepError` (repro/compat.py). Accepts a `BlobStore`,
+    `SimCloudStore`, or `StorageTransport`."""
     blobs = blobs_of(source)
     warn_ungraced_sweep(grace_s, leases)
     return collect_garbage(

@@ -66,22 +66,48 @@ class FrontendConfig:
 
 @dataclass
 class FrontendStats:
+    """Frontend accounting, identical between stepped and threaded modes.
+
+    Every mutation happens under the frontend's condition lock —
+    `submit` runs on caller threads while `_serve` runs on the batching
+    loop, and unlocked increments would drop counts under contention
+    (tests/test_control_plane.py pins both modes to the same counters
+    on the same arrival trace). `n_expired` counts requests whose
+    deadline passed while queued (failed at dispatch); `n_deadline_miss`
+    is its audit-friendly alias. `n_shed` counts queue-full rejections
+    (`Overloaded`), `n_shed_predicted` predictive rejections
+    (`PredictedDeadlineMiss` — serving/control.py); both are refused at
+    the door, so `n_admitted` counts neither. `queue_wait_s` samples the
+    dispatch−arrival wait of every *served* request."""
+
     n_admitted: int = 0
     n_shed: int = 0
+    n_shed_predicted: int = 0
     n_expired: int = 0
     n_batches: int = 0
     batch_sizes: list = field(default_factory=list)
     queue_high_water: int = 0
+    queue_wait_s: list = field(default_factory=list)
+
+    @property
+    def n_deadline_miss(self) -> int:
+        return self.n_expired
 
     def summary(self) -> dict:
         n_served = sum(self.batch_sizes)
+        waits = self.queue_wait_s
         return {
             "n_admitted": self.n_admitted, "n_shed": self.n_shed,
-            "n_expired": self.n_expired, "n_batches": self.n_batches,
+            "n_shed_predicted": self.n_shed_predicted,
+            "n_expired": self.n_expired,
+            "n_deadline_miss": self.n_deadline_miss,
+            "n_batches": self.n_batches,
             "n_served": n_served,
             "mean_batch_size": n_served / self.n_batches
             if self.n_batches else 0.0,
             "queue_high_water": self.queue_high_water,
+            "mean_queue_wait_s": sum(waits) / len(waits)
+            if waits else 0.0,
         }
 
 
@@ -107,11 +133,29 @@ class Frontend:
     """
 
     def __init__(self, backend, config: FrontendConfig | None = None,
-                 clock=time.monotonic) -> None:
+                 clock=time.monotonic, controller=None, shedder=None,
+                 telemetry=None) -> None:
         self.backend = backend
         self.config = config or FrontendConfig()
         self.clock = clock
         self.stats = FrontendStats()
+        # control plane (serving/control.py), all optional: a
+        # `BatchController` replaces the static `batch_window_s`, a
+        # `DeadlineShedder` adds predictive admission control, and a
+        # `Telemetry` registry exports queue depth / wait / shed — the
+        # plain static frontend is the `None, None, None` special case
+        self.controller = controller
+        self.shedder = shedder
+        self.telemetry = telemetry
+        if telemetry is not None:
+            self._g_depth = telemetry.gauge("frontend.queue_depth")
+            self._h_wait = telemetry.histogram("frontend.queue_wait_s")
+            self._c_admitted = telemetry.counter("frontend.admitted")
+            self._c_shed = telemetry.counter("frontend.shed")
+            self._c_miss = telemetry.counter("frontend.deadline_miss")
+        else:
+            self._g_depth = self._h_wait = None
+            self._c_admitted = self._c_shed = self._c_miss = None
         self._queue: deque[_Pending] = deque()
         self._cond = threading.Condition()
         self._thread: threading.Thread | None = None
@@ -140,20 +184,39 @@ class Frontend:
         cfg = self.config
         timeout = cfg.default_timeout_s if timeout_s is None else timeout_s
         now = self.clock()
+        deadline = None if timeout is None else now + timeout
         with self._cond:
             if self._closed:
                 raise RuntimeError("frontend is closed")
             if len(self._queue) >= cfg.max_queue:
                 self.stats.n_shed += 1
+                if self._c_shed is not None:
+                    self._c_shed.inc()
                 raise Overloaded(len(self._queue), cfg.max_queue)
+            if self.shedder is not None:
+                # predictive admission control: raises
+                # PredictedDeadlineMiss (a DeadlineExceeded) when the
+                # estimated completion already misses the deadline —
+                # refusing now costs the caller zero queue wait and the
+                # cluster zero fetch rounds
+                try:
+                    self.shedder.admit(now, deadline, len(self._queue))
+                except DeadlineExceeded:
+                    self.stats.n_shed_predicted += 1
+                    raise
             fut: Future = Future()
             self._queue.append(_Pending(
-                query=query, top_k=top_k,
-                deadline=None if timeout is None else now + timeout,
+                query=query, top_k=top_k, deadline=deadline,
                 future=fut, arrival=now))
             self.stats.n_admitted += 1
             self.stats.queue_high_water = max(self.stats.queue_high_water,
                                               len(self._queue))
+            if self.controller is not None:
+                self.controller.on_arrival(now)
+            if self._c_admitted is not None:
+                self._c_admitted.inc()
+            if self._g_depth is not None:
+                self._g_depth.set(len(self._queue))
             self._cond.notify()
         return fut
 
@@ -176,7 +239,18 @@ class Frontend:
         batch = []
         while self._queue and len(batch) < n:
             batch.append(self._queue.popleft())
+        if self._g_depth is not None:
+            self._g_depth.set(len(self._queue))
         return batch
+
+    def _window_s(self) -> float:
+        """Micro-batch window for the batch opening now: the
+        controller's decision when one is attached, the static config
+        knob otherwise. Called with the condition lock held."""
+        if self.controller is not None:
+            return self.controller.window(len(self._queue),
+                                          now=self.clock())
+        return self.config.batch_window_s
 
     def follow(self, bus) -> "Frontend":
         """Swap the backend's generation on push (serving/notify.py
@@ -208,6 +282,7 @@ class Frontend:
             return 0
         now = self.clock()
         live: list[_Pending] = []
+        expired: list[_Pending] = []
         for p in batch:
             # a caller may have cancelled its Future while it queued;
             # claiming it here (PENDING -> RUNNING) makes the later
@@ -216,20 +291,35 @@ class Frontend:
             if not p.future.set_running_or_notify_cancel():
                 continue
             if p.deadline is not None and now > p.deadline:
-                self.stats.n_expired += 1
+                expired.append(p)
                 p.future.set_exception(DeadlineExceeded(
                     f"queued {now - p.arrival:.3f}s past its deadline"))
             else:
                 live.append(p)
+        waits = [now - p.arrival for p in live]
+        # stats mutate under the condition lock: `submit` (caller
+        # threads) and this method (the batching loop) update the same
+        # object, and the stepped/threaded consistency audit only holds
+        # if neither side drops increments
+        with self._cond:
+            self.stats.n_expired += len(expired)
+            if live:
+                self.stats.n_batches += 1
+                self.stats.batch_sizes.append(len(live))
+                self.stats.queue_wait_s.extend(waits)
+        if self._c_miss is not None and expired:
+            self._c_miss.inc(len(expired))
+        if self._h_wait is not None:
+            for w in waits:
+                self._h_wait.observe(w)
         if not live:
             return len(batch)
-        self.stats.n_batches += 1
-        self.stats.batch_sizes.append(len(live))
         # one shared plan/fetch round per distinct top_k (almost always
         # one group — mixed-k batches split but still amortize within k)
         by_k: dict[object, list[_Pending]] = {}
         for p in live:
             by_k.setdefault(p.top_k, []).append(p)
+        t0 = self.clock()
         for top_k, group in by_k.items():
             try:
                 results = self._execute([p.query for p in group], top_k)
@@ -244,6 +334,14 @@ class Frontend:
             else:
                 for p, res in zip(group, results):
                     p.future.set_result(res)
+        service_s = self.clock() - t0
+        # service feedback drives the window controller and the
+        # predictive shedder; on a virtual clock (stepped mode) the
+        # delta is the backend's simulated wall, threaded it is real
+        if self.controller is not None:
+            self.controller.on_batch(service_s, len(live))
+        if self.shedder is not None:
+            self.shedder.on_batch(service_s, len(live))
         return len(batch)
 
     def _execute(self, queries: list, top_k) -> list:
@@ -268,13 +366,14 @@ class Frontend:
                     self._cond.wait()
                 if self._closed and not self._queue:
                     return
-                # dynamic window: collect arrivals for batch_window_s
+                # dynamic window: collect arrivals for the window
+                # (static config, or the BatchController's decision)
                 # after the first waiter, dispatch early at max_batch.
                 # Condition.wait sleeps in real time, so the window is
                 # measured in real time too — an injected `clock` only
                 # governs deadlines and stepped mode, never this loop
                 # (a fake clock would otherwise leave it waiting forever)
-                t_close = time.monotonic() + cfg.batch_window_s
+                t_close = time.monotonic() + self._window_s()
                 while len(self._queue) < cfg.max_batch:
                     remaining = t_close - time.monotonic()
                     if remaining <= 0 or self._closed:

@@ -31,6 +31,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..compat import deprecated_call
 from ..index.lifecycle import Index
 from ..index.query import Query, Regex, normalize, parse
 from ..index.searcher import Searcher
@@ -178,11 +179,13 @@ class SearchService:
                     "SearchService(store_or_transport, index_prefix) "
                     "requires a prefix when not given an Index handle")
             if isinstance(source, SimCloudStore):
-                warnings.warn(
-                    "SearchService(SimCloudStore, index_prefix) is "
-                    "deprecated: pass an Index handle "
-                    "(Index.open(store, prefix)) or a StorageTransport",
-                    DeprecationWarning, stacklevel=2)
+                # escalated from DeprecationWarning (repro/compat.py):
+                # raises unless REPRO_ALLOW_DEPRECATED=1 is set
+                deprecated_call(
+                    "SearchService(SimCloudStore, index_prefix) was "
+                    "removed",
+                    "pass an Index handle (Index.open(store, prefix)) "
+                    "or a StorageTransport")
                 source = SimCloudTransport(source)
             # the raw source goes straight to Index.open so a bare store
             # keeps owns_transport=True and close() actually releases it
@@ -331,13 +334,13 @@ class SearchService:
 
     def search_regex(self, pattern: str, ngram: int = 3,
                      top_k: int | None = None):
-        """Deprecated: regex is a first-class query node — use
-        `search(Regex(pattern, ngram))`. This shim routes through the
-        same planner path, so regex queries now share the result cache,
-        the cache-hit counters, and `top_k` like every other query."""
-        warnings.warn(
-            "search_regex is deprecated: use search(Regex(pattern, "
-            "ngram))", DeprecationWarning, stacklevel=2)
+        """Removed shim (escalated from DeprecationWarning): regex is a
+        first-class query node — use `search(Regex(pattern, ngram))`.
+        With `REPRO_ALLOW_DEPRECATED=1` the shim still routes through
+        the same planner path (shared result cache, top_k)."""
+        deprecated_call(
+            "SearchService.search_regex was removed",
+            "use search(Regex(pattern, ngram))")
         return self.search(Regex(pattern, ngram), top_k=top_k)
 
     def search_batch(self, queries, top_k: int | None = None,

@@ -155,6 +155,40 @@ class StorageTransport(ABC):
 
     blobs: BlobStore
     policy: TransportPolicy
+    _metrics: dict | None = None     # bound by bind_telemetry
+
+    def bind_telemetry(self, telemetry, prefix: str = "transport",
+                       ) -> "StorageTransport":
+        """Export this transport's traffic into a metrics registry
+        (serving/telemetry.py `Telemetry`, duck-typed so the storage
+        layer stays import-free of serving): request/retry/hedge/byte
+        counters, an in-flight gauge, and a round-latency histogram —
+        the observations the serving control plane steers from.
+        Returns self for chaining."""
+        self._metrics = {
+            "requests": telemetry.counter(f"{prefix}.requests"),
+            "retries": telemetry.counter(f"{prefix}.retries"),
+            "deadline_misses":
+                telemetry.counter(f"{prefix}.deadline_misses"),
+            "hedges_issued": telemetry.counter(f"{prefix}.hedges_issued"),
+            "hedge_wins": telemetry.counter(f"{prefix}.hedge_wins"),
+            "bytes": telemetry.counter(f"{prefix}.bytes"),
+            "round_s": telemetry.histogram(f"{prefix}.round_s"),
+            "in_flight": telemetry.gauge(f"{prefix}.in_flight"),
+        }
+        return self
+
+    def _observe_fetch(self, stats: FetchStats) -> None:
+        m = self._metrics
+        if m is None:
+            return
+        m["requests"].inc(int(stats.n_requests))
+        m["retries"].inc(int(stats.n_retries))
+        m["deadline_misses"].inc(int(stats.n_deadline_misses))
+        m["hedges_issued"].inc(int(stats.n_hedges_issued))
+        m["hedge_wins"].inc(int(stats.n_hedge_wins))
+        m["bytes"].inc(int(stats.bytes_fetched))
+        m["round_s"].observe(float(stats.elapsed_s))
 
     @property
     def in_flight(self) -> int:
@@ -227,6 +261,7 @@ class SimCloudTransport(StorageTransport):
             f = FetchFuture(req)
             f._resolve(p)
             futures.append(f)
+        self._observe_fetch(stats)
         return TransportBatch(futures, lambda s=stats: s)
 
     def _fetch_with_policy(self, requests: list[RangeRequest],
@@ -335,6 +370,9 @@ class BlobStoreTransport(StorageTransport):
     def _dec_in_flight(self, _fut) -> None:
         with self._gauge_lock:
             self._in_flight -= 1
+        m = self._metrics
+        if m is not None:
+            m["in_flight"].set(self._in_flight)
 
     def _get_with_retry(self, req: RangeRequest,
                         pol: TransportPolicy) -> tuple[bytes, int]:
@@ -365,6 +403,8 @@ class BlobStoreTransport(StorageTransport):
         # least-in-flight replica picker must see them
         with self._gauge_lock:
             self._in_flight += len(requests)
+        if self._metrics is not None:
+            self._metrics["in_flight"].set(self._in_flight)
         raw = [self._executor().submit(self._get_with_retry, r, pol)
                for r in requests]
         for f in raw:
@@ -406,12 +446,14 @@ class BlobStoreTransport(StorageTransport):
             for i in range(len(futures)):
                 _settle(i)
             n_retries = sum(retries)
-            return FetchStats(
+            stats = FetchStats(
                 elapsed_s=time.perf_counter() - t0,
                 bytes_fetched=sum(sizes),
                 n_requests=len(requests) + n_retries,
                 n_retries=n_retries,
                 n_deadline_misses=sum(misses))
+            self._observe_fetch(stats)
+            return stats
 
         return TransportBatch(futures, _finalize)
 

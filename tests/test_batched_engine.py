@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.compat import DeprecatedAPIError
 from repro.core.sketch import intersect_sorted
 from repro.data import make_logs_like, write_corpus
 from repro.data.tokenizer import distinct_words
@@ -19,7 +20,8 @@ from repro.kernels.intersect import (intersect, intersect_batch,
                                      postings_to_bitmap_batch)
 from repro.serving import SearchService
 from repro.storage import (InMemoryBlobStore, LRUCache, RangeRequest,
-                           SimCloudStore, SuperpostCache)
+                           SimCloudStore, SimCloudTransport,
+                           SuperpostCache)
 
 
 # ------------------------------------------------------------- coalescing
@@ -93,9 +95,9 @@ MIXED = [
 # --------------------------------------------- batched == serial, bytewise
 def test_lookup_batch_identical_to_per_query_lookup(engine):
     store, _docs, truth = engine
-    serial = Searcher(SimCloudStore(store, seed=5), "index/be",
+    serial = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/be",
                       coalesce_gap=None)                # seed engine
-    batched = Searcher(SimCloudStore(store, seed=5), "index/be")
+    batched = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/be")
     queries = [And((Term("error"), Term("block"))), Term("info"),
                Term("error"), Or((Term("node4"), Term("error")))]
     outs, _stats = batched.lookup_batch(queries)
@@ -109,11 +111,11 @@ def test_lookup_batch_identical_to_per_query_lookup(engine):
 
 def test_query_batch_identical_to_serial(engine):
     store, docs, truth = engine
-    serial = Searcher(SimCloudStore(store, seed=5), "index/be",
+    serial = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/be",
                       coalesce_gap=None)
     expect = [serial.regex_query(q.pattern) if isinstance(q, Regex)
               else serial.query(q) for q in MIXED]
-    batched = Searcher(SimCloudStore(store, seed=5), "index/be")
+    batched = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/be")
     got = batched.query_batch(MIXED)
     for q, a, b in zip(MIXED, expect, got):
         assert a.texts == b.texts, q
@@ -128,9 +130,9 @@ def test_query_batch_identical_to_serial(engine):
 
 def test_query_batch_topk_identical_to_serial(engine):
     store, _docs, truth = engine
-    serial = Searcher(SimCloudStore(store, seed=5), "index/be",
+    serial = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/be",
                       coalesce_gap=None)
-    batched = Searcher(SimCloudStore(store, seed=5), "index/be")
+    batched = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/be")
     queries = ["error", "info", "block", "node1"]
     expect = [serial.query(q, top_k=5) for q in queries]
     got = batched.query_batch(queries, top_k=5)
@@ -142,19 +144,19 @@ def test_query_batch_topk_identical_to_serial(engine):
 def test_query_batch_fewer_requests_and_lower_clock(engine):
     store, _docs, _truth = engine
     serial_cloud = SimCloudStore(store, seed=5)
-    serial = Searcher(serial_cloud, "index/be", coalesce_gap=None)
+    serial = Searcher(SimCloudTransport(serial_cloud), "index/be", coalesce_gap=None)
     for q in MIXED:
         (serial.regex_query(q.pattern) if isinstance(q, Regex)
          else serial.query(q))
     batched_cloud = SimCloudStore(store, seed=5)
-    Searcher(batched_cloud, "index/be").query_batch(MIXED)
+    Searcher(SimCloudTransport(batched_cloud), "index/be").query_batch(MIXED)
     assert batched_cloud.totals.n_requests < 0.7 * serial_cloud.totals.n_requests
     assert batched_cloud.clock_s < serial_cloud.clock_s
 
 
 def test_query_batch_hedged_is_superset_and_batches(engine):
     store, docs, truth = engine
-    batched = Searcher(SimCloudStore(store, seed=5), "index/be")
+    batched = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/be")
     got = batched.query_batch(["error", "node3"], hedge=True)
     for q, res in zip(["error", "node3"], got):
         assert {docs[i] for i in truth[q]} == set(res.texts)
@@ -164,11 +166,11 @@ def test_query_batch_hedged_is_superset_and_batches(engine):
 def test_superpost_cache_result_identical_fewer_requests(engine):
     store, _docs, _truth = engine
     plain_cloud = SimCloudStore(store, seed=5)
-    plain = Searcher(plain_cloud, "index/be")
+    plain = Searcher(SimCloudTransport(plain_cloud), "index/be")
     expect = [plain.query_batch(MIXED[:7]) for _ in range(3)]
 
     cached_cloud = SimCloudStore(store, seed=5)
-    cached = Searcher(cached_cloud, "index/be", cache=SuperpostCache(16 << 20))
+    cached = Searcher(SimCloudTransport(cached_cloud), "index/be", cache=SuperpostCache(16 << 20))
     got = [cached.query_batch(MIXED[:7]) for _ in range(3)]
     for round_e, round_g in zip(expect, got):
         for a, b in zip(round_e, round_g):
@@ -198,7 +200,7 @@ def test_lru_cache_eviction_and_weighting():
 
 def test_search_service_result_cache_is_lru(engine):
     store, _docs, _truth = engine
-    svc = SearchService(SimCloudStore(store, seed=2), "index/be",
+    svc = SearchService(SimCloudTransport(SimCloudStore(store, seed=2)), "index/be",
                         cache_size=4)
     svc.search("error")
     for i in range(3):
@@ -218,11 +220,11 @@ def test_search_service_result_cache_is_lru(engine):
 def test_service_search_batch_identical_and_faster(engine):
     store, _docs, _truth = engine
     serial_cloud = SimCloudStore(store, seed=9)
-    serial_svc = SearchService(serial_cloud, "index/be")
+    serial_svc = SearchService(SimCloudTransport(serial_cloud), "index/be")
     expect = serial_svc.search_batch(MIXED, batched=False)
 
     batched_cloud = SimCloudStore(store, seed=9)
-    batched_svc = SearchService(batched_cloud, "index/be",
+    batched_svc = SearchService(SimCloudTransport(batched_cloud), "index/be",
                                 superpost_cache_bytes=16 << 20)
     got = batched_svc.search_batch(MIXED)
     for a, b in zip(expect, got):
@@ -233,7 +235,7 @@ def test_service_search_batch_identical_and_faster(engine):
 
 def test_service_search_batch_uses_result_cache(engine):
     store, _docs, _truth = engine
-    svc = SearchService(SimCloudStore(store, seed=9), "index/be",
+    svc = SearchService(SimCloudTransport(SimCloudStore(store, seed=9)), "index/be",
                         cache_size=16)
     r1 = svc.search_batch(["error", "info"])
     r2 = svc.search_batch(["error", "info"])
@@ -289,9 +291,9 @@ def test_intersect_batch_property_ragged(seed):
 
 def test_query_batch_bitmap_impl_identical(engine):
     store, _docs, _truth = engine
-    sorted_res = Searcher(SimCloudStore(store, seed=5),
+    sorted_res = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)),
                           "index/be").query_batch(MIXED)
-    bitmap_res = Searcher(SimCloudStore(store, seed=5),
+    bitmap_res = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)),
                           "index/be").query_batch(MIXED, impl="bitmap")
     for a, b in zip(sorted_res, bitmap_res):
         assert a.texts == b.texts and a.refs == b.refs
@@ -333,12 +335,12 @@ def test_batched_latency_not_overcounted_vs_serial(engine):
     with serial runs of the same workload."""
     store, _docs, _truth = engine
     serial_cloud = SimCloudStore(store, seed=31)
-    serial_svc = SearchService(serial_cloud, "index/be")
+    serial_svc = SearchService(SimCloudTransport(serial_cloud), "index/be")
     serial_svc.search_batch(MIXED, batched=False)
     serial = serial_svc.stats.summary()
 
     batched_cloud = SimCloudStore(store, seed=31)
-    batched_svc = SearchService(batched_cloud, "index/be")
+    batched_svc = SearchService(SimCloudTransport(batched_cloud), "index/be")
     t0 = batched_cloud.clock_s
     batched_svc.search_batch(MIXED)
     wall = batched_cloud.clock_s - t0
@@ -362,11 +364,11 @@ def test_search_batch_dedupes_duplicate_queries(engine):
     must be planned/fetched once, the result fanned back out."""
     store, _docs, _truth = engine
     once_cloud = SimCloudStore(store, seed=33)
-    once = SearchService(once_cloud, "index/be")
+    once = SearchService(SimCloudTransport(once_cloud), "index/be")
     once.search_batch(["error"])
 
     dup_cloud = SimCloudStore(store, seed=33)
-    dup = SearchService(dup_cloud, "index/be")
+    dup = SearchService(SimCloudTransport(dup_cloud), "index/be")
     # same key under normalization: a duplicate string AND a reordered
     # equivalent tree of it
     res = dup.search_batch(["error", Term("error"), "error"])
@@ -375,17 +377,28 @@ def test_search_batch_dedupes_duplicate_queries(engine):
     assert dup.stats.summary()["n_queries"] == 1
 
     eq_cloud = SimCloudStore(store, seed=34)
-    eq = SearchService(eq_cloud, "index/be")
+    eq = SearchService(SimCloudTransport(eq_cloud), "index/be")
     tree = And((Term("error"), Term("block")))
     nested = And((Term("error"), And((Term("block"), Term("error")))))
     out = eq.search_batch([tree, nested])   # normalize flattens + dedupes
     assert out[0] is out[1]
 
 
-def test_search_regex_shim_routes_through_cache_and_topk(engine):
+def test_search_regex_removed_raises_typed_error(engine):
     store, _docs, _truth = engine
-    svc = SearchService(SimCloudStore(store, seed=35), "index/be",
-                        cache_size=8)
+    svc = SearchService(SimCloudTransport(SimCloudStore(store, seed=35)),
+                        "index/be", cache_size=8)
+    with pytest.raises(DeprecatedAPIError, match="search_regex"):
+        svc.search_regex(r"blk_4[0-9]1\b")
+    assert svc.stats.cache_lookups == 0      # rejected before the planner
+
+
+def test_search_regex_shim_routes_through_cache_and_topk(engine,
+                                                         monkeypatch):
+    monkeypatch.setenv("REPRO_ALLOW_DEPRECATED", "1")
+    store, _docs, _truth = engine
+    svc = SearchService(SimCloudTransport(SimCloudStore(store, seed=35)),
+                        "index/be", cache_size=8)
     with pytest.warns(DeprecationWarning, match="search_regex"):
         r1 = svc.search_regex(r"blk_4[0-9]1\b")
     # the shim is the planner path: cached, counted, equal to search()

@@ -10,7 +10,8 @@ from repro.data import make_logs_like, make_zipf, write_corpus
 from repro.data.tokenizer import distinct_words
 from repro.index import And, Builder, BuilderConfig, Or, Searcher, Term
 from repro.index.baselines import BTreeIndex, SkipListIndex
-from repro.storage import InMemoryBlobStore, SimCloudStore
+from repro.storage import (InMemoryBlobStore, SimCloudStore,
+                           SimCloudTransport)
 
 
 @pytest.fixture(scope="module")
@@ -40,7 +41,7 @@ def test_build_report_sane(built):
 
 def test_queries_exact_after_filtering(built):
     store, docs, _report, truth = built
-    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/logs")
     rng = np.random.default_rng(0)
     words = rng.choice(sorted(truth), size=60, replace=False)
     for w in words:
@@ -51,14 +52,14 @@ def test_queries_exact_after_filtering(built):
 
 def test_zero_result_query(built):
     store, _docs, _report, _truth = built
-    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/logs")
     res = s.query("zzz-not-a-word-zzz")
     assert res.texts == [] and res.stats.n_results == 0
 
 
 def test_boolean_queries(built):
     store, docs, _report, truth = built
-    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/logs")
     words = sorted(truth, key=lambda w: -len(truth[w]))[20:24]
     a, b, c = words[0], words[1], words[2]
     r = s.query(And((Term(a), Term(b))))
@@ -72,7 +73,7 @@ def test_boolean_queries(built):
 
 def test_topk(built):
     store, _docs, _report, truth = built
-    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/logs")
     w = max(truth, key=lambda w: len(truth[w]))
     res = s.query(w, top_k=5)
     assert len(res.texts) == 5
@@ -81,7 +82,7 @@ def test_topk(built):
 
 def test_hedged_query_correct(built):
     store, docs, _report, truth = built
-    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/logs")
     some = sorted(truth)[100]
     res = s.query(some, hedge=True)
     assert set(res.texts) == {docs[i] for i in truth[some]}
@@ -90,7 +91,7 @@ def test_hedged_query_correct(built):
 def test_observed_fp_within_hoeffding_of_expectation(built):
     """Fig. 5 / Eq. 5: measured false positives concentrate around F(L)."""
     store, _docs, report, truth = built
-    s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/logs")
     rng = np.random.default_rng(1)
     rare = [w for w in truth if len(truth[w]) <= 3]
     words = rng.choice(rare, size=min(80, len(rare)), replace=False)
@@ -108,7 +109,7 @@ def test_baselines_same_results_slower_lookup(built):
         r = bs.query(w)
         assert set(r.texts) == {docs[i] for i in truth[w]}
         assert r.stats.rounds >= 3       # root→…→leaf→postings→docs
-        s = Searcher(SimCloudStore(store, seed=3), "index/logs")
+        s = Searcher(SimCloudTransport(SimCloudStore(store, seed=3)), "index/logs")
         ra = s.query(w)
         assert ra.stats.lookup.elapsed_s < r.stats.lookup.elapsed_s
 
@@ -126,7 +127,7 @@ def test_manual_L_override_and_hashtable_equivalence():
     docs = make_zipf(500, 300, 12, seed=2)
     corpus = write_corpus(store, "corpus/z", docs, n_blobs=2)
     r1 = Builder(BuilderConfig(B=300, L=1)).build(corpus, store, "index/h1")
-    s = Searcher(SimCloudStore(store, seed=0), "index/h1")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), "index/h1")
     assert s.L == 1
     truth: dict[str, set[int]] = {}
     for i, d in enumerate(docs):
@@ -147,7 +148,7 @@ def test_multilayer_beats_hashtable_on_false_positives():
     for L in (1, 3):
         Builder(BuilderConfig(B=240, L=L, common_frac=0.0)).build(
             corpus, store, f"index/L{L}")
-        s = Searcher(SimCloudStore(store, seed=0), f"index/L{L}")
+        s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), f"index/L{L}")
         rng = np.random.default_rng(0)
         truth: dict[str, set[int]] = {}
         for i, d in enumerate(docs):

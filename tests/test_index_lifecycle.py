@@ -4,14 +4,16 @@ generations, generation-keyed caches, and the StorageTransport protocol.
 The load-bearing acceptance criterion: byte-identity across the
 redesign. `query_batch` through `Index.open(...).searcher()` over a
 base+segments index must equal a monolithic rebuild of the concatenated
-corpus, and the legacy `Searcher(cloud, prefix)` constructor must keep
-returning identical results (with a DeprecationWarning)."""
+corpus, and the legacy `Searcher(cloud, prefix)` constructor must raise
+a typed `DeprecatedAPIError` by default while `REPRO_ALLOW_DEPRECATED=1`
+restores the old warn-and-work shim with identical results."""
 
 import threading
 
 import numpy as np
 import pytest
 
+from repro.compat import DeprecatedAPIError
 from repro.data import make_logs_like, write_corpus
 from repro.data.corpus import Corpus
 from repro.data.tokenizer import distinct_words
@@ -83,7 +85,16 @@ def test_open_missing_prefix_raises(corpora):
         Index.open(store, "index/does-not-exist")
 
 
-def test_legacy_searcher_constructor_identical_and_warns(corpora):
+def test_legacy_searcher_constructor_raises_typed_error(corpora):
+    store, _docs1, _docs2, c1, _c2 = corpora
+    Index.build(c1, CFG, store, "index/legacy")
+    with pytest.raises(DeprecatedAPIError, match="StorageTransport"):
+        Searcher(SimCloudStore(store, seed=5), "index/legacy")
+
+
+def test_legacy_searcher_constructor_identical_under_flag(corpora,
+                                                          monkeypatch):
+    monkeypatch.setenv("REPRO_ALLOW_DEPRECATED", "1")
     store, _docs1, _docs2, c1, _c2 = corpora
     Index.build(c1, CFG, store, "index/legacy")
     facade = Index.open(SimCloudStore(store, seed=5),
@@ -411,8 +422,12 @@ def test_searcher_accepts_transport_without_warning(corpora):
         {docs1[i] for i in truth["error"]}
 
 
-def test_service_legacy_constructor_warns(corpora):
+def test_service_legacy_constructor_raises(corpora, monkeypatch):
     store, *_ = corpora
+    with pytest.raises(DeprecatedAPIError, match="StorageTransport"):
+        SearchService(SimCloudStore(store, seed=2), "index/bo")
+    # the compat flag restores the old warn-and-work shim
+    monkeypatch.setenv("REPRO_ALLOW_DEPRECATED", "1")
     with pytest.warns(DeprecationWarning):
         SearchService(SimCloudStore(store, seed=2), "index/bo")
 

@@ -16,6 +16,7 @@ import warnings
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.compat import UngracedSweepError
 from repro.data import make_logs_like, write_corpus
 from repro.data.tokenizer import distinct_words
 from repro.index import (And, BuilderConfig, Index, LeaseRegistry,
@@ -363,13 +364,22 @@ def test_cluster_gc_respects_service_leases(tmp_path=None):
     svc.close()
 
 
-def test_grace_zero_without_registry_warns(tmp_path=None):
+def test_grace_zero_without_registry_raises(monkeypatch):
     store, _docs1, _docs2, c1, _c2 = _fixture(n1=40, n2=20)
     Index.build(c1, CFG, store, "index/warn")
+    with pytest.raises(UngracedSweepError, match="LeaseRegistry"):
+        collect_garbage(store, "index/warn", keep=1, grace_s=0.0)
+    with pytest.raises(UngracedSweepError, match="LeaseRegistry"):
+        collect_cluster_garbage(store, "index/warn", keep=1, grace_s=0.0)
+    # the typed error is still catchable as the old ValueError family
+    assert issubclass(UngracedSweepError, ValueError)
+    # compat flag restores the old warn-and-sweep behaviour
+    monkeypatch.setenv("REPRO_ALLOW_DEPRECATED", "1")
     with pytest.warns(DeprecationWarning, match="LeaseRegistry"):
         collect_garbage(store, "index/warn", keep=1, grace_s=0.0)
     with pytest.warns(DeprecationWarning, match="LeaseRegistry"):
         collect_cluster_garbage(store, "index/warn", keep=1, grace_s=0.0)
+    monkeypatch.delenv("REPRO_ALLOW_DEPRECATED")
     # either protection silences it
     with warnings.catch_warnings():
         warnings.simplefilter("error")

@@ -9,7 +9,8 @@ from repro.data.pipeline import IndexedCorpusLoader, PipelineConfig
 from repro.index import Builder, BuilderConfig, Term
 from repro.models import NULL_RULES, build_model, init_params
 from repro.serving import RAGPipeline, SearchService
-from repro.storage import InMemoryBlobStore, SimCloudStore
+from repro.storage import (InMemoryBlobStore, SimCloudStore,
+                           SimCloudTransport)
 
 
 def _setup():
@@ -57,7 +58,7 @@ def test_loader_keyword_filter():
 
 def test_search_service_latency_stats():
     store, docs = _setup()
-    svc = SearchService(SimCloudStore(store, seed=0), "index/p")
+    svc = SearchService(SimCloudTransport(SimCloudStore(store, seed=0)), "index/p")
     for q in ("error", "block", "info"):
         svc.search(q, top_k=5)
     s = svc.stats.summary()
@@ -72,7 +73,7 @@ def test_rag_pipeline_end_to_end():
         n_layers=2, d_model=64, n_heads=2, n_kv=1, d_ff=128, vocab=512)
     model = build_model(cfg)
     params = init_params(model.param_desc(), jax.random.PRNGKey(0))
-    svc = SearchService(SimCloudStore(store, seed=0), "index/p")
+    svc = SearchService(SimCloudTransport(SimCloudStore(store, seed=0)), "index/p")
     rag = RAGPipeline(svc, model, params, vocab_size=cfg.vocab,
                       max_context=48)
     out = rag.generate("block", top_k_docs=2, max_new_tokens=4)

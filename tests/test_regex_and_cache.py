@@ -8,7 +8,8 @@ import pytest
 from repro.data import make_logs_like, write_corpus
 from repro.index import Builder, BuilderConfig, Searcher
 from repro.serving import SearchService
-from repro.storage import InMemoryBlobStore, SimCloudStore
+from repro.storage import (InMemoryBlobStore, SimCloudStore,
+                           SimCloudTransport)
 
 
 @pytest.fixture(scope="module")
@@ -23,7 +24,7 @@ def ngram_index():
 
 def test_regex_query_exact(ngram_index):
     store, docs, _report = ngram_index
-    s = Searcher(SimCloudStore(store, seed=0), "index/ng")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), "index/ng")
     for pattern in (r"blk_1[0-9]2\b", r"node4[0-5] ", r"shuffle_9\d+"):
         res = s.regex_query(pattern)
         truth = {d for d in docs if re.search(pattern, d)}
@@ -35,7 +36,7 @@ def test_regex_query_exact(ngram_index):
 
 def test_regex_rejects_unfilterable(ngram_index):
     store, _docs, _report = ngram_index
-    s = Searcher(SimCloudStore(store, seed=0), "index/ng")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=0)), "index/ng")
     with pytest.raises(ValueError, match="full corpus scan"):
         s.regex_query(r"[0-9]+")
 
@@ -50,7 +51,7 @@ def test_ngram_indexing_keeps_fp_model(ngram_index):
 
 def test_query_cache(ngram_index):
     store, _docs, _report = ngram_index
-    svc = SearchService(SimCloudStore(store, seed=1), "index/ng",
+    svc = SearchService(SimCloudTransport(SimCloudStore(store, seed=1)), "index/ng",
                         cache_size=8)
     r1 = svc.search("error")
     n_after_first = svc.stats.summary()["n"]

@@ -19,7 +19,8 @@ from _hypothesis_compat import given, settings, st
 
 from repro.data import make_logs_like, write_corpus
 from repro.data.corpus import Corpus
-from repro.index import (BuilderConfig, GCReport, Index, Regex,
+from repro.index import (BuilderConfig, GCReport, Index, LeaseRegistry,
+                         Regex,
                          collect_garbage, reachable_blobs)
 from repro.serving import (ClusterConflict, SearchService, ShardedIndex,
                            collect_cluster_garbage)
@@ -357,7 +358,8 @@ def _gc_roundtrip(store, prefix, expect, keep=1):
     """Dry-run lists exactly the orphans; the real run deletes exactly
     those and nothing else; the surviving cluster serves identically."""
     dry = collect_cluster_garbage(store, prefix, keep=keep,
-                                  grace_s=0.0, dry_run=True)
+                                  grace_s=0.0, dry_run=True,
+                                  leases=LeaseRegistry())
     assert isinstance(dry, GCReport) and dry.deleted == []
     live = cluster_reachable_blobs(store, prefix, keep=keep)
     assert set(dry.unreachable).isdisjoint(live)
@@ -365,7 +367,7 @@ def _gc_roundtrip(store, prefix, expect, keep=1):
 
     before = set(store.list(f"{prefix}/"))
     real = collect_cluster_garbage(store, prefix, keep=keep,
-                                   grace_s=0.0)
+                                   grace_s=0.0, leases=LeaseRegistry())
     assert real.deleted == dry.unreachable
     assert real.bytes_reclaimed == dry.bytes_reclaimed > 0
     assert before - set(store.list(f"{prefix}/")) == set(real.deleted)
@@ -399,7 +401,8 @@ def test_gc_keeps_latest_k_generations_openable():
     cluster.reshard(2)
     cluster.reshard(6)
     cluster.reshard(3)                       # generations 1..4
-    collect_cluster_garbage(store, "cluster/gk", keep=2, grace_s=0.0)
+    collect_cluster_garbage(store, "cluster/gk", keep=2, grace_s=0.0,
+                            leases=LeaseRegistry())
     for gen in (3, 4):                       # the kept window
         c = ShardedIndex.open(store, "cluster/gk", generation=gen)
         cs = c.searcher()
@@ -440,12 +443,13 @@ def test_index_level_gc_after_merge():
     assert _flat([idx.searcher().query("error")]) == expect
 
     dry = collect_garbage(store, "index/igc", keep=1, grace_s=0.0,
-                          dry_run=True)
+                          dry_run=True, leases=LeaseRegistry())
     # the pre-merge segment is now unreachable; the root-layout base is
     # still reachable through older... no: keep=1 keeps only gen 3, whose
     # base is base-00000003 — the root base and the segment are garbage
     assert any("/seg-" in n for n in dry.unreachable)
-    real = collect_garbage(store, "index/igc", keep=1, grace_s=0.0)
+    real = collect_garbage(store, "index/igc", keep=1, grace_s=0.0,
+                          leases=LeaseRegistry())
     assert real.deleted == dry.unreachable
     assert _flat([Index.open(store, "index/igc").searcher().query("error")]) \
         == expect
@@ -516,7 +520,7 @@ def test_gc_never_deletes_blobs_reachable_from_latest_k(data):
         cs.close()
 
     collect_cluster_garbage(store, "cluster/prop", keep=keep,
-                            grace_s=0.0)
+                            grace_s=0.0, leases=LeaseRegistry())
 
     for g in kept_gens:
         c = ShardedIndex.open(store, "cluster/prop", generation=g)

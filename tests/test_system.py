@@ -9,7 +9,8 @@ from repro.data import make_logs_like, write_corpus
 from repro.data.tokenizer import distinct_words
 from repro.index import Builder, BuilderConfig, Searcher
 from repro.index.baselines import BTreeIndex
-from repro.storage import InMemoryBlobStore, REGIONS, SimCloudStore
+from repro.storage import (InMemoryBlobStore, REGIONS, SimCloudStore,
+                           SimCloudTransport)
 
 
 @pytest.fixture(scope="module")
@@ -37,7 +38,7 @@ def test_airphant_faster_than_hierarchical_baseline(system):
     baseline because it never chains round trips."""
     store, docs, truth = system
     words = _sample_words(truth)
-    s = Searcher(SimCloudStore(store, seed=5), "index/sys")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=5)), "index/sys")
     bt = BTreeIndex(store, "index/sysbt").open(SimCloudStore(store, seed=5))
     t_air = np.mean([s.query(w).stats.lookup.elapsed_s for w in words])
     t_bt = np.mean([bt.query(w).stats.lookup.elapsed_s for w in words])
@@ -47,7 +48,7 @@ def test_airphant_faster_than_hierarchical_baseline(system):
 def test_latency_under_a_second(system):
     """Paper: 'keeping its query latencies always under a second'."""
     store, _docs, truth = system
-    s = Searcher(SimCloudStore(store, seed=6), "index/sys")
+    s = Searcher(SimCloudTransport(SimCloudStore(store, seed=6)), "index/sys")
     for w in _sample_words(truth, 40, seed=1):
         assert s.query(w).stats.total_s < 1.0
 
@@ -67,7 +68,8 @@ def test_cross_region_milder_slowdown(system):
                 [s.query(w).stats.total_s for w in words])
         return out
 
-    air = mean_latency(lambda c: Searcher(c, "index/sys"))
+    air = mean_latency(
+        lambda c: Searcher(SimCloudTransport(c), "index/sys"))
     bt = mean_latency(lambda c: BTreeIndex(store, "index/sysbt").open(c))
     slow_air = air["asia-southeast1"] / air["us-central1"]
     slow_bt = bt["asia-southeast1"] / bt["us-central1"]
@@ -83,7 +85,7 @@ def test_cross_region_milder_slowdown(system):
 def test_searcher_init_is_one_read(system):
     store, _docs, _truth = system
     cloud = SimCloudStore(store, seed=8)
-    _s = Searcher(cloud, "index/sys")
+    _s = Searcher(SimCloudTransport(cloud), "index/sys")
     assert cloud.totals.n_requests == 1          # header only
     # MHT memory is small (paper: ~2 MB at B=1e5; proportional here)
     assert cloud.totals.bytes_fetched < 2 << 20
