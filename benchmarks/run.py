@@ -56,7 +56,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for key in keys:
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             for line in benches[key]():
                 print(line)
@@ -64,7 +64,8 @@ def main() -> None:
             failures += 1
             print(f"{key}/ERROR,0.0,{type(exc).__name__}:"
                   f"{str(exc)[:80].replace(',', ';')}")
-        print(f"# {key} took {time.time() - t0:.1f}s", file=sys.stderr)
+        print(f"# {key} took {time.perf_counter() - t0:.1f}s",
+              file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

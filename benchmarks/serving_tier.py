@@ -711,6 +711,7 @@ def _soak_scenario(smoke: bool) -> dict:
     import threading
     import time
 
+    from repro.analysis import locks
     from repro.serving import (Frontend, FrontendConfig, Overloaded,
                                Telemetry)
     from repro.storage import BlobStoreTransport, LocalBlobStore
@@ -731,6 +732,11 @@ def _soak_scenario(smoke: bool) -> dict:
         pool = _workload(truth)
 
         telemetry = Telemetry()
+        # export per-lock contention counters/wait histograms into the
+        # same registry the control plane reads; with REPRO_LOCK_CHECK=1
+        # (the CI soak) any lock-order inversion under real-thread load
+        # raises the cycle instead of hanging the run
+        locks.bind_telemetry(telemetry)
         cs = cluster.searcher(
             replica_sources=[lambda s: BlobStoreTransport(store),
                              lambda s: BlobStoreTransport(store)],
@@ -792,6 +798,13 @@ def _soak_scenario(smoke: bool) -> dict:
         snap = telemetry.snapshot()
         in_flight = {k: v for k, v in snap.items()
                      if k.endswith("in_flight")}
+        contention = {
+            name: agg for name, agg in
+            sorted(locks.contention_summary().items(),
+                   key=lambda kv: -kv[1]["contentions"])
+            if agg["contentions"] > 0}
+        lock_edges = sum(len(v) for v in locks.order_edges().values())
+        locks.bind_telemetry(None)
         cs.close()
         cluster.close()
 
@@ -811,6 +824,9 @@ def _soak_scenario(smoke: bool) -> dict:
         "gauges_zero": all(v == 0 for v in in_flight.values()),
         "n_in_flight_gauges": len(in_flight),
         "identical_results": identical,
+        "lock_check_armed": locks.armed(),
+        "lock_order_edges": lock_edges,
+        "lock_contention": contention,
     }
 
 

@@ -109,6 +109,35 @@ def check_file(path: str, repo_root: str,
     return errors
 
 
+RULE_DECL_RE = re.compile(r'^\s*id\s*=\s*"([A-Z][A-Z0-9-]*)"', re.M)
+RULE_TOKEN_RE = re.compile(r"\b[A-Z][A-Z0-9]*(?:-[A-Z][A-Z0-9]*)+\b")
+# placeholders the catalog uses when explaining the pragma syntax
+RULE_PLACEHOLDERS = {"RULE-ID"}
+
+
+def check_rule_catalog(repo_root: str) -> list[str]:
+    """docs/static_analysis.md and analysis/lint.py must agree on the
+    rule set: every declared rule id is documented, every rule-shaped
+    token in the catalog exists in code."""
+    lint_py = os.path.join(repo_root, "src", "repro", "analysis", "lint.py")
+    catalog = os.path.join(repo_root, "docs", "static_analysis.md")
+    errors: list[str] = []
+    if not os.path.exists(lint_py) or not os.path.exists(catalog):
+        return [f"rule catalog: missing {p}" for p in (lint_py, catalog)
+                if not os.path.exists(p)]
+    with open(lint_py, encoding="utf-8") as f:
+        declared = set(RULE_DECL_RE.findall(f.read()))
+    with open(catalog, encoding="utf-8") as f:
+        mentioned = set(RULE_TOKEN_RE.findall(f.read())) - RULE_PLACEHOLDERS
+    for rule in sorted(declared - mentioned):
+        errors.append(f"{catalog}: rule {rule} is declared in "
+                      f"{lint_py} but missing from the catalog")
+    for rule in sorted(mentioned - declared):
+        errors.append(f"{catalog}: mentions rule-like token {rule} that "
+                      f"no rule in {lint_py} declares")
+    return errors
+
+
 def default_files(repo_root: str) -> list[str]:
     files = [os.path.join(repo_root, "README.md")]
     files += sorted(glob.glob(os.path.join(repo_root, "docs", "*.md")))
@@ -124,6 +153,8 @@ def run(files: list[str] | None = None,
     errors: list[str] = []
     for path in targets:
         errors += check_file(path, root, slug_cache)
+    if files is None:          # full-default runs also pin the rule catalog
+        errors += check_rule_catalog(root)
     return errors
 
 

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Run the repo's invariant linter (see docs/static_analysis.md).
+
+Exit status:
+  0  clean (all findings baselined; in --strict mode the baseline is
+     also exact — no stale entries)
+  1  un-baselined findings
+  2  stale baseline entries under --strict (the debt they excused is
+     fixed; delete them — the baseline shrinks, never grows)
+
+Usage:
+  python scripts/lint_invariants.py            # lint src/repro + benchmarks
+  python scripts/lint_invariants.py --strict   # CI mode
+  python scripts/lint_invariants.py src/repro/serving/frontend.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.analysis.lint import apply_baseline, load_baseline, run_lint  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("paths", nargs="*", type=Path,
+                        help="files to lint (default: the whole tree)")
+    parser.add_argument("--root", type=Path, default=REPO_ROOT,
+                        help="tree root (default: the repo)")
+    parser.add_argument("--baseline", type=Path, default=None,
+                        help="allowlist file (default: "
+                             "<root>/src/repro/analysis/baseline.toml)")
+    parser.add_argument("--strict", action="store_true",
+                        help="also fail on stale baseline entries")
+    args = parser.parse_args(argv)
+
+    root = args.root.resolve()
+    files = [p if p.is_absolute() else Path.cwd() / p
+             for p in args.paths] or None
+    findings = run_lint(root, files)
+
+    baseline_path = (args.baseline
+                     or root / "src" / "repro" / "analysis" / "baseline.toml")
+    entries = load_baseline(baseline_path) if baseline_path.exists() else []
+    remaining, unused = apply_baseline(findings, entries)
+
+    for finding in remaining:
+        print(finding.render())
+    if remaining:
+        print(f"\n{len(remaining)} finding(s) "
+              f"({len(findings) - len(remaining)} baselined)")
+        return 1
+
+    # partial runs (explicit paths) can't judge baseline staleness:
+    # entries for unlinted files would look unused
+    if args.strict and files is None and unused:
+        for entry in unused:
+            print(f"stale baseline entry: {entry.rule} @ {entry.path} "
+                  f"({entry.reason}) — the violation is gone; delete the "
+                  "entry")
+        return 2
+
+    print(f"clean: 0 findings ({len(entries)} baselined, "
+          f"{len(findings)} total matched)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

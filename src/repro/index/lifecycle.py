@@ -859,6 +859,8 @@ def collect_garbage(source, prefix: str, keep: int = 2,
     live = reachable if reachable is not None else \
         reachable_blobs(blobs, prefix, keep, min_generation=min_gen)
     orphans = sorted(n for n in candidates if n not in live)
+    # mtime-grace fallback compares against real blob mtimes, so the
+    # default clock must be the wall clock  # lint: allow RAW-CLOCK
     t_now = time.time() if now is None else now
     report = GCReport(prefix=prefix, keep=int(keep),
                       n_candidates=len(candidates),

@@ -28,9 +28,9 @@ of polling) lives in serving/notify.py — `GenerationBus`.
 
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass
 
+from ..analysis.locks import OrderedLock
 from ..data.corpus import Corpus, DocRef
 from ..storage.blobstore import InMemoryBlobStore, RangeRequest
 from .builder import Builder, BuilderConfig
@@ -135,7 +135,7 @@ class LeaseRegistry:
     """
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("nrt.leases")
         self._held: dict[str, dict[int, int]] = {}   # prefix -> gen -> count
 
     def acquire(self, prefix: str, generation: int) -> Lease:

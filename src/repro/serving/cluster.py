@@ -47,7 +47,6 @@ from __future__ import annotations
 
 import hashlib
 import heapq
-import threading
 import time
 import uuid
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
@@ -55,6 +54,7 @@ from dataclasses import asdict, dataclass, field, replace
 
 import msgpack
 
+from ..analysis.locks import OrderedLock
 from ..core.hashing import word_fingerprint
 from ..core.topk import sample_size
 from ..data.corpus import Corpus, DocRef
@@ -937,7 +937,7 @@ class ClusterSearcher:
         self.generation = generation
         self._owned_transports = owned_transports or []
         self.last_scatter = ScatterReport()
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("cluster.scatter")
         self._pool: ThreadPoolExecutor | None = None
         # boot cost: the batched header round(s), plus whatever any
         # reader fetched on its own (zero when the session pre-fetched)

@@ -50,9 +50,9 @@ adaptive-vs-static comparison can be trusted.
 from __future__ import annotations
 
 import random
-import threading
 from dataclasses import dataclass
 
+from ..analysis.locks import OrderedLock
 from .frontend import DeadlineExceeded
 from .telemetry import Telemetry, WindowedHistogram
 
@@ -107,7 +107,7 @@ class BatchController:
                  telemetry: Telemetry | None = None) -> None:
         self.max_batch = max_batch
         self.config = config or ControlConfig()
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("control.controller")
         # arrival process: EWMA of inter-arrival gaps -> rate estimate
         self._gap_ewma: float | None = None
         self._last_arrival: float | None = None

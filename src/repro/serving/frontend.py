@@ -35,6 +35,7 @@ from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 
+from ..analysis.locks import ordered_condition
 from ..index.query import Query
 
 
@@ -157,7 +158,7 @@ class Frontend:
             self._g_depth = self._h_wait = None
             self._c_admitted = self._c_shed = self._c_miss = None
         self._queue: deque[_Pending] = deque()
-        self._cond = threading.Condition()
+        self._cond = ordered_condition("frontend.cond")
         self._thread: threading.Thread | None = None
         self._closed = False
         self._refresh_pending = False
@@ -373,9 +374,9 @@ class Frontend:
                 # measured in real time too — an injected `clock` only
                 # governs deadlines and stepped mode, never this loop
                 # (a fake clock would otherwise leave it waiting forever)
-                t_close = time.monotonic() + self._window_s()
+                t_close = time.monotonic() + self._window_s()  # lint: allow RAW-CLOCK
                 while len(self._queue) < cfg.max_batch:
-                    remaining = t_close - time.monotonic()
+                    remaining = t_close - time.monotonic()  # lint: allow RAW-CLOCK
                     if remaining <= 0 or self._closed:
                         break
                     self._cond.wait(timeout=remaining)

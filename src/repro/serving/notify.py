@@ -29,6 +29,8 @@ import threading
 from collections import deque
 from dataclasses import dataclass
 
+from ..analysis.locks import ordered_condition
+
 
 @dataclass(frozen=True)
 class GenerationEvent:
@@ -62,7 +64,7 @@ class Subscription:
 
 class GenerationBus:
     def __init__(self, threaded: bool = False) -> None:
-        self._cond = threading.Condition()
+        self._cond = ordered_condition("notify.bus")
         self._subs: list[Subscription] = []
         self._pending: deque[GenerationEvent] = deque()
         self._threaded = threaded

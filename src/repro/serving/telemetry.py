@@ -33,8 +33,9 @@ default everywhere), so the data plane has zero new obligations.
 from __future__ import annotations
 
 import math
-import threading
 from bisect import bisect_left, insort
+
+from ..analysis.locks import OrderedLock
 
 
 class Counter:
@@ -43,7 +44,7 @@ class Counter:
     __slots__ = ("_lock", "_value")
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("telemetry.counter")
         self._value = 0
 
     def inc(self, n: int = 1) -> None:
@@ -63,7 +64,7 @@ class Gauge:
     __slots__ = ("_lock", "_value")
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("telemetry.gauge")
         self._value = 0.0
 
     def set(self, v: float) -> None:
@@ -101,7 +102,7 @@ class WindowedHistogram:
     def __init__(self, window: int = 256) -> None:
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("telemetry.histogram")
         self._window = window
         self._ring: list[float] = []
         self._next = 0                 # ring slot the next observe evicts
@@ -180,7 +181,7 @@ class Telemetry:
     """
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("telemetry.registry")
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, WindowedHistogram] = {}

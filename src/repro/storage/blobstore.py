@@ -15,6 +15,8 @@ import time
 from abc import ABC, abstractmethod
 from dataclasses import dataclass
 
+from ..analysis.locks import OrderedLock
+
 
 @dataclass(frozen=True)
 class RangeRequest:
@@ -93,7 +95,7 @@ class InMemoryBlobStore(BlobStore):
     def __init__(self) -> None:
         self._blobs: dict[str, bytes] = {}
         self._mtimes: dict[str, float] = {}
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("blobstore.memory")
 
     def put(self, name: str, data: bytes) -> None:
         with self._lock:

@@ -19,9 +19,10 @@ under that. The plain `LRUCache` stays lock-free — single-caller state.
 
 from __future__ import annotations
 
-import threading
 from collections import OrderedDict
 from typing import Callable, Hashable
+
+from ..analysis.locks import OrderedLock
 
 _MISSING = object()          # sentinel: a stored None is a real entry
 
@@ -102,7 +103,7 @@ class SuperpostCache:
     def __init__(self, max_bytes: int = 32 << 20) -> None:
         self._lru = LRUCache(max_bytes, weigh=len)
         self.bytes_saved = 0
-        self._lock = threading.Lock()
+        self._lock = OrderedLock("storage.superpost_cache")
 
     # -- stats ------------------------------------------------------------
     @property

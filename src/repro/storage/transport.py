@@ -33,7 +33,6 @@ legacy `Searcher(cloud, prefix)` constructors keep working.
 
 from __future__ import annotations
 
-import threading
 import time
 from abc import ABC, abstractmethod
 from concurrent.futures import ThreadPoolExecutor
@@ -43,6 +42,7 @@ from typing import Callable
 
 import numpy as np
 
+from ..analysis.locks import OrderedLock
 from .blobstore import BlobStore, RangeRequest
 from .simcloud import FetchStats, SimCloudStore
 
@@ -345,7 +345,7 @@ class BlobStoreTransport(StorageTransport):
         self._max_workers = max_workers
         self._pool: ThreadPoolExecutor | None = None
         self._in_flight = 0
-        self._gauge_lock = threading.Lock()
+        self._gauge_lock = OrderedLock("transport.gauge")
 
     @property
     def in_flight(self) -> int:

@@ -1,0 +1,517 @@
+"""Invariant linter + lock-order detector (src/repro/analysis/).
+
+Three layers:
+
+  * golden fixtures — a miniature tree per rule that MUST trip it (and a
+    fixed twin that must not), so a rule can never silently stop firing;
+  * the real tree — `run_lint` over the repo proper must be fully covered
+    by the checked-in baseline, and the baseline must be exact (≤ 5
+    entries, none stale) — the shrink-only contract;
+  * `OrderedLock` — deterministic inversion detection, Condition
+    integration, contention telemetry, and a hypothesis property test:
+    schedules that respect a global order never trip the detector,
+    schedules with a planted inversion always do.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.analysis import locks
+from repro.analysis.lint import (BaselineError, RULE_IDS, apply_baseline,
+                                 load_baseline, run_lint)
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+# ==========================================================================
+# fixture trees
+# ==========================================================================
+
+def _tree(tmp_path: Path, files: dict[str, str]) -> Path:
+    for rel, body in files.items():
+        path = tmp_path / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(body))
+    return tmp_path
+
+
+def _rules_hit(tmp_path, files):
+    return {f.rule for f in run_lint(_tree(tmp_path, files))}
+
+
+def test_raw_clock_trips_and_perf_counter_passes(tmp_path):
+    findings = run_lint(_tree(tmp_path, {
+        "src/repro/serving/svc.py": """\
+            import time
+            from time import monotonic
+
+            def bad():
+                return time.time() + monotonic()
+
+            def fine():
+                return time.perf_counter()
+            """,
+    }))
+    # both clock reads sit on line 5: the attribute call and the
+    # from-import call each get their own finding
+    assert [(f.rule, f.line) for f in findings] == \
+        [("RAW-CLOCK", 5), ("RAW-CLOCK", 5)]
+    messages = " ".join(f.message for f in findings)
+    assert "time.time()" in messages and "monotonic" in messages
+    assert "now" in findings[0].hint
+
+
+def test_raw_clock_scope_and_pragma(tmp_path):
+    findings = run_lint(_tree(tmp_path, {
+        # out of scope: core/ code may read clocks
+        "src/repro/core/clock_user.py": "import time\nx = time.time()\n",
+        # pragma on the line above suppresses
+        "src/repro/index/sweep.py": """\
+            import time
+            # lint: allow RAW-CLOCK
+            t = time.time()
+            """,
+        "benchmarks/bench.py": "import time\nt0 = time.monotonic()\n",
+    }))
+    assert [(f.rule, f.path) for f in findings] == \
+        [("RAW-CLOCK", "benchmarks/bench.py")]
+
+
+def test_raw_store_trips_and_blobs_seam_passes(tmp_path):
+    findings = run_lint(_tree(tmp_path, {
+        "src/repro/serving/svc.py": """\
+            def bad(store):
+                return store.get("manifest")
+
+            def fine(transport):
+                transport.blobs.put("manifest", b"x")
+                return transport.get_range(None)
+            """,
+    }))
+    assert [(f.rule, f.line) for f in findings] == [("RAW-STORE", 2)]
+    assert "transport" in findings[0].hint
+
+
+def test_raw_store_benchmarks_may_seed_but_not_read(tmp_path):
+    findings = run_lint(_tree(tmp_path, {
+        "benchmarks/bench.py": """\
+            def seed(store):
+                store.put("blob", b"x" * 1024)   # fixture seeding: allowed
+
+            def bad(store):
+                return store.get("blob")
+            """,
+    }))
+    assert [(f.rule, f.line) for f in findings] == [("RAW-STORE", 5)]
+
+
+def test_bare_lock_trips_ordered_condition_passes(tmp_path):
+    findings = run_lint(_tree(tmp_path, {
+        "src/repro/storage/widget.py": """\
+            import threading
+            from threading import RLock
+
+            a = threading.Lock()
+            b = RLock()
+            c = threading.Condition()
+            d = threading.Condition(a)   # explicit lock: not a creation
+            """,
+        # locks.py itself is the sanctioned creation site
+        "src/repro/analysis/locks.py": "import threading\n"
+                                       "m = threading.Lock()\n",
+    }))
+    assert [(f.rule, f.line) for f in findings] == \
+        [("BARE-LOCK", 4), ("BARE-LOCK", 5), ("BARE-LOCK", 6)]
+    assert "OrderedLock" in findings[0].hint
+
+
+def test_deprecated_ref_trips_outside_compat(tmp_path):
+    findings = run_lint(_tree(tmp_path, {
+        "src/repro/serving/svc.py": """\
+            def f(s):
+                return s.search_regex("a.b")
+            """,
+        "src/repro/compat.py": "def deprecated_call():\n    pass\n",
+    }))
+    assert [(f.rule, f.path) for f in findings] == \
+        [("DEPRECATED-REF", "src/repro/serving/svc.py")]
+    assert "search_regex" in findings[0].message
+
+
+def test_kernel_parity_missing_ref_and_missing_test(tmp_path):
+    base = {
+        "src/repro/kernels/foo/ops.py": """\
+            import jax.experimental.pallas as pl
+
+            def op(x):
+                return pl.pallas_call(None)(x)
+
+            def helper(x):          # pure jnp: no twin required
+                return x
+            """,
+        "src/repro/kernels/foo/ref.py": "",
+    }
+    findings = run_lint(_tree(tmp_path, base))
+    assert [(f.rule, f.line) for f in findings] == [("KERNEL-PARITY", 3)]
+    assert "op_ref" in findings[0].message
+
+    # adding the ref but no test: still unpinned
+    (tmp_path / "src/repro/kernels/foo/ref.py").write_text(
+        "def op_ref(x):\n    return x\n")
+    findings = run_lint(tmp_path)
+    assert [f.rule for f in findings] == ["KERNEL-PARITY"]
+    assert "never named in a test" in findings[0].message
+
+    # ref + test mention: clean
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests/test_foo.py").write_text(
+        "from repro.kernels.foo.ops import op\n")
+    assert run_lint(tmp_path) == []
+
+
+def test_swallowed_exc_trips_and_observable_handler_passes(tmp_path):
+    findings = run_lint(_tree(tmp_path, {
+        "src/repro/storage/io.py": """\
+            def f():
+                try:
+                    g()
+                except:
+                    pass
+
+            def g():
+                try:
+                    h()
+                except Exception:
+                    pass
+
+            def h():
+                try:
+                    f()
+                except Exception:
+                    counter.inc()          # observable: fine
+                try:
+                    f()
+                except ValueError:         # narrowed: fine
+                    pass
+            """,
+    }))
+    assert [(f.rule, f.line) for f in findings] == \
+        [("SWALLOWED-EXC", 4), ("SWALLOWED-EXC", 10)]
+
+
+def test_every_rule_has_a_tripping_fixture(tmp_path):
+    """The union of the golden fixtures above covers all six rules."""
+    hit = set()
+    hit |= _rules_hit(tmp_path / "a", {
+        "src/repro/serving/a.py": "import time\nt = time.time()\n"})
+    hit |= _rules_hit(tmp_path / "b", {
+        "src/repro/serving/b.py": "def f(store):\n    store.get('x')\n"})
+    hit |= _rules_hit(tmp_path / "c", {
+        "src/repro/index/c.py": "import threading\nl = threading.Lock()\n"})
+    hit |= _rules_hit(tmp_path / "d", {
+        "src/repro/index/d.py": "from repro.compat import deprecated_call\n"})
+    hit |= _rules_hit(tmp_path / "e", {
+        "src/repro/kernels/k/ops.py":
+            "def op(x):\n    return pallas_call(x)\n",
+        "src/repro/kernels/k/ref.py": ""})
+    hit |= _rules_hit(tmp_path / "f", {
+        "src/repro/storage/f.py":
+            "try:\n    pass\nexcept Exception:\n    pass\n"})
+    assert hit == set(RULE_IDS)
+    assert len(RULE_IDS) == 6
+
+
+# ==========================================================================
+# baseline allowlist
+# ==========================================================================
+
+BASELINE_TEXT = """\
+# comment
+[[baseline]]
+rule = "RAW-CLOCK"
+path = "src/repro/serving/old.py"
+reason = "legacy timer, tracked in ISSUE 9"
+[[baseline]]
+rule = "BARE-LOCK"
+path = "src/repro/storage/old.py"   # trailing comment
+reason = "migration pending"
+"""
+
+
+def test_baseline_round_trip(tmp_path):
+    p = tmp_path / "baseline.toml"
+    p.write_text(BASELINE_TEXT)
+    entries = load_baseline(p)
+    assert [(e.rule, e.path) for e in entries] == \
+        [("RAW-CLOCK", "src/repro/serving/old.py"),
+         ("BARE-LOCK", "src/repro/storage/old.py")]
+    assert entries[0].reason == "legacy timer, tracked in ISSUE 9"
+
+
+def test_baseline_rejects_missing_reason_and_garbage(tmp_path):
+    p = tmp_path / "b.toml"
+    p.write_text('[[baseline]]\nrule = "X"\npath = "y.py"\n')
+    with pytest.raises(BaselineError):
+        load_baseline(p)
+    p.write_text('[[baseline]]\nrule = "X"\npath = "y.py"\nreason = ""\n')
+    with pytest.raises(BaselineError):
+        load_baseline(p)
+    p.write_text("not toml at all\n")
+    with pytest.raises(BaselineError):
+        load_baseline(p)
+
+
+def test_apply_baseline_splits_and_reports_stale(tmp_path):
+    p = tmp_path / "baseline.toml"
+    p.write_text(BASELINE_TEXT)
+    entries = load_baseline(p)
+    findings = run_lint(_tree(tmp_path, {
+        "src/repro/serving/old.py": "import time\nt = time.time()\n",
+        "src/repro/serving/new.py": "import time\nt = time.monotonic()\n",
+    }))
+    remaining, unused = apply_baseline(findings, entries)
+    assert [f.path for f in remaining] == ["src/repro/serving/new.py"]
+    # the BARE-LOCK entry matched nothing: stale, must be deleted
+    assert [(e.rule, e.path) for e in unused] == \
+        [("BARE-LOCK", "src/repro/storage/old.py")]
+
+
+# ==========================================================================
+# the real tree
+# ==========================================================================
+
+def test_real_tree_is_clean_and_baseline_exact():
+    findings = run_lint(REPO_ROOT)
+    baseline = load_baseline(
+        REPO_ROOT / "src/repro/analysis/baseline.toml")
+    assert len(baseline) <= 5, "the baseline grows never — fix, don't add"
+    remaining, unused = apply_baseline(findings, baseline)
+    assert remaining == [], "un-baselined violations:\n" + \
+        "\n".join(f.render() for f in remaining)
+    assert unused == [], "stale baseline entries (delete them): " + \
+        str([(e.rule, e.path) for e in unused])
+
+
+def test_cli_strict_exits_zero():
+    proc = subprocess.run(
+        [sys.executable, str(REPO_ROOT / "scripts/lint_invariants.py"),
+         "--strict"], capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+# ==========================================================================
+# OrderedLock: the lock-order detector
+# ==========================================================================
+
+@pytest.fixture()
+def armed_detector():
+    was = locks.armed()
+    locks.arm(True)
+    locks.reset()
+    yield
+    locks.reset()
+    locks.arm(was)
+    locks.bind_telemetry(None)
+
+
+def test_two_lock_inversion_detected(armed_detector):
+    a, b = locks.OrderedLock("t2.a"), locks.OrderedLock("t2.b")
+    with a:
+        with b:
+            pass
+    with pytest.raises(locks.LockOrderViolation) as exc:
+        with b:
+            with a:
+                pass
+    assert exc.value.cycle[0] == exc.value.cycle[-1] == "t2.a"
+    assert set(exc.value.cycle) == {"t2.a", "t2.b"}
+
+
+def test_three_lock_cycle_detected(armed_detector):
+    a = locks.OrderedLock("t3.a")
+    b = locks.OrderedLock("t3.b")
+    c = locks.OrderedLock("t3.c")
+    with a, b:
+        pass
+    with b, c:
+        pass
+    with pytest.raises(locks.LockOrderViolation) as exc:
+        with c, a:
+            pass
+    assert set(exc.value.cycle) == {"t3.a", "t3.b", "t3.c"}
+
+
+def test_violating_edge_not_committed(armed_detector):
+    """A caught violation must not poison later order-respecting use."""
+    a, b = locks.OrderedLock("tnc.a"), locks.OrderedLock("tnc.b")
+    with a, b:
+        pass
+    with pytest.raises(locks.LockOrderViolation):
+        with b:
+            with a:
+                pass
+    # the b->a edge was rejected, so a->b remains legal
+    with a, b:
+        pass
+
+
+def test_order_respecting_nesting_never_trips(armed_detector):
+    a, b, c = (locks.OrderedLock(f"ok.{n}") for n in "abc")
+    for _ in range(3):
+        with a, b, c:
+            pass
+        with a, c:
+            pass
+        with b, c:
+            pass
+    edges = locks.order_edges()
+    assert "ok.b" in edges["ok.a"] and "ok.c" in edges["ok.b"]
+
+
+def test_self_deadlock_reported_not_hung(armed_detector):
+    lock = locks.OrderedLock("self.lock")
+    with lock:
+        with pytest.raises(locks.LockOrderViolation, match="self-deadlock"):
+            lock.acquire()
+
+
+def test_reentrant_lock_reenters(armed_detector):
+    lock = locks.OrderedLock("re.lock", reentrant=True)
+    with lock:
+        with lock:
+            assert lock._is_owned()
+    assert not lock.locked()
+
+
+def test_disarmed_is_passthrough():
+    was = locks.armed()
+    locks.arm(False)
+    try:
+        locks.reset()
+        a, b = locks.OrderedLock("off.a"), locks.OrderedLock("off.b")
+        with a, b:
+            pass
+        with b, a:        # inversion, but detection is off
+            pass
+        assert locks.order_edges() == {}
+    finally:
+        locks.arm(was)
+        locks.reset()
+
+
+def test_condition_integration(armed_detector):
+    cond = locks.ordered_condition("cond.test")
+    box = []
+
+    def consumer():
+        with cond:
+            while not box:
+                cond.wait(timeout=5.0)
+            box.append("seen")
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.02)
+    with cond:
+        box.append("item")
+        cond.notify()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and box == ["item", "seen"]
+
+
+def test_contention_telemetry(armed_detector):
+    from repro.serving.telemetry import Telemetry
+    registry = Telemetry()
+    locks.bind_telemetry(registry)
+    hot = locks.OrderedLock("hot.lock")
+
+    def holder():
+        with hot:
+            time.sleep(0.05)
+
+    t = threading.Thread(target=holder)
+    t.start()
+    time.sleep(0.01)
+    with hot:
+        pass
+    t.join()
+    snap = registry.snapshot()
+    assert snap["lock.hot.lock.contentions"] == 1
+    assert snap["lock.hot.lock.wait_s"]["count"] == 1
+    assert hot.contentions == 1 and hot.wait_s > 0
+    agg = locks.contention_summary()["hot.lock"]
+    assert agg["contentions"] == 1
+
+
+def test_telemetry_internal_locks_never_bind(armed_detector):
+    """Binding must not recurse: the registry's own locks are exempt."""
+    from repro.serving.telemetry import Telemetry
+    registry = Telemetry()
+    locks.bind_telemetry(registry)
+    counter = registry.counter("some.metric")   # creates telemetry.* locks
+    counter.inc()
+    assert not any(name.startswith("lock.telemetry.")
+                   for name in registry.snapshot())
+
+
+# ==========================================================================
+# property test: planted inversions are always caught, order-respecting
+# schedules never are
+# ==========================================================================
+
+def _run_schedule(lock_objs, schedule):
+    """Acquire each sequence nested-in-order on the calling thread."""
+    for seq in schedule:
+        acquired = []
+        try:
+            for idx in seq:
+                lock_objs[idx].acquire()
+                acquired.append(lock_objs[idx])
+        finally:
+            for obj in reversed(acquired):
+                obj.release()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_lock_order_property(data):
+    n = data.draw(st.integers(min_value=2, max_value=6))
+    n_seqs = data.draw(st.integers(min_value=1, max_value=5))
+    plant = data.draw(st.integers(min_value=0, max_value=1))
+
+    was = locks.armed()
+    locks.arm(True)
+    locks.reset()
+    try:
+        objs = [locks.OrderedLock(f"prop.{i}") for i in range(n)]
+        # order-respecting schedules: every sequence is an ascending
+        # sample of the global order 0 < 1 < ... < n-1
+        schedule = []
+        for _ in range(n_seqs):
+            picks = sorted({
+                data.draw(st.integers(min_value=0, max_value=n - 1))
+                for _ in range(data.draw(
+                    st.integers(min_value=1, max_value=n)))})
+            schedule.append(picks)
+        _run_schedule(objs, schedule)   # must never raise
+
+        if plant:
+            lo = data.draw(st.integers(min_value=0, max_value=n - 2))
+            hi = data.draw(st.integers(min_value=lo + 1, max_value=n - 1))
+            # force the forward edge, then invert it
+            _run_schedule(objs, [[lo, hi]])
+            with pytest.raises(locks.LockOrderViolation):
+                _run_schedule(objs, [[hi, lo]])
+    finally:
+        locks.reset()
+        locks.arm(was)
