@@ -987,6 +987,98 @@ def _reshard_gc_scenario(store, queries, m: int = 8) -> dict:
     }
 
 
+# ------------------------------------------------------------- alias reshard
+def _alias_reshard_scenario(store, queries, m: int = 16) -> dict:
+    """Alias-mode reshard vs a full rebuild at the same target shard
+    count: bytes written to publish, publish latency, and byte-identity
+    before / during / after the alias window and after `compact`."""
+    import time as _time
+
+    from repro.data.corpus import Corpus as _Corpus
+    from repro.index.lifecycle import blobs_of as _blobs
+    from repro.storage import InMemoryBlobStore as _Mem
+
+    class _CountingStore(_Mem):
+        """Tallies every byte written so the two publish paths can be
+        compared without reading anything back."""
+
+        def __init__(self) -> None:
+            super().__init__()
+            self.bytes_written = 0
+
+        def put(self, name: str, data: bytes) -> None:
+            self.bytes_written += len(data)
+            super().put(name, data)
+
+        def put_if_absent(self, name: str, data: bytes) -> bool:
+            ok = super().put_if_absent(name, data)
+            if ok:
+                self.bytes_written += len(data)
+            return ok
+
+    base = ShardedIndex.open(store, "cluster/st")
+    refs = [r for idx in base.shards if idx is not None
+            for r in idx.corpus_refs()]
+    cfg = base.config
+    base.close()
+
+    def _private_cluster():
+        work = _CountingStore()
+        for ref_blob in sorted({r.blob for r in refs}):
+            work.put(ref_blob, _blobs(store).get(ref_blob))
+        docs = _Corpus(store=_blobs(work), refs=refs)
+        cluster = ShardedIndex.build(docs, cfg, work, "cluster/ar",
+                                     n_shards=N_SHARDS)
+        work.bytes_written = 0          # count only the reshard itself
+        return work, cluster
+
+    # alias path: O(manifest) bytes, queries pinned across the window
+    work_a, alias = _private_cluster()
+    session = alias.searcher()
+    before = session.query_batch(queries)
+    t0 = _time.perf_counter()           # lint: allow RAW-CLOCK
+    alias.reshard(m)                    # mode="alias" default
+    alias_publish_s = _time.perf_counter() - t0
+    alias_bytes = work_a.bytes_written
+    during = session.query_batch(queries)   # old session, old generation
+    session.close()
+    after_sess = alias.searcher(fused=True)
+    after = after_sess.query_batch(queries)
+    after_sess.close()
+    n_aliased = len(alias.aliased_shards)
+    for s in list(alias.aliased_shards):
+        alias.compact(min(alias.aliased_shards))
+    compact_sess = alias.searcher()
+    post_compact = compact_sess.query_batch(queries)
+    compact_sess.close()
+    alias.close()
+
+    # rebuild path: same topology change, copy-everything baseline
+    work_r, rebuild = _private_cluster()
+    t0 = _time.perf_counter()           # lint: allow RAW-CLOCK
+    rebuild.reshard(m, mode="rebuild")
+    rebuild_publish_s = _time.perf_counter() - t0
+    rebuild_bytes = work_r.bytes_written
+    reb_sess = rebuild.searcher()
+    reb = reb_sess.query_batch(queries)
+    reb_sess.close()
+    rebuild.close()
+
+    return {
+        "n_shards_before": N_SHARDS, "n_shards_after": m,
+        "n_aliased_shards": n_aliased,
+        "alias_publish_s": alias_publish_s,
+        "rebuild_publish_s": rebuild_publish_s,
+        "alias_bytes_written": alias_bytes,
+        "rebuild_bytes_written": rebuild_bytes,
+        "bytes_ratio": rebuild_bytes / max(1, alias_bytes),
+        "identical_results": _identical(before, during)
+        and _identical(before, after)
+        and _identical(before, post_compact)
+        and _identical(before, reb),
+    }
+
+
 # ------------------------------------------------------------------- plumbing
 def run(smoke: bool = False) -> dict:
     store, _docs, corpus, truth, mono, cluster = _fixture()
@@ -1015,6 +1107,7 @@ def run(smoke: bool = False) -> dict:
         "freshness": _freshness_scenario(store),
         "reshard_gc": _reshard_gc_scenario(store, queries,
                                            m=8 if not smoke else 6),
+        "alias_reshard": _alias_reshard_scenario(store, queries, m=16),
         "smoke": smoke,
     }
     try:
@@ -1091,6 +1184,15 @@ def bench_serving_tier():
     yield row("serving_tier/gc_bytes_reclaimed", rg["gc_bytes_reclaimed"],
               f"deleted={rg['gc_deleted']}"
               f";dry==real={rg['gc_dry_equals_real']}")
+    ar = scenario["alias_reshard"]
+    yield row("serving_tier/alias_reshard_bytes",
+              ar["alias_bytes_written"],
+              f"rebuild={ar['rebuild_bytes_written']}"
+              f";ratio={ar['bytes_ratio']:.0f}x"
+              f";identical={ar['identical_results']}")
+    yield row("serving_tier/alias_reshard_publish",
+              ar["alias_publish_s"] * 1e6,
+              f"rebuild_us={ar['rebuild_publish_s'] * 1e6:.0f}")
 
 
 def main() -> None:

@@ -467,7 +467,8 @@ class Index:
 
 
 def open_many(transport: StorageTransport,
-              prefixes: list[str]) -> list[Index]:
+              prefixes: list[str],
+              generations: list[int | None] | None = None) -> list[Index]:
     """Open several index prefixes with ONE batched manifest fetch.
 
     The serving tier (serving/cluster.py) boots N shards at once; N
@@ -476,8 +477,18 @@ def open_many(transport: StorageTransport,
     per-prefix (control plane, not latency-modelled); the manifest range
     reads ride a single `fetch_batch`. Legacy header-only prefixes fall
     back to the single-open path. Handles never own the transport.
+
+    `generations` pins individual prefixes to a specific generation
+    (None resolves latest as before).  Pinned entries skip the
+    per-prefix LIST entirely — cluster manifests that alias immutable
+    shard blobs (serving/cluster.py) record the generation they alias,
+    so opening them costs zero control-plane rounds.
     """
-    gens = [latest_generation(transport.blobs, p) for p in prefixes]
+    if generations is None:
+        generations = [None] * len(prefixes)
+    gens = [int(pin) if pin is not None
+            else latest_generation(transport.blobs, p)
+            for p, pin in zip(prefixes, generations)]
     where = [i for i, g in enumerate(gens) if g > 0]
     out: list[Index | None] = [None] * len(prefixes)
     if where:

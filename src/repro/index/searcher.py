@@ -223,6 +223,16 @@ class _Fetcher:
 
 
 class Searcher:
+    # Optional served-document predicate (DocRef -> bool). When set, the
+    # unit serves only the refs the predicate admits: candidates are
+    # dropped immediately after round-1 combine — before sampling
+    # budgets, round-2 fetches, and candidate counts — so a filtered
+    # unit is byte-identical to an index that only ever contained the
+    # admitted documents. The serving tier uses this to alias a shard's
+    # slot-subset of another shard's immutable blobs (serving/cluster.py
+    # "aliased generations").
+    ref_filter = None
+
     def __init__(self, source, prefix: str,
                  cache: SuperpostCache | None = None,
                  coalesce_gap: int | None = 4096,
@@ -444,6 +454,23 @@ class Searcher:
 # unioned. With one unit this is exactly the classic engine — request
 # order, RNG draws, and payloads are bit-identical.
 
+def _filter_unit_candidates(unit: Searcher, keys: np.ndarray,
+                            lengths: np.ndarray,
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Drop round-1 candidates the unit's `ref_filter` does not serve.
+
+    Applied before sampling budgets and round-2 fetches so every
+    downstream decision (sample sizes, RNG permutation seeds, fetch
+    legs) sees exactly the candidate set an equivalent physical index
+    would produce — the core of the aliased-shard byte-identity
+    invariant (serving/cluster.py)."""
+    filt = getattr(unit, "ref_filter", None)
+    if filt is None or not len(keys):
+        return keys, lengths
+    mask = np.fromiter((filt(r) for r in unit._refs(keys, lengths)),
+                       dtype=bool, count=len(keys))
+    return keys[mask], lengths[mask]
+
 def lookup_units(units: list[Searcher], queries: list[Query | str],
                  fetcher: _Fetcher, hedge: bool = False,
                  ) -> tuple[list[list[dict[str, tuple[np.ndarray, np.ndarray]]]],
@@ -545,6 +572,10 @@ def execute_jobs(units: list[Searcher], jobs: list[_Job], fetcher: _Fetcher,
         batch_stats.lookup.add(lstats.lookup)
     combined = [_combine_jobs(jobs, outs, impl, unit)
                 for unit, outs in zip(units, outs_per_unit)]
+    for u, unit in enumerate(units):
+        if getattr(unit, "ref_filter", None) is not None:
+            combined[u] = [_filter_unit_candidates(unit, k, le)
+                           for k, le in combined[u]]
 
     results: list[QueryResult | None] = [None] * len(jobs)
     stats_of = [QueryStats(lookup=replace(lstats.lookup), rounds=1)

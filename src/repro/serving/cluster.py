@@ -41,6 +41,21 @@ cluster generation while live readers keep serving the old one until
 `refresh()` swaps — the cutover is a manifest CAS, never a blob
 mutation. Superseded generations are reclaimed by
 `collect_cluster_garbage` (latest-K reachability + grace window).
+
+Because shard blobs are immutable, membership changes default to
+**aliased generations** (docs/serving_cluster.md "Aliased
+generations"): instead of rebuilding moved documents, the new
+manifest's entries *alias* existing physical shard blob sets with a
+served-slot filter — `reshard`/`split`/`merge_shards` then write
+O(manifest) bytes, `replicate` scales a hot shard out for the cost of
+a manifest, and a background `compact(shard_i)` lazily materializes a
+real per-shard blob set and CAS-publishes the de-aliased generation.
+Readers serve an aliased shard by scatter-gathering its source units
+in the same batched rounds and dropping round-1 candidates outside the
+served slots before any budget decision, so results stay
+byte-identical to the unsharded index throughout the alias window.
+`cluster_reachable_blobs` follows alias edges, so a source blob set
+referenced by any kept generation survives the sweep.
 """
 
 from __future__ import annotations
@@ -68,7 +83,8 @@ from ..index.planner import (DocContent, combine_cluster_planned,
                              physical_plan, plan_batch, shard_quotas)
 from ..index.query import Query, Regex
 from ..index.searcher import (BatchStats, QueryResult, QueryStats, Searcher,
-                              _merge_results, lookup_units, topk_order)
+                              _filter_unit_candidates, _merge_results,
+                              lookup_units, topk_order)
 from ..storage.blobstore import RangeRequest
 from ..storage.cache import SuperpostCache
 from ..storage.simcloud import FetchStats
@@ -153,10 +169,19 @@ def decode_cluster_manifest(data: bytes) -> dict:
 def _normalize_cluster_manifest(manifest: dict) -> dict:
     """Fill in slot routing for pre-resharding manifests: a cluster that
     never resharded has the identity map (slot i → shard i, one slot per
-    shard), which is exactly what `build` used to imply."""
+    shard), which is exactly what `build` used to imply. Alias entries
+    (`entry["aliases"]`, absent on physical shards) are normalized to
+    int generations and slot lists so downstream code never re-coerces
+    msgpack output."""
     manifest.setdefault("n_slots", int(manifest["n_shards"]))
     for i, entry in enumerate(manifest["shards"]):
         entry.setdefault("slots", [i])
+        if entry.get("aliases"):
+            entry["aliases"] = [
+                {"prefix": a["prefix"],
+                 "generation": int(a["generation"]),
+                 "slots": [int(x) for x in a["slots"]]}
+                for a in entry["aliases"]]
     return manifest
 
 
@@ -175,15 +200,51 @@ def _shard_of_slot(manifest: dict) -> list[int]:
     return out
 
 
-def _open_member_shards(transport: StorageTransport,
-                        manifest: dict) -> list[Index | None]:
-    """Open every member shard with ONE batched manifest fetch
-    (`index.lifecycle.open_many`), keeping empty slots as None."""
-    live = [s["prefix"] for s in manifest["shards"]
-            if s["prefix"] is not None]
-    opened = iter(open_many(transport, live))
-    return [None if s["prefix"] is None else next(opened)
-            for s in manifest["shards"]]
+def _slot_member(slots: frozenset, n_slots: int):
+    """Served-slot predicate over storage identity — the `ref_filter`
+    an aliased unit gets so it serves exactly its entry's slot subset
+    of the source blobs (see Searcher.ref_filter)."""
+    def served(ref: DocRef) -> bool:
+        return slot_of_ref(ref, n_slots) in slots
+    return served
+
+
+def _open_member_shards(transport: StorageTransport, manifest: dict,
+                        ) -> tuple[list[Index | None],
+                                   list[list[tuple[Index, list[int]]]]]:
+    """Open every member shard AND every distinct alias source with ONE
+    batched manifest fetch (`index.lifecycle.open_many`), keeping empty
+    slots as None.
+
+    Returns `(shards, alias_sources)`: `shards[i]` is the shard's own
+    `Index` handle (resolved at its latest generation — shard commits
+    stay shard-local), `alias_sources[i]` the shard's aliased source
+    handles as `(Index pinned at the manifest-recorded generation,
+    served slot list)` pairs. A source prefix aliased by several shards
+    is opened once and shared."""
+    own = [s["prefix"] for s in manifest["shards"]
+           if s["prefix"] is not None]
+    alias_at: dict[tuple[str, int], int] = {}
+    alias_keys: list[tuple[str, int]] = []
+    for entry in manifest["shards"]:
+        for a in entry.get("aliases") or []:
+            k = (a["prefix"], int(a["generation"]))
+            if k not in alias_at:
+                alias_at[k] = len(own) + len(alias_keys)
+                alias_keys.append(k)
+    opened = open_many(
+        transport,
+        own + [p for p, _g in alias_keys],
+        generations=[None] * len(own) + [g for _p, g in alias_keys])
+    it = iter(opened[:len(own)])
+    shards = [None if s["prefix"] is None else next(it)
+              for s in manifest["shards"]]
+    alias_sources = [
+        [(opened[alias_at[(a["prefix"], int(a["generation"]))]],
+          [int(x) for x in a["slots"]])
+         for a in entry.get("aliases") or []]
+        for entry in manifest["shards"]]
+    return shards, alias_sources
 
 
 # ===================================================================== handle
@@ -199,11 +260,18 @@ class ShardedIndex:
 
     def __init__(self, transport: StorageTransport, prefix: str,
                  manifest: dict, shards: list[Index | None],
-                 owns_transport: bool = False) -> None:
+                 owns_transport: bool = False,
+                 alias_sources: list[list[tuple[Index, list[int]]]]
+                 | None = None) -> None:
         self.transport = transport
         self.prefix = prefix
         self._manifest = manifest
         self.shards = shards                 # None for empty shard slots
+        # per shard: aliased source handles as (Index pinned at the
+        # manifest-recorded generation, served slot list) — empty for
+        # physical shards (see _open_member_shards)
+        self.alias_sources = alias_sources \
+            if alias_sources is not None else [[] for _ in shards]
         self._owns_transport = owns_transport
         self._bus = None
 
@@ -240,6 +308,13 @@ class ShardedIndex:
     def config(self) -> BuilderConfig | None:
         cfg = self._manifest.get("config")
         return BuilderConfig(**cfg) if cfg is not None else None
+
+    @property
+    def aliased_shards(self) -> list[int]:
+        """Shards currently serving through alias entries — the
+        `compact()` worklist a background maintenance loop drains."""
+        return [s for s, e in enumerate(self._manifest["shards"])
+                if e.get("aliases")]
 
     @property
     def reader_generation(self) -> tuple:
@@ -371,9 +446,9 @@ class ShardedIndex:
         data = transport.blobs.get(
             _cluster_manifest_name(prefix, generation))
         manifest = decode_cluster_manifest(data)
-        return cls(transport, prefix, manifest,
-                   _open_member_shards(transport, manifest),
-                   owns_transport=owns)
+        shards, alias_sources = _open_member_shards(transport, manifest)
+        return cls(transport, prefix, manifest, shards,
+                   owns_transport=owns, alias_sources=alias_sources)
 
     def refresh(self) -> "ShardedIndex":
         """Re-resolve cluster membership AND every shard's generation
@@ -384,8 +459,8 @@ class ShardedIndex:
             data = self.transport.blobs.get(
                 _cluster_manifest_name(self.prefix, generation))
             self._manifest = decode_cluster_manifest(data)
-            self.shards = _open_member_shards(self.transport,
-                                              self._manifest)
+            self.shards, self.alias_sources = _open_member_shards(
+                self.transport, self._manifest)
             self._attach_shard_buses()
         else:
             # usually 0-1 shards have moved; Index.refresh only fetches
@@ -424,20 +499,56 @@ class ShardedIndex:
                 "membership changes need it to rebuild shards")
         return cfg
 
+    def shard_corpus_refs(self, s: int) -> list[DocRef]:
+        """Every document ref shard `s` serves in this generation:
+        aliased source refs filtered to the served slots (alias order —
+        those documents predate the alias), then the shard's own
+        overlay refs. This IS ingest order, so a `compact()` built from
+        it reproduces what a rebuild would have."""
+        refs: list[DocRef] = []
+        m = self.n_slots
+        for src, slots in self.alias_sources[s]:
+            sset = set(int(x) for x in slots)
+            refs += [r for r in src.corpus_refs()
+                     if slot_of_ref(r, m) in sset]
+        idx = self.shards[s]
+        if idx is not None:
+            refs += idx.corpus_refs()
+        return refs
+
     def _gathered_refs(self, shard_ids: list[int]) -> list[DocRef]:
-        """Manifest-recorded corpus refs of the given shards, in shard
-        then ingest order — the snapshot membership changes rebuild."""
+        """Manifest-recorded corpus refs of the given shards (alias
+        sources included), in shard then ingest order — the snapshot
+        membership changes rebuild."""
         refs: list[DocRef] = []
         for s in shard_ids:
-            idx = self.shards[s]
-            if idx is not None:
-                refs += idx.corpus_refs()
+            refs += self.shard_corpus_refs(s)
         return refs
 
     def _snapshot_sources(self, shard_ids: list[int],
                           ) -> list[tuple[str, int]]:
-        return [(self.shards[s].prefix, self.shards[s].generation)
-                for s in shard_ids if self.shards[s] is not None]
+        """Source prefixes whose quiescence the membership-change CAS
+        protocol rechecks, at their generation as of NOW. Own shard
+        handles contribute their handle generation; alias sources
+        contribute `latest_generation` — their manifest pin may lawfully
+        trail latest (a past raced commit bumps the source but its
+        documents were already re-applied through routing), and only
+        commits landing DURING this change need detecting."""
+        blobs = self.transport.blobs
+        seen: set[str] = set()
+        out: list[tuple[str, int]] = []
+        for s in shard_ids:
+            idx = self.shards[s]
+            if idx is not None and idx.prefix not in seen:
+                seen.add(idx.prefix)
+                out.append((idx.prefix, idx.generation))
+            for src, _slots in self.alias_sources[s]:
+                if src.prefix in seen:
+                    continue
+                seen.add(src.prefix)
+                out.append((src.prefix, latest_generation(blobs,
+                                                          src.prefix)))
+        return out
 
     def _stage_prefix(self, generation: int) -> str:
         """Fresh blob namespace for one membership-change attempt. The
@@ -533,27 +644,119 @@ class ShardedIndex:
                                       generation=generation)
         return manifest
 
-    def reshard(self, n_shards: int,
-                n_slots: int | None = None) -> "ShardedIndex":
+    # -- aliasing (zero-rebuild membership changes) ------------------------
+    def _flat_sources(self, shard_ids: list[int],
+                      ) -> list[tuple[str, int, list[DocRef]]]:
+        """Flatten the given shards into their physical blob sets:
+        `(prefix, pinned generation, manifest-recorded refs)` per
+        distinct source — every alias source plus every own prefix.
+        Aliases therefore always point one hop at real blobs;
+        re-aliasing an aliased shard never builds chains, and because
+        each new entry's slot filter is applied under the CURRENT
+        modulus against its FULL slot set, the intermediate filters
+        drop out (the old entries partition each source's documents, so
+        the union over old shards of `docs ∩ new-slots` is exactly
+        `source-docs ∩ new-slots`)."""
+        pinned: dict[str, int] = {}
+        out: list[tuple[str, int, list[DocRef]]] = []
+        for s in shard_ids:
+            for src, _slots in self.alias_sources[s]:
+                if src.prefix in pinned:
+                    if pinned[src.prefix] != src.generation:
+                        raise ClusterConflict(
+                            f"shards alias different generations of "
+                            f"{src.prefix!r}; compact() one of them "
+                            "before re-aliasing")
+                    continue
+                pinned[src.prefix] = src.generation
+                out.append((src.prefix, src.generation,
+                            src.corpus_refs()))
+            idx = self.shards[s]
+            if idx is not None and idx.prefix not in pinned:
+                pinned[idx.prefix] = idx.generation
+                out.append((idx.prefix, idx.generation,
+                            idx.corpus_refs()))
+        return out
+
+    def _alias_entries(self, sources: list[tuple[str, int, list[DocRef]]],
+                       slots_of: list[list[int]],
+                       n_slots: int) -> list[dict]:
+        """Manifest entries that serve `slots_of[j]` purely by aliasing
+        `sources`, with per-source document counts taken by hashing each
+        source's refs exactly once (O(total refs), no blob reads).
+        Sources contributing zero documents to an entry are dropped from
+        its alias list."""
+        slot_to_part = [-1] * n_slots
+        for j, slots in enumerate(slots_of):
+            for slot in slots:
+                slot_to_part[int(slot)] = j
+        counts = [[0] * len(slots_of) for _ in sources]
+        for k, (_p, _g, refs) in enumerate(sources):
+            for r in refs:
+                j = slot_to_part[slot_of_ref(r, n_slots)]
+                if j >= 0:
+                    counts[k][j] += 1
+        entries: list[dict] = []
+        for j, slots in enumerate(slots_of):
+            aliases = [{"prefix": p, "generation": g,
+                        "slots": [int(x) for x in slots]}
+                       for k, (p, g, _refs) in enumerate(sources)
+                       if counts[k][j]]
+            entry = {"prefix": None, "generation": 0,
+                     "n_docs": sum(c[j] for c in counts),
+                     "slots": [int(x) for x in slots]}
+            if aliases:
+                entry["aliases"] = aliases
+            entries.append(entry)
+        return entries
+
+    def _publish_alias_generation(self, entries: list[dict],
+                                  n_slots: int,
+                                  sources: list[tuple[str, int]],
+                                  snapshot_refs: list[DocRef],
+                                  ) -> "ShardedIndex":
+        """Shared tail of the alias-mode membership changes: CAS-publish
+        the aliased manifest (nothing is staged — the op writes only the
+        manifest), reopen members from it, and close the recheck→CAS
+        window exactly like the rebuild paths do."""
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)   # empty; cleanup no-ops
+        manifest = self._publish_membership(generation, entries, n_slots,
+                                            stage, sources)
+        self._manifest = manifest
+        self.shards, self.alias_sources = _open_member_shards(
+            self.transport, manifest)
+        self._attach_shard_buses()
+        self._reapply_raced_commits(sources, snapshot_refs)
+        return self
+
+    def reshard(self, n_shards: int, n_slots: int | None = None,
+                mode: str = "alias") -> "ShardedIndex":
         """Repartition the whole corpus into a new `n_shards`-shard set
         and CAS-publish it as the next cluster generation.
 
-        The corpus is re-read from the manifest-recorded document refs of
-        every live shard (no side channel), rebuilt under a fresh staging
-        namespace, and published atomically — live readers keep serving
-        the old generation's blobs until their `refresh()` swaps, and
+        `mode="alias"` (the default) writes **O(manifest) bytes**: the
+        new entries alias the existing immutable shard blob sets with a
+        served-slot filter instead of rebuilding moved documents —
+        readers post-filter round-1 candidates to the served slots, so
         results stay byte-identical to the unsharded index before,
-        during, and after the cutover (shards partition documents and
-        each shard is exact). Old-generation shards become garbage once
-        they age out of the latest-K window (`collect_garbage`). Raises
-        `ClusterConflict` (staged blobs cleaned up) when a shard commit
-        or another publisher races the change.
+        during, and after the cutover; `compact(shard_i)` later
+        materializes real per-shard blobs in the background.
+        `mode="rebuild"` re-reads the corpus from the manifest-recorded
+        document refs and rebuilds every shard under a fresh staging
+        namespace (the pre-aliasing behavior — what `compact` amortizes
+        away). Either way live readers keep serving the old generation
+        until their `refresh()` swaps, and `ClusterConflict` (staged
+        blobs cleaned up) reports a raced shard commit or publisher.
 
         `n_slots` defaults to keeping the cluster's current modulus
         (grown to `n_shards` if needed) so an over-provisioned cluster
         stays splittable across reshards; pass it explicitly to change
         the routing resolution.
         """
+        if mode not in ("alias", "rebuild"):
+            raise ValueError(f"unknown reshard mode {mode!r}: use "
+                             "'alias' or 'rebuild'")
         if n_shards < 1:
             raise ValueError("need at least one shard")
         n_slots = max(n_shards, self.n_slots) if n_slots is None \
@@ -561,14 +764,20 @@ class ShardedIndex:
         if n_slots < n_shards:
             raise ValueError(
                 f"n_slots={n_slots} must be >= n_shards={n_shards}")
-        cfg = self._require_config()
         all_ids = list(range(self.n_shards))
         sources = self._snapshot_sources(all_ids)
-        generation = self.generation + 1
-        stage = self._stage_prefix(generation)
         slots_of = [list(range(s * n_slots // n_shards,
                                (s + 1) * n_slots // n_shards))
                     for s in range(n_shards)]
+        if mode == "alias":
+            flat = self._flat_sources(all_ids)
+            entries = self._alias_entries(flat, slots_of, n_slots)
+            return self._publish_alias_generation(
+                entries, n_slots, sources,
+                [r for _p, _g, refs in flat for r in refs])
+        cfg = self._require_config()
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)
         shard_of_slot = [s for s in range(n_shards) for _ in slots_of[s]]
         corpus = Corpus(store=self.transport.blobs,
                         refs=self._gathered_refs(all_ids))
@@ -579,18 +788,25 @@ class ShardedIndex:
                                             stage, sources)
         self._manifest = manifest
         self.shards = shards
+        self.alias_sources = [[] for _ in shards]
         self._attach_shard_buses()
         self._reapply_raced_commits(sources, corpus.refs)
         return self
 
-    def split(self, shard_i: int) -> "ShardedIndex":
+    def split(self, shard_i: int, mode: str = "alias") -> "ShardedIndex":
         """Split one physical shard's hash slots across two new shards
-        (targeted reshard: only this shard's documents are rebuilt).
+        (targeted reshard — only this shard's documents move).
 
-        Needs the shard to serve >= 2 slots — build the cluster with
-        `n_slots > n_shards` to keep splits available; a single-slot
-        shard can only grow via a full `reshard`.
+        `mode="alias"` (the default) publishes two entries aliasing the
+        shard's existing blob set with half the slots each — no blobs
+        are written; `mode="rebuild"` rebuilds the two halves. Needs the
+        shard to serve >= 2 slots — build the cluster with `n_slots >
+        n_shards` to keep splits available; a single-slot shard can only
+        grow via a full `reshard`.
         """
+        if mode not in ("alias", "rebuild"):
+            raise ValueError(f"unknown split mode {mode!r}: use "
+                             "'alias' or 'rebuild'")
         entry = self._manifest["shards"][shard_i]
         slots = [int(x) for x in entry["slots"]]
         if len(slots) < 2:
@@ -598,11 +814,20 @@ class ShardedIndex:
                 f"shard {shard_i} of {self.prefix!r} serves a single "
                 "hash slot and cannot be split; build with n_slots > "
                 "n_shards or use reshard()")
-        cfg = self._require_config()
         sources = self._snapshot_sources([shard_i])
+        halves = [slots[:len(slots) // 2], slots[len(slots) // 2:]]
+        if mode == "alias":
+            flat = self._flat_sources([shard_i])
+            new_entries = self._alias_entries(flat, halves, self.n_slots)
+            entries = [self._carried_entry(s)
+                       for s in range((self.n_shards))]
+            entries[shard_i:shard_i + 1] = new_entries
+            return self._publish_alias_generation(
+                entries, self.n_slots, sources,
+                [r for _p, _g, refs in flat for r in refs])
+        cfg = self._require_config()
         generation = self.generation + 1
         stage = self._stage_prefix(generation)
-        halves = [slots[:len(slots) // 2], slots[len(slots) // 2:]]
         refs = self._gathered_refs([shard_i])
         first = set(halves[0])
         part_refs: list[list[DocRef]] = [[], []]
@@ -617,43 +842,128 @@ class ShardedIndex:
         entries[shard_i:shard_i + 1] = new_entries
         shards = list(self.shards)
         shards[shard_i:shard_i + 1] = new_shards
+        alias_sources = list(self.alias_sources)
+        alias_sources[shard_i:shard_i + 1] = [[], []]
         manifest = self._publish_membership(generation, entries,
                                             self.n_slots, stage, sources)
         self._manifest = manifest
         self.shards = shards
+        self.alias_sources = alias_sources
         self._attach_shard_buses()
         self._reapply_raced_commits(sources, refs)
         return self
 
-    def merge_shards(self, a: int, b: int) -> "ShardedIndex":
+    def merge_shards(self, a: int, b: int,
+                     mode: str = "alias") -> "ShardedIndex":
         """Merge two physical shards into one serving both slot sets
-        (targeted reshard: only these shards' documents are rebuilt).
-        The merged shard takes the lower position; the slot count — and
-        therefore document routing — is unchanged."""
+        (targeted reshard — only these shards' documents move). The
+        merged shard takes the lower position; the slot count — and
+        therefore document routing — is unchanged. `mode="alias"` (the
+        default) publishes one entry aliasing both existing blob sets —
+        no blobs are written; `mode="rebuild"` rebuilds the union."""
+        if mode not in ("alias", "rebuild"):
+            raise ValueError(f"unknown merge mode {mode!r}: use "
+                             "'alias' or 'rebuild'")
         if a == b:
             raise ValueError("cannot merge a shard with itself")
         a, b = sorted((a, b))
         ea = self._manifest["shards"][a]
         eb = self._manifest["shards"][b]
-        cfg = self._require_config()
         sources = self._snapshot_sources([a, b])
-        generation = self.generation + 1
-        stage = self._stage_prefix(generation)
         slots = sorted(int(x) for x in
                        list(ea["slots"]) + list(eb["slots"]))
+        if mode == "alias":
+            flat = self._flat_sources([a, b])
+            merged = self._alias_entries(flat, [slots], self.n_slots)
+            entries = [self._carried_entry(s)
+                       for s in range(self.n_shards)]
+            entries[a:a + 1] = merged
+            del entries[b]
+            return self._publish_alias_generation(
+                entries, self.n_slots, sources,
+                [r for _p, _g, refs in flat for r in refs])
+        cfg = self._require_config()
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)
         refs = self._gathered_refs([a, b])
         part = Corpus(store=self.transport.blobs, refs=refs)
         new_shards, new_entries = self._build_parts([part], [slots],
                                                     stage, cfg)
         entries = [self._carried_entry(s) for s in range(self.n_shards)]
         shards = list(self.shards)
+        alias_sources = list(self.alias_sources)
         entries[a:a + 1] = new_entries
         shards[a:a + 1] = new_shards
-        del entries[b], shards[b]
+        alias_sources[a:a + 1] = [[]]
+        del entries[b], shards[b], alias_sources[b]
         manifest = self._publish_membership(generation, entries,
                                             self.n_slots, stage, sources)
         self._manifest = manifest
         self.shards = shards
+        self.alias_sources = alias_sources
+        self._attach_shard_buses()
+        self._reapply_raced_commits(sources, refs)
+        return self
+
+    def replicate(self, shard_i: int, n_replicas: int) -> "ShardedIndex":
+        """Publish the next generation with shard `shard_i` marked to
+        serve through `n_replicas` replicas — instant hot-shard
+        scale-out: the manifest records N aliases of ONE immutable blob
+        set, so the change writes O(manifest) bytes and `searcher()`
+        simply vends that many replica rows (each `replica_sources`
+        entry is multiplied). `n_replicas=1` clears the marker. The
+        marker is reset by membership changes that rebuild or re-alias
+        the shard (`reshard`/`split`/`merge_shards`/`compact` keeps it,
+        a shard absorbed into another entry loses it)."""
+        if not 1 <= int(n_replicas) <= 64:
+            raise ValueError(
+                f"n_replicas={n_replicas} out of range [1, 64]")
+        if not 0 <= shard_i < self.n_shards:
+            raise IndexError(f"shard {shard_i} out of range")
+        entries = [self._carried_entry(s) for s in range(self.n_shards)]
+        if int(n_replicas) == 1:
+            entries[shard_i].pop("replicas", None)
+        else:
+            entries[shard_i]["replicas"] = int(n_replicas)
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)   # empty; cleanup no-ops
+        manifest = self._publish_membership(generation, entries,
+                                            self.n_slots, stage,
+                                            sources=[])
+        self._manifest = manifest                # membership unchanged:
+        self._attach_shard_buses()               # handles stay valid
+        return self
+
+    def compact(self, shard_i: int) -> "ShardedIndex":
+        """Materialize an aliased shard into a real per-shard blob set
+        and CAS-publish the de-aliased generation — the background half
+        of zero-rebuild resharding. A no-op for physical shards. The
+        aliased generation keeps serving until the CAS lands; a crash
+        mid-build leaves only staged blobs, which are deleted on the
+        typed failure paths and swept by GC's grace window otherwise.
+        Once every manifest referencing the alias ages out of the
+        latest-K window, the source blobs the alias pinned become
+        collectible again."""
+        entry = self._manifest["shards"][shard_i]
+        if not entry.get("aliases"):
+            return self
+        cfg = self._require_config()
+        sources = self._snapshot_sources([shard_i])
+        refs = self.shard_corpus_refs(shard_i)
+        generation = self.generation + 1
+        stage = self._stage_prefix(generation)
+        part = Corpus(store=self.transport.blobs, refs=refs)
+        _shards, new_entries = self._build_parts(
+            [part], [[int(x) for x in entry["slots"]]], stage, cfg)
+        if "replicas" in entry:
+            new_entries[0]["replicas"] = entry["replicas"]
+        entries = [self._carried_entry(s) for s in range(self.n_shards)]
+        entries[shard_i] = new_entries[0]
+        manifest = self._publish_membership(generation, entries,
+                                            self.n_slots, stage, sources)
+        self._manifest = manifest
+        self.shards, self.alias_sources = _open_member_shards(
+            self.transport, manifest)
         self._attach_shard_buses()
         self._reapply_raced_commits(sources, refs)
         return self
@@ -663,7 +973,10 @@ class ShardedIndex:
         each live target shard takes a shard-local delta commit (no
         cluster republish needed); documents routed to an empty slot
         materialize its shard via a follow-up cluster generation (same
-        CAS protocol as the other membership changes).
+        CAS protocol as the other membership changes). A purely aliased
+        shard (no overlay index yet) counts as empty here: its fresh
+        documents materialize an overlay that serves ALONGSIDE the
+        aliases, which stay in the entry until `compact()`.
 
         Safe to retry after a `ClusterConflict`: empty slots are
         materialized FIRST (nothing is committed if that CAS loses),
@@ -680,6 +993,25 @@ class ShardedIndex:
         parts = self.partition(corpus)
         empties = [s for s, part in enumerate(parts)
                    if part.refs and self.shards[s] is None]
+        build_parts: dict[int, Corpus] = {}
+        for s in list(empties):
+            part = parts[s]
+            if self.alias_sources[s]:
+                # an aliased shard with no overlay yet: only genuinely
+                # new documents get one — re-appending refs the aliases
+                # already serve is a no-op, matching the delta-commit
+                # dedupe below
+                have = set(self.shard_corpus_refs(s))
+                fresh = [i for i, r in enumerate(part.refs)
+                         if r not in have]
+                if not fresh:
+                    empties.remove(s)
+                    continue
+                part = Corpus(store=part.store,
+                              refs=[part.refs[i] for i in fresh],
+                              texts=[part.texts[i] for i in fresh]
+                              if part.texts is not None else None)
+            build_parts[s] = part
         if empties:
             cfg = self._require_config()
             generation = self.generation + 1
@@ -687,11 +1019,20 @@ class ShardedIndex:
             slots_of = [list(self._manifest["shards"][s]["slots"])
                         for s in empties]
             new_shards, new_entries = self._build_parts(
-                [parts[s] for s in empties], slots_of, stage, cfg)
+                [build_parts[s] for s in empties], slots_of, stage, cfg)
             entries = [self._carried_entry(s)
                        for s in range(self.n_shards)]
             shards = list(self.shards)
             for s, sh, e in zip(empties, new_shards, new_entries):
+                old = self._manifest["shards"][s]
+                if old.get("aliases"):
+                    # the overlay joins the aliases rather than
+                    # replacing them: the entry keeps serving the
+                    # aliased documents plus the fresh ones
+                    e["aliases"] = old["aliases"]
+                    e["n_docs"] = int(old["n_docs"]) + int(e["n_docs"])
+                if "replicas" in old:
+                    e["replicas"] = old["replicas"]
                 entries[s], shards[s] = e, sh
             manifest = self._publish_membership(
                 generation, entries, self.n_slots, stage, sources=[])
@@ -699,11 +1040,11 @@ class ShardedIndex:
             self.shards = shards
             self._attach_shard_buses()
         for s, part in enumerate(parts):
-            if not part.refs or s in empties:
+            if not part.refs or s in empties or self.shards[s] is None:
                 continue
             idx = self.shards[s]
             idx.refresh()                # follow foreign commits first
-            have = set(idx.corpus_refs())
+            have = set(self.shard_corpus_refs(s))
             fresh = [i for i, r in enumerate(part.refs) if r not in have]
             if not fresh:
                 continue                 # retry after a partial append
@@ -787,68 +1128,104 @@ class ShardedIndex:
         `serving.telemetry.Telemetry` the session exports per-replica
         in-flight gauges and scatter-round observations into.
         """
-        live = [(s, idx) for s, idx in enumerate(self.shards)
-                if idx is not None]
+        entries = self._manifest["shards"]
+        live: list[tuple[int, Index | None, list, int]] = []
+        for s, idx in enumerate(self.shards):
+            aliases = self.alias_sources[s]
+            if idx is None and not aliases:
+                continue
+            n_rep = max(1, int(entries[s].get("replicas") or 1))
+            live.append((s, idx, aliases, n_rep))
         if not live:
             raise ValueError(
                 f"cluster {self.prefix!r} has no non-empty shards to "
                 "serve (built from an empty corpus?)")
         owned: list[StorageTransport] = []
         transports: list[list[StorageTransport]] = []
-        for s, _idx in live:
+        for s, _idx, _aliases, n_rep in live:
             row: list[StorageTransport] = []
             for src in (replica_sources or [self.transport]):
                 # a factory mints a fresh source per shard, and a bare
                 # store becomes a fresh transport in as_transport —
                 # either way the session caused the transport to exist,
                 # so the session must close it (worker pools); a
-                # transport instance the caller handed in stays theirs
-                made = src(s) if callable(src) else src
-                transport = as_transport(made)
-                if callable(src) or not isinstance(made,
-                                                   StorageTransport):
-                    owned.append(transport)
-                row.append(transport)
+                # transport instance the caller handed in stays theirs.
+                # a `replicate(s, n)` marker multiplies each source into
+                # n replica rows over the same immutable blob set
+                for _rep in range(n_rep):
+                    made = src(s) if callable(src) else src
+                    transport = as_transport(made)
+                    if callable(src) or not isinstance(made,
+                                                       StorageTransport):
+                        owned.append(transport)
+                    row.append(transport)
             transports.append(row)
 
-        # ONE batched header round per distinct transport: every unit
-        # header (base + delta segments) of every shard a transport
-        # serves rides one fetch_batch — booting a 16-shard cluster
-        # costs one parallel round, never a per-shard chain (the same
-        # boot discipline Index.searcher applies within one index)
-        unit_prefixes = [[idx.base_prefix] + idx.segment_prefixes
-                         for _s, idx in live]
-        groups: dict[int, tuple] = {}
-        for si, trow in enumerate(transports):
-            for ri, t in enumerate(trow):
-                _t, reqs, slots = groups.setdefault(id(t), (t, [], []))
-                for uj, p in enumerate(unit_prefixes[si]):
-                    reqs.append(RangeRequest(f"{p}/header.airp"))
-                    slots.append((si, ri, uj))
-        headers: dict[tuple[int, int, int], bytes] = {}
-        boot_stats = FetchStats()
-        for t, reqs, slots in groups.values():
-            payloads, fstats = t.fetch_batch(reqs)
-            boot_stats.add(fstats)
-            for slot, h in zip(slots, payloads):
-                headers[slot] = h
+        # unit specs per live shard: aliased source units first (those
+        # documents predate the alias), then the shard's own units —
+        # each as (prefix, pinned generation, served-slot set | None)
+        unit_specs: list[list[tuple[str, int, frozenset | None]]] = []
+        for s, idx, aliases, _n in live:
+            specs: list[tuple[str, int, frozenset | None]] = []
+            for src, slots in aliases:
+                sset = frozenset(int(x) for x in slots)
+                specs += [(p, src.generation, sset)
+                          for p in [src.base_prefix]
+                          + src.segment_prefixes]
+            if idx is not None:
+                specs += [(p, idx.generation, None)
+                          for p in [idx.base_prefix]
+                          + idx.segment_prefixes]
+            unit_specs.append(specs)
 
+        # ONE batched header round per distinct transport: every unit
+        # header (alias sources + base + delta segments) of every shard
+        # a transport serves rides one fetch_batch — booting a 16-shard
+        # cluster costs one parallel round, never a per-shard chain
+        # (the same boot discipline Index.searcher applies within one
+        # index). Deduped per (transport, prefix): replicas of one blob
+        # set and shards aliasing one source share the header bytes.
+        groups: dict[int, tuple[StorageTransport, dict[str, None]]] = {}
+        for si, trow in enumerate(transports):
+            for t in trow:
+                _t, want = groups.setdefault(id(t), (t, {}))
+                for p, _g, _f in unit_specs[si]:
+                    want.setdefault(p)
+        headers: dict[tuple[int, str], bytes] = {}
+        boot_stats = FetchStats()
+        for t, want in groups.values():
+            prefixes = list(want)
+            payloads, fstats = t.fetch_batch(
+                [RangeRequest(f"{p}/header.airp") for p in prefixes])
+            boot_stats.add(fstats)
+            for p, h in zip(prefixes, payloads):
+                headers[(id(t), p)] = h
+
+        n_slots = self.n_slots
         shard_replicas: list[list[_Replica]] = []
-        for si, (_s, idx) in enumerate(live):
+        for si, (_s, idx, _aliases, _n) in enumerate(live):
             replicas = []
             # the shard handle's memory-resident segments (index/nrt.py)
             # serve every replica: their round-1 reads resolve from
             # process memory, so no replica transport mediates them —
             # documents a shard writer add()ed are cluster-searchable
             # before the shard commit publishes their blobs
-            memory = idx.memory_segments
-            for ri, t in enumerate(transports[si]):
-                units = [Searcher(t, p, cache=cache,
-                                  coalesce_gap=coalesce_gap,
-                                  generation=idx.generation,
-                                  header=headers[(si, ri, uj)])
-                         for uj, p in enumerate(unit_prefixes[si])]
-                units += memory
+            memory = idx.memory_segments if idx is not None else []
+            for t in transports[si]:
+                units = []
+                for p, gen, sset in unit_specs[si]:
+                    u = Searcher(t, p, cache=cache,
+                                 coalesce_gap=coalesce_gap,
+                                 generation=gen,
+                                 header=headers[(id(t), p)])
+                    if sset is not None:
+                        # aliased unit: serve only the entry's slots of
+                        # the source blobs — candidates outside them are
+                        # dropped before any budget decision, so the
+                        # shard answers exactly like a physical one
+                        u.ref_filter = _slot_member(sset, n_slots)
+                    units.append(u)
+                units = units + memory
                 reader = units[0] if len(units) == 1 else \
                     MultiSegmentSearcher(units, units[0]._fetcher,
                                          init_stats=FetchStats())
@@ -1291,6 +1668,12 @@ class ClusterSearcher:
                 R_gs: list[int] = []
                 for g, (si, unit) in enumerate(groups):
                     keys, lengths = combined[g][j]
+                    # aliased units serve a slot subset of their source
+                    # blobs: drop out-of-slot candidates BEFORE the
+                    # permutation and the quota computation, so budgets
+                    # and tie-breaks match a physical shard exactly
+                    keys, lengths = _filter_unit_candidates(unit, keys,
+                                                            lengths)
                     if top_k is not None and len(keys):
                         order = topk_order(keys)
                         keys, lengths = keys[order], lengths[order]
@@ -1549,12 +1932,19 @@ def cluster_reachable_blobs(blobs, prefix: str, keep: int = 2,
     manifest references, that shard's own reachable set
     (`index.lifecycle.reachable_blobs`: shard manifests, unit headers,
     superpost blocks, corpus blobs), itself widened by any lease on the
-    shard prefix. A cluster reader session leases the cluster prefix
-    AND each shard prefix it serves, so both levels of the walk respect
-    its pins. Everything else under the prefix is garbage:
-    old-generation shard sets a `reshard` replaced, orphaned staging
-    areas of conflicted membership changes, pre-merge segment blobs
-    beyond the shard's own history window."""
+    shard prefix. The walk follows **alias edges**: an aliased entry's
+    source prefixes are shard prefixes too, and the reachability floor
+    of each source prefix is lowered to the oldest generation any kept
+    manifest's alias pins — a blob set two generations alias survives
+    until the LAST manifest referencing it ages out, and the de-aliased
+    originals become garbage only after `compact` plus age-out. A
+    cluster reader session leases the cluster prefix AND each shard
+    prefix it serves, so both levels of the walk respect its pins.
+    Everything else under the prefix is garbage: old-generation shard
+    sets a `reshard(mode="rebuild")` replaced, alias sources `compact`
+    de-referenced, orphaned staging areas of conflicted membership
+    changes, pre-merge segment blobs beyond the shard's own history
+    window."""
     all_names = blobs.list(f"{prefix}/")
     manifests = sorted(n for n in all_names
                        if n.startswith(f"{prefix}/cluster-")
@@ -1569,19 +1959,27 @@ def cluster_reachable_blobs(blobs, prefix: str, keep: int = 2,
                 if _cluster_manifest_generation(m) >= floor]
     out: set[str] = set(kept)
     shard_prefixes: set[str] = set()
+    alias_floor: dict[str, int] = {}
     for name in kept:
         manifest = decode_cluster_manifest(blobs.get(name))
         for entry in manifest["shards"]:
             if entry["prefix"] is not None:
                 shard_prefixes.add(entry["prefix"])
+            for a in entry.get("aliases") or []:
+                sp, g = a["prefix"], int(a["generation"])
+                shard_prefixes.add(sp)
+                alias_floor[sp] = min(alias_floor.get(sp, g), g)
     for sp in sorted(shard_prefixes):
         # shard prefixes nest under the cluster prefix: reuse the one
         # cluster-level LIST instead of re-listing per shard
-        shard_min = leases.min_generation(sp) if leases is not None \
+        lease_min = leases.min_generation(sp) if leases is not None \
             else None
+        floors = [f for f in (lease_min, alias_floor.get(sp))
+                  if f is not None]
         out |= reachable_blobs(blobs, sp, keep=keep,
                                all_names=all_names,
-                               min_generation=shard_min)
+                               min_generation=min(floors)
+                               if floors else None)
     return out
 
 

@@ -208,7 +208,9 @@ class SearchService:
         release the old set — the GC never observes a moment where
         neither snapshot is protected. A cluster session leases the
         cluster prefix and every live shard prefix (shards commit and
-        collect independently)."""
+        collect independently), plus every aliased source prefix at its
+        manifest-pinned generation — an aliased shard's bytes live
+        under the source prefix, not its own."""
         if self.leases is None:
             return
         idx = self._index
@@ -216,6 +218,9 @@ class SearchService:
         if isinstance(idx, ShardedIndex):
             fresh += [self.leases.acquire(sh.prefix, sh.generation)
                       for sh in idx.shards if sh is not None]
+            fresh += [self.leases.acquire(src.prefix, src.generation)
+                      for aliases in idx.alias_sources
+                      for src, _slots in aliases]
         old, self._held = self._held, fresh
         for lease in old:
             lease.release()

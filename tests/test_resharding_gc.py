@@ -66,11 +66,14 @@ def test_reshard_cutover_serves_continuously_byte_identical(m):
     assert _flat(old_session.query_batch(QUERIES)) == expect
     old_session.close()
 
-    # after: a fresh session over the new generation
+    # after: a fresh session over the new generation (alias-mode shards
+    # serve through their source units, so every shard with an own index
+    # OR aliases is live)
     new_session = cluster.searcher()
     assert _flat(new_session.query_batch(QUERIES)) == expect
     assert new_session.n_shards == len(
-        [s for s in cluster.shards if s is not None])
+        [s for s in range(cluster.n_shards)
+         if cluster.shards[s] is not None or cluster.alias_sources[s]])
     new_session.close()
 
     # a reader that opened before the reshard follows it via refresh()
@@ -206,6 +209,10 @@ class _CommitDuringReshard(InMemoryBlobStore):
 
 
 def test_concurrent_reshard_vs_commit_fails_typed_then_retries():
+    # rebuild mode: the only reshard flavor that stages blobs, so the
+    # only one this staging-write hook can interleave with (alias-mode
+    # publishes never write under /gen-; their race windows are covered
+    # by the alias fault-injection tests below)
     store = _CommitDuringReshard()
     docs = make_logs_like(120, seed=5)
     corpus = write_corpus(store, "corpus/race", docs, n_blobs=2)
@@ -215,7 +222,7 @@ def test_concurrent_reshard_vs_commit_fails_typed_then_retries():
     names_before = None
     with pytest.raises(ClusterConflict, match="refresh"):
         names_before = set(store.list("cluster/race/"))
-        cluster.reshard(5)
+        cluster.reshard(5, mode="rebuild")
     assert store.fired
     # the loser's staging blobs are gone; the racing commit's blobs stay
     leftovers = set(store.list("cluster/race/")) - names_before
@@ -224,7 +231,7 @@ def test_concurrent_reshard_vs_commit_fails_typed_then_retries():
 
     # CAS loser retries: refresh picks up the committed shard generation
     cluster.refresh()
-    cluster.reshard(5)
+    cluster.reshard(5, mode="rebuild")
     assert cluster.n_shards == 5
     cs = cluster.searcher()
     res = cs.query_batch(["zzzsentinel"])[0]
@@ -527,3 +534,402 @@ def test_gc_never_deletes_blobs_reachable_from_latest_k(data):
         cs = c.searcher()
         assert _flat(cs.query_batch(["error", "prop"])) == before[g]
         cs.close()
+
+
+# ===================================================== aliased generations
+# Zero-rebuild membership changes: reshard/split/merge_shards publish
+# manifest entries that ALIAS existing immutable shard blob sets with a
+# served-slot filter (O(manifest) bytes), `replicate` scales a shard out
+# for the cost of a manifest, and `compact` materializes real blobs in
+# the background. The invariant under test everywhere: aliases never
+# change which bytes a query returns, only where they are read from.
+
+def test_alias_reshard_writes_only_the_manifest():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, n_docs=200,
+                                        prefix="cluster/am", n_slots=8)
+    names_before = set(store.list("cluster/am/"))
+    cluster.reshard(6)                       # mode="alias" is the default
+    written = set(store.list("cluster/am/")) - names_before
+    assert written == {_cluster_manifest_name("cluster/am", 2)}
+    assert cluster.aliased_shards != []
+    # entry format: {aliases: [{prefix, generation, slots}]} with no own
+    # prefix until an overlay or compact materializes one
+    for s in cluster.aliased_shards:
+        entry = cluster.manifest["shards"][s]
+        assert entry["prefix"] is None
+        for a in entry["aliases"]:
+            assert a["prefix"].startswith("cluster/am/")
+            assert a["generation"] >= 1
+            assert a["slots"] == entry["slots"]
+    # byte-identical on the plain, fused, and budgeted paths
+    for fused in (False, True):
+        cs = cluster.searcher(fused=fused)
+        assert _flat(cs.query_batch(QUERIES)) == expect
+        if fused:
+            g = _flat(cs.query_batch(["error", "warn"], top_k=5,
+                                     budget="global"))
+            p = _flat(cs.query_batch(["error", "warn"], top_k=5,
+                                     budget="per_shard"))
+            assert g == p
+        cs.close()
+
+
+def test_alias_split_merge_replicate_then_compact_stay_identical():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, n_docs=200,
+                                        prefix="cluster/asm", n_slots=8)
+    names_before = set(store.list("cluster/asm/"))
+    cluster.split(0)                  # both halves alias shard 0's blobs
+    cluster.merge_shards(3, 4)        # one entry aliasing two blob sets
+    cluster.replicate(0, 3)           # three aliases of one blob set
+    written = set(store.list("cluster/asm/")) - names_before
+    assert all("/cluster-" in n for n in written)   # manifests only
+    assert cluster.manifest["shards"][0].get("replicas") == 3
+    cs = cluster.searcher(fused=True)
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+    # compact every aliased shard: de-aliased generations keep answering
+    # byte-identically, and the worklist drains to empty
+    for s in list(cluster.aliased_shards):
+        cluster.compact(min(cluster.aliased_shards))
+        cs = cluster.searcher()
+        assert _flat(cs.query_batch(QUERIES)) == expect
+        cs.close()
+    assert cluster.aliased_shards == []
+    # the replica marker survives the compact of its shard
+    assert cluster.manifest["shards"][0].get("replicas") == 3
+    reopened = ShardedIndex.open(store, "cluster/asm")
+    cs = reopened.searcher(fused=True)
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+
+def test_append_into_aliased_shard_serves_alongside_aliases():
+    store = InMemoryBlobStore()
+    _corpus, cluster, _expect = _fixture(store, n_docs=150,
+                                         prefix="cluster/aap")
+    mono = Index.open(store, "index/aap")
+    cluster.reshard(3)
+    assert all(idx is None for idx in cluster.shards)   # pure aliases
+    extra = write_corpus(store, "corpus/aap-x",
+                         [f"aapdoc{i} error fresh" for i in range(8)],
+                         n_blobs=1)
+    cluster.append(extra)
+    w = mono.writer()
+    w.append(extra)
+    w.commit()
+    mono.refresh()
+    expect = _flat(mono.searcher().query_batch(QUERIES))
+    # the overlay materialized WITHOUT dropping the aliases
+    touched = [s for s, idx in enumerate(cluster.shards)
+               if idx is not None]
+    assert touched
+    for s in touched:
+        assert cluster.manifest["shards"][s]["aliases"]
+    cs = cluster.searcher(fused=True)
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    assert cs.query_batch(["aapdoc3"])[0].texts == ["aapdoc3 error fresh"]
+    cs.close()
+    # retrying the append is a no-op (alias-served + overlay refs dedupe)
+    gen = cluster.generation
+    cluster.append(extra)
+    assert cluster.generation == gen
+    for s in range(cluster.n_shards):
+        refs = cluster.shard_corpus_refs(s)
+        assert len(refs) == len(set(refs))
+    # and compaction folds overlay + aliases into one physical shard
+    for s in list(cluster.aliased_shards):
+        cluster.compact(s)
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+
+# ------------------------------------------------- alias fault injection
+class _KillNthStagedPut(InMemoryBlobStore):
+    """Crash the process mid-`compact`: the Nth staged blob write under
+    the staging namespace raises, as a machine kill at that byte
+    boundary would."""
+
+    def __init__(self, nth: int = 2) -> None:
+        super().__init__()
+        self.armed = False
+        self.nth = nth
+        self.seen = 0
+
+    def put(self, name: str, data: bytes) -> None:
+        if self.armed and "/gen-" in name:
+            self.seen += 1
+            if self.seen == self.nth:
+                self.armed = False
+                raise RuntimeError("injected crash mid-compact")
+        super().put(name, data)
+
+
+def test_compact_killed_mid_build_cleans_staging_and_keeps_serving():
+    store = _KillNthStagedPut()
+    _corpus, cluster, expect = _fixture(store, n_docs=150,
+                                        prefix="cluster/ck")
+    cluster.reshard(3)
+    target = cluster.aliased_shards[0]
+    names_before = set(store.list("cluster/ck/"))
+    store.armed = True
+    with pytest.raises(RuntimeError, match="injected crash"):
+        cluster.compact(target)
+    assert store.seen == store.nth
+    # the partial build's staged blobs were cleaned up...
+    leftovers = set(store.list("cluster/ck/")) - names_before
+    assert not [n for n in leftovers if "/gen-" in n]
+    # ...and the aliased generation never stopped serving
+    cs = cluster.searcher(fused=True)
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+    # the retry completes the compaction
+    cluster.compact(target)
+    assert target not in cluster.aliased_shards
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+
+class _CommitAtAliasPublish(InMemoryBlobStore):
+    """Race a shard commit into the alias CAS window: the commit lands
+    after the pre-publish recheck, at the very `put_if_absent` that
+    publishes the aliased cluster generation — documents the aliases'
+    pinned source generations cannot see."""
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.armed = False
+        self.fired = False
+
+    def put_if_absent(self, name: str, data: bytes) -> bool:
+        if self.armed and not self.fired and "/cluster-" in name:
+            self.fired = True
+            victim = ShardedIndex.open(self, "cluster/aw")
+            extra = write_corpus(self, "corpus/aw-extra",
+                                 ["zzzaliaswin error doc"], n_blobs=1)
+            routed = victim.partition(extra)
+            target = next(s for s, p in enumerate(routed) if p.refs)
+            w = victim.shard(target).writer()
+            w.append(routed[target])
+            w.commit()
+            victim.close()
+        return super().put_if_absent(name, data)
+
+
+def test_commit_racing_alias_cas_window_is_reapplied():
+    store = _CommitAtAliasPublish()
+    _corpus, cluster, _expect = _fixture(store, n_docs=150,
+                                         prefix="cluster/aw")
+    store.armed = True
+    cluster.reshard(6)               # alias publish succeeds, then repairs
+    assert store.fired
+    store.armed = False
+    # _reapply_raced_commits routed the raced document through the new
+    # aliased generation (it lands in an overlay, not the pinned source)
+    cs = cluster.searcher()
+    assert cs.query_batch(["zzzaliaswin"])[0].texts == \
+        ["zzzaliaswin error doc"]
+    cs.close()
+    reopened = ShardedIndex.open(store, "cluster/aw")
+    cs = reopened.searcher(fused=True)
+    assert cs.query_batch(["zzzaliaswin"])[0].texts == \
+        ["zzzaliaswin error doc"]
+    cs.close()
+    reopened.close()
+
+
+def test_racing_alias_publisher_fails_typed():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, n_docs=150,
+                                        prefix="cluster/ar")
+    rival = ShardedIndex.open(store, "cluster/ar")
+    rival.reshard(2)                 # claims generation 2 first
+    with pytest.raises(ClusterConflict, match="refresh"):
+        cluster.reshard(6)
+    cluster.refresh()
+    cluster.reshard(6)               # retry from the rival's generation
+    assert cluster.generation == 3 and cluster.n_shards == 6
+    cs = cluster.searcher()
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+
+def test_gc_during_alias_window_never_collects_aliased_sources():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, n_docs=150,
+                                        prefix="cluster/gw2")
+    source_blobs = {n for n in store.list("cluster/gw2/")
+                    if "/shard-" in n}
+    cluster.reshard(5)               # every source now serves via aliases
+    leases = LeaseRegistry()
+    dry = collect_cluster_garbage(store, "cluster/gw2", keep=1,
+                                  grace_s=0.0, dry_run=True,
+                                  leases=leases)
+    real = collect_cluster_garbage(store, "cluster/gw2", keep=1,
+                                   grace_s=0.0, leases=leases)
+    assert sorted(real.deleted) == sorted(dry.unreachable)
+    # the aliased source blobs were reachable through the alias edges
+    assert not (set(real.deleted) & source_blobs)
+    cs = ShardedIndex.open(store, "cluster/gw2").searcher(fused=True)
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+
+# -------------------------------------- alias GC cross-prefix regression
+def test_gc_shared_alias_source_survives_until_last_manifest_ages_out():
+    store = InMemoryBlobStore()
+    _corpus, cluster, expect = _fixture(store, n_docs=150,
+                                        prefix="cluster/gx", n_slots=8)
+    shard0 = "cluster/gx/shard-0000"
+    shard0_blobs = set(store.list(shard0 + "/"))
+    assert shard0_blobs
+    # generation 2 AND generation 3 both alias shard 0's blob set
+    cluster.split(0)                              # gen 2
+    cluster.replicate(0, 2)                       # gen 3 (aliases carried)
+    for g in (2, 3):
+        manifest = ShardedIndex.open(store, "cluster/gx",
+                                     generation=g).manifest
+        assert any(a["prefix"] == shard0
+                   for e in manifest["shards"]
+                   for a in e.get("aliases") or [])
+    # a reader still pins generation 2; keep=1 would otherwise drop it
+    leases = LeaseRegistry()
+    pin = leases.acquire("cluster/gx", 2)
+    real = collect_cluster_garbage(store, "cluster/gx", keep=1,
+                                   grace_s=0.0, leases=leases)
+    assert not (set(real.deleted) & shard0_blobs)
+    for g in (2, 3):
+        cs = ShardedIndex.open(store, "cluster/gx",
+                               generation=g).searcher()
+        assert _flat(cs.query_batch(QUERIES)) == expect
+        cs.close()
+    pin.release()
+    # compact the aliased shards: the next generations serve physically
+    for s in list(cluster.aliased_shards):
+        cluster.compact(min(cluster.aliased_shards))
+    # once every manifest that aliased shard 0 ages out of keep=1, the
+    # de-aliased originals are reclaimed in full
+    real = collect_cluster_garbage(store, "cluster/gx", keep=1,
+                                   grace_s=0.0, leases=leases)
+    assert set(store.list(shard0 + "/")) == set()
+    assert shard0_blobs <= set(real.deleted)
+    cs = ShardedIndex.open(store, "cluster/gx").searcher(fused=True)
+    assert _flat(cs.query_batch(QUERIES)) == expect
+    cs.close()
+
+
+# ------------------------------------------- alias property (satellite)
+@settings(max_examples=5, deadline=None)
+@given(st.data())
+def test_membership_history_stays_byte_identical_to_oracle(data):
+    """Random {append, commit, alias-reshard, split, merge, replicate,
+    compact, refresh, GC} histories: EVERY intermediate state answers
+    byte-identically to a single unsharded oracle index, on the plain,
+    fused, and budgeted `query_batch` paths alike."""
+    store = InMemoryBlobStore()
+    docs = make_logs_like(80, seed=33)
+    corpus = write_corpus(store, "corpus/hist", docs, n_blobs=2)
+    cfg = BuilderConfig(B=600, F0=1.0, index_ngrams=3)
+    oracle = Index.build(corpus, cfg, store, "index/hist")
+    cluster = ShardedIndex.build(corpus, cfg, store, "cluster/hist",
+                                 n_shards=3, n_slots=6)
+    follower = ShardedIndex.open(store, "cluster/hist")
+    leases = LeaseRegistry()
+    extra_i = 0
+    follower_safe = True       # no GC since the follower's last refresh
+
+    def check():
+        expect = _flat(oracle.searcher().query_batch(QUERIES))
+        for fused in (False, True):
+            cs = cluster.searcher(fused=fused)
+            assert _flat(cs.query_batch(QUERIES)) == expect
+            if fused:
+                g = _flat(cs.query_batch(["error", "warn"], top_k=5,
+                                         budget="global"))
+                p = _flat(cs.query_batch(["error", "warn"], top_k=5,
+                                         budget="per_shard"))
+                assert g == p
+            cs.close()
+
+    def grow(text):
+        nonlocal extra_i
+        extra_i += 1
+        extra = write_corpus(store, f"corpus/hist-x{extra_i}",
+                             [f"{text}{extra_i} error blk_102 info"],
+                             n_blobs=1)
+        w = oracle.writer()
+        w.append(extra)
+        w.commit()
+        oracle.refresh()
+        return extra
+
+    n_ops = data.draw(st.integers(min_value=2, max_value=6))
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(
+            ["append", "commit", "reshard", "split", "merge_shards",
+             "replicate", "compact", "refresh", "gc"]))
+        if op == "append":
+            cluster.append(grow("hista"))
+        elif op == "commit":
+            # shard-local writer commit when the routed target has an
+            # own index; overlay materialization otherwise
+            extra = grow("histc")
+            routed = cluster.partition(extra)
+            target = next(s for s, p in enumerate(routed) if p.refs)
+            if cluster.shards[target] is not None:
+                w = cluster.shard(target).writer()
+                w.append(routed[target])
+                w.commit()
+            else:
+                cluster.append(extra)
+        elif op == "reshard":
+            m = data.draw(st.integers(min_value=1, max_value=4))
+            cluster.reshard(m, n_slots=6)
+        elif op == "split":
+            s = data.draw(st.integers(min_value=0,
+                                      max_value=cluster.n_shards - 1))
+            entry = cluster.manifest["shards"][s]
+            if len(entry["slots"]) >= 2 and (
+                    cluster.shards[s] is not None
+                    or cluster.alias_sources[s]):
+                cluster.split(s)
+        elif op == "merge_shards":
+            if cluster.n_shards >= 2:
+                a = data.draw(st.integers(
+                    min_value=0, max_value=cluster.n_shards - 2))
+                cluster.merge_shards(a, a + 1)
+        elif op == "replicate":
+            s = data.draw(st.integers(min_value=0,
+                                      max_value=cluster.n_shards - 1))
+            cluster.replicate(s, data.draw(st.integers(min_value=1,
+                                                       max_value=3)))
+        elif op == "compact":
+            if cluster.aliased_shards:
+                s = data.draw(st.sampled_from(cluster.aliased_shards))
+                cluster.compact(s)
+        elif op == "refresh":
+            if follower_safe:
+                # cutover invariant: the follower's pre-refresh (older)
+                # generation still answers like the oracle of ITS time;
+                # here the oracle only grew via ops the follower also
+                # reflects after refresh, so check post-refresh only
+                pass
+            follower.refresh()
+            follower_safe = True
+            expect = _flat(oracle.searcher().query_batch(QUERIES))
+            cs = follower.searcher()
+            assert _flat(cs.query_batch(QUERIES)) == expect
+            cs.close()
+        elif op == "gc":
+            follower.refresh()
+            follower_safe = True
+            collect_cluster_garbage(store, "cluster/hist", keep=1,
+                                    grace_s=0.0, leases=leases)
+        check()
+    # the full history is compactable back to an all-physical cluster
+    while cluster.aliased_shards:
+        cluster.compact(cluster.aliased_shards[0])
+    check()
